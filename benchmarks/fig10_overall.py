@@ -1,0 +1,88 @@
+"""Fig. 10 — overall system speedup & energy efficiency across the eight
+scenes, normalized to the edge GPU (XNX). Full stack: pruning + clustering +
+CTU, frame-level pipeline (preprocess/sort/render/DRAM overlapped)."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.gaussians import project
+from repro.core.cat import SamplingMode
+from repro.core.precision import MIXED
+from repro.core.pruning import contribution_scores, prune
+from repro.core.clustering import kmeans_clusters, cluster_frustum_cull, \
+    memory_traffic_model
+from repro.core import perfmodel as pm
+from benchmarks import common as C
+
+
+def scene_workloads(spec):
+    scene = C.build_scene(spec)
+    cam = C.camera()
+    scores = contribution_scores(scene, [cam], C.grid())
+    pscene, _ = prune(scene, scores, keep_frac=0.6)
+
+    # Clustering-aware DRAM traffic.
+    cl = kmeans_clusters(pscene, max(8, pscene.n // 64))
+    vis = cluster_frustum_cull(cl, cam)
+    proj = project(pscene, cam)
+    from repro.core.culling import aabb_mask
+    g = C.grid()
+    inter = jnp.any(aabb_mask(proj, g.tile_origins(), g.tile), axis=0)
+    traffic = memory_traffic_model(cl, vis, inter)
+
+    import dataclasses
+    o_flicker, c_flicker, _ = C.run_cfg(pscene, C.base_cfg(
+        method="cat", mode=SamplingMode.SMOOTH_FOCUSED, precision=MIXED))
+    o_gscore, c_gscore, _ = C.run_cfg(pscene, C.base_cfg(method="obb"))
+    _, c_aabb, _ = C.run_cfg(pscene, C.base_cfg(method="aabb"))
+
+    w_flicker = dataclasses.replace(
+        pm.Workload.from_counters(
+            c_flicker, height=C.IMG, width=C.IMG,
+            dram_bytes=float(traffic["bytes_cluster"])),
+        vru_imbalance=C.imbalance(o_flicker.processed_per_pixel, 4))
+    w_gscore = dataclasses.replace(
+        pm.Workload.from_counters(
+            c_gscore, height=C.IMG, width=C.IMG,
+            dram_bytes=float(traffic["bytes_no_cluster"])),
+        vru_imbalance=C.imbalance(o_gscore.processed_per_pixel, 8))
+    w_gpu = pm.Workload.from_counters(
+        c_aabb, height=C.IMG, width=C.IMG,
+        dram_bytes=float(traffic["bytes_no_cluster"]))
+    return w_flicker, w_gscore, w_gpu
+
+
+def run(emit=C.emit):
+    t0 = time.perf_counter()
+    rows = {}
+    for spec in C.SCENES:
+        w_f, w_g, w_x = scene_workloads(spec)
+        t_f = pm.frame_time_s(w_f, pm.FLICKER_HW)["t_frame"]
+        e_f = pm.energy_j(w_f, pm.FLICKER_HW)["total"]
+        t_g = pm.frame_time_s(w_g, pm.GSCORE_HW)["t_frame"]
+        e_g = pm.energy_j(w_g, pm.GSCORE_HW)["total"]
+        gpu = pm.gpu_frame(w_x, pm.XNX_GPU)
+        rows[spec.name] = dict(
+            speedup_vs_gpu=gpu["t_frame"] / t_f,
+            speedup_vs_gscore=t_g / t_f,
+            eff_vs_gpu=gpu["energy"] / e_f,
+            eff_vs_gscore=e_g / e_f,
+        )
+    dt = (time.perf_counter() - t0) * 1e6 / len(C.SCENES)
+    for name, r in rows.items():
+        emit(f"fig10/{name}", dt,
+             f"speedup_gpu={r['speedup_vs_gpu']:.1f};"
+             f"speedup_gscore={r['speedup_vs_gscore']:.2f};"
+             f"eff_gpu={r['eff_vs_gpu']:.1f};"
+             f"eff_gscore={r['eff_vs_gscore']:.2f}")
+    avg = {k: sum(r[k] for r in rows.values()) / len(rows)
+           for k in next(iter(rows.values()))}
+    emit("fig10/average", dt,
+         f"speedup_gpu={avg['speedup_vs_gpu']:.1f};"
+         f"speedup_gscore={avg['speedup_vs_gscore']:.2f};"
+         f"eff_gpu={avg['eff_vs_gpu']:.1f};"
+         f"eff_gscore={avg['eff_vs_gscore']:.2f}")
+    return rows

@@ -1,0 +1,50 @@
+"""Fig. 4 — per-pixel processed Gaussians across intersection strategies and
+duplicate-Gaussian counts across tile sizes."""
+from __future__ import annotations
+
+import dataclasses
+import time
+
+import jax.numpy as jnp
+
+from repro.core.gaussians import project
+from repro.core.culling import TileGrid, aabb_mask
+from repro.core.cat import SamplingMode
+from repro.core.precision import FULL_FP32
+from benchmarks import common as C
+
+
+def run(emit=C.emit):
+    spec = next(s for s in C.SCENES if s.name == "garden")
+    scene = C.build_scene(spec)
+    t0 = time.perf_counter()
+
+    strategies = {
+        "aabb_16": C.base_cfg(method="aabb"),
+        "obb_8": C.base_cfg(method="obb"),
+        "minitile_cat_4": C.base_cfg(method="cat",
+                                     mode=SamplingMode.UNIFORM_DENSE,
+                                     precision=FULL_FP32),
+    }
+    processed = {}
+    for name, cfg in strategies.items():
+        _, counters, _ = C.run_cfg(scene, cfg)
+        processed[name] = counters["processed_per_pixel"]
+
+    # Duplicates across tile sizes (instances copied into per-tile lists).
+    proj = project(scene, C.camera())
+    dups = {}
+    for size in (16, 8, 4):
+        g = TileGrid(C.IMG, C.IMG, tile=16, subtile=8, minitile=4)
+        m = aabb_mask(proj, g.region_origins(size), size)
+        dups[size] = float(jnp.sum(m))
+
+    dt = (time.perf_counter() - t0) * 1e6
+    base = processed["aabb_16"]
+    for name, v in processed.items():
+        emit(f"fig4/processed/{name}", dt,
+             f"per_pixel={v:.1f};frac_of_aabb={v / base:.3f}")
+    for size, v in dups.items():
+        emit(f"fig4/duplicates/tile{size}", dt,
+             f"instances={v:.0f};x_vs_16={v / dups[16]:.2f}")
+    return processed, dups

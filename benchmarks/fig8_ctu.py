@@ -1,0 +1,58 @@
+"""Fig. 8 — rendering-stage speedup and energy from employing the CTU.
+
+Configurations (paper §V-B, scene Garden, base model, rendering stage only):
+  noctu      — simplified FLICKER: 32 VRUs, tile AABB only, no CTU
+  gscore     — 64 VRUs + sub-tile OBB
+  ctu_dense  — FLICKER 32 VRUs + CTU, Uniform-Dense
+  ctu_sparse — FLICKER + CTU in Uniform-Sparse mode
+Workload counters are measured by the JAX pipeline; latency/energy come from
+the machine model (core.perfmodel).
+"""
+from __future__ import annotations
+
+import time
+
+from repro.core.cat import SamplingMode
+from repro.core.precision import MIXED, FULL_FP32
+from repro.core import perfmodel as pm
+from benchmarks import common as C
+
+
+def run(emit=C.emit):
+    spec = next(s for s in C.SCENES if s.name == "garden")
+    scene = C.build_scene(spec)
+    t0 = time.perf_counter()
+
+    # unit = lockstep render-unit granularity: tile-level lists for the
+    # no-CTU AABB design (16), sub-tile groups for GSCore (8), mini-tile
+    # channels for FLICKER (4).
+    cases = {
+        "noctu": (C.base_cfg(method="aabb"), pm.FLICKER_NO_CTU, 16),
+        "gscore": (C.base_cfg(method="obb"), pm.GSCORE_HW, 8),
+        "ctu_dense": (C.base_cfg(method="cat",
+                                 mode=SamplingMode.UNIFORM_DENSE,
+                                 precision=MIXED), pm.FLICKER_HW, 4),
+        "ctu_sparse": (C.base_cfg(method="cat",
+                                  mode=SamplingMode.UNIFORM_SPARSE,
+                                  precision=MIXED), pm.FLICKER_HW, 4),
+    }
+    res = {}
+    for name, (cfg, hw, unit) in cases.items():
+        out, counters, _ = C.run_cfg(scene, cfg)
+        w = C.workload(counters, out, unit)
+        res[name] = dict(
+            t=pm.render_time_s(w, hw),
+            e=pm.render_energy_j(w, hw)["total"],
+            imb=w.vru_imbalance,
+        )
+    dt = (time.perf_counter() - t0) * 1e6 / len(cases)
+
+    base_t, base_e = res["noctu"]["t"], res["noctu"]["e"]
+    for name, r in res.items():
+        emit(f"fig8/{name}", dt,
+             f"speedup={base_t / r['t']:.2f};energy_eff={base_e / r['e']:.2f}")
+    emit("fig8/sparse_extra_over_dense", dt,
+         f"x={res['ctu_dense']['t'] / res['ctu_sparse']['t']:.2f}")
+    emit("fig8/flicker_vs_gscore_energy", dt,
+         f"x={res['gscore']['e'] / res['ctu_dense']['e']:.2f}")
+    return res

@@ -1,0 +1,40 @@
+"""Fig. 9 — sensitivity of speedup and CTU stall rate to feature-FIFO depth."""
+from __future__ import annotations
+
+import dataclasses
+import time
+
+from repro.core.cat import SamplingMode
+from repro.core.precision import MIXED
+from repro.core import perfmodel as pm
+from benchmarks import common as C
+
+DEPTHS = [1, 2, 4, 8, 16, 32, 64, 128]
+
+
+def run(emit=C.emit):
+    spec = next(s for s in C.SCENES if s.name == "garden")
+    scene = C.build_scene(spec)
+    t0 = time.perf_counter()
+
+    out, counters, _ = C.run_cfg(scene, C.base_cfg(
+        method="cat", mode=SamplingMode.SMOOTH_FOCUSED, precision=MIXED))
+    w = C.workload(counters, out, unit=4)
+    o0, c0, _ = C.run_cfg(scene, C.base_cfg(method="aabb"))
+    w0 = C.workload(c0, o0, unit=16)
+    base_t = pm.render_time_s(w0, pm.FLICKER_NO_CTU)
+
+    res = {}
+    for d in DEPTHS:
+        hw = dataclasses.replace(pm.FLICKER_HW, fifo_depth=d)
+        res[d] = dict(speedup=base_t / pm.render_time_s(w, hw),
+                      stall=pm.ctu_stall_rate(w, hw))
+    dt = (time.perf_counter() - t0) * 1e6 / len(DEPTHS)
+
+    for d, r in res.items():
+        emit(f"fig9/depth{d}", dt,
+             f"speedup={r['speedup']:.2f};ctu_stall={r['stall']:.3f}")
+    frac16 = ((res[16]["speedup"] - 1.0)
+              / max(res[128]["speedup"] - 1.0, 1e-9))
+    emit("fig9/depth16_frac_of_max_gain", dt, f"frac={frac16:.3f}")
+    return res

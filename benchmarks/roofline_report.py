@@ -1,0 +1,81 @@
+"""Generate the §Roofline table (markdown) from dryrun_results.json.
+
+    PYTHONPATH=src python -m benchmarks.roofline_report \
+        [--json dryrun_results.json] [--mesh single_pod]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+
+from repro.configs import ARCHS, SHAPES
+from repro.launch import roofline as RL
+
+
+def scan_correction(cfg, shape, cell):
+    """XLA cost analysis counts a while-loop body once; add the missing
+    (trips-1) copies of the per-layer work analytically."""
+    emb = cfg.padded_vocab * cfg.d_model * (1 if cfg.tie_embeddings else 2)
+    layer_params = max(cfg.active_param_count() - emb, 0) / max(
+        cfg.num_layers + cfg.encoder_layers, 1)
+    factor = {"train": 6.0, "prefill": 2.0, "decode": 2.0}[shape.kind]
+    if shape.kind == "decode":
+        tokens = shape.global_batch
+    else:
+        tokens = shape.global_batch * shape.seq_len
+    trips = cfg.num_layers + cfg.encoder_layers
+    if shape.kind == "train" and cfg.microbatches > 1:
+        # the microbatch scan body is also counted once
+        tokens = tokens / cfg.microbatches
+        extra_mb = cfg.microbatches
+    else:
+        extra_mb = 1.0
+    body = factor * tokens * layer_params / cell["devices"]
+    corrected = (cell["flops"] + (trips - 1) * body) * extra_mb
+    return corrected
+
+
+def row(cell, cfg, shape):
+    corrected = scan_correction(cfg, shape, cell)
+    scale = corrected / cell["flops"] if cell["flops"] else 1.0
+    out = RL.analyze(dict(cell, flops=cell["flops"]), cfg, shape,
+                     scan_correction=scale)
+    return out, corrected
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--json", default="dryrun_results.json")
+    ap.add_argument("--mesh", default="single_pod")
+    args = ap.parse_args()
+    cells = json.load(open(args.json))
+
+    print("| arch | shape | t_comp (ms) | t_mem (ms) | t_coll (ms) | "
+          "bottleneck | peak GiB | MF/HLO | roofline frac |")
+    print("|---|---|---|---|---|---|---|---|---|")
+    seen_skips = set()
+    for c in cells:
+        if c.get("mesh_name") != args.mesh and not c.get("skipped"):
+            continue
+        cfg = ARCHS[c["arch"]]
+        shape = SHAPES[c["shape"]]
+        if c.get("skipped"):
+            key = (c["arch"], c["shape"])
+            if key not in seen_skips:
+                seen_skips.add(key)
+                print(f"| {c['arch']} | {c['shape']} | — | — | — | "
+                      f"SKIP (full attention @512k) | — | — | — |")
+            continue
+        if "error" in c:
+            print(f"| {c['arch']} | {c['shape']} | ERROR | | | | | | |")
+            continue
+        o, corrected = row(c, cfg, shape)
+        peak = c["mem"]["peak_bytes"] / 2**30
+        print(f"| {c['arch']} | {c['shape']} | {o['t_compute']*1e3:.2f} | "
+              f"{o['t_memory']*1e3:.2f} | {o['t_collective']*1e3:.2f} | "
+              f"{o['bottleneck']} | {peak:.1f} | "
+              f"{o['useful_flops_frac']:.2f} | {o['roofline_frac']:.2f} |")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,26 @@
+"""Benchmark harness — one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV lines. ``python -m benchmarks.run``
+runs everything; pass module names (e.g. ``fig8 table2``) to filter.
+"""
+from __future__ import annotations
+
+import sys
+
+ALL = ["table1_quality", "fig3_adaptive", "fig4_strategies", "fig7_precision",
+       "fig8_ctu", "fig9_fifo", "fig10_overall", "table2_area"]
+
+
+def main() -> None:
+    import importlib
+    wanted = sys.argv[1:] or ALL
+    print("name,us_per_call,derived")
+    for name in ALL:
+        if not any(w in name for w in wanted):
+            continue
+        mod = importlib.import_module(f"benchmarks.{name}")
+        mod.run()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,22 @@
+"""Tbl. II — area breakdown of FLICKER and comparison vs the 64-VRU baseline."""
+from __future__ import annotations
+
+import time
+
+from repro.core import perfmodel as pm
+from benchmarks import common as C
+
+
+def run(emit=C.emit):
+    t0 = time.perf_counter()
+    ours = pm.area_mm2(pm.FLICKER_HW)
+    base = pm.area_mm2(pm.BASELINE_64VRU)
+    dt = (time.perf_counter() - t0) * 1e6
+    for k, v in ours.items():
+        emit(f"table2/flicker/{k}", dt, f"mm2={v:.3f}")
+    emit("table2/baseline64/total", dt, f"mm2={base['total']:.3f}")
+    emit("table2/area_saving", dt,
+         f"frac={1.0 - ours['total'] / base['total']:.3f}")
+    emit("table2/ctu_frac_of_vru", dt,
+         f"frac={ours['ctu'] / ours['vru']:.3f}")
+    return ours, base

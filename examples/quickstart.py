@@ -1,0 +1,51 @@
+"""Quickstart: render a synthetic scene three ways — vanilla AABB, GSCore
+OBB, and FLICKER's contribution-aware pipeline — and compare quality + the
+work each design performs.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+import jax
+
+from repro.core import (random_scene, default_camera, project, TileGrid,
+                        render_with_stats, RenderConfig, SamplingMode,
+                        psnr, MIXED, FULL_FP32)
+from repro.core.raster import render_reference
+from repro.core import perfmodel as pm
+
+
+def main():
+    key = jax.random.PRNGKey(0)
+    scene = random_scene(key, 4000, scale_range=(-2.9, -2.4), stretch=4.0,
+                         opacity_range=(-2.0, 3.5))
+    cam = default_camera(128, 128)
+    print(f"scene: {scene.n} Gaussians, camera {cam.width}x{cam.height}")
+
+    gt = render_reference(project(scene, cam), TileGrid(128, 128))
+
+    configs = {
+        "vanilla-aabb": RenderConfig(method="aabb", precision=FULL_FP32,
+                                     k_max=4000),
+        "gscore-obb": RenderConfig(method="obb", precision=FULL_FP32,
+                                   k_max=4000),
+        "flicker-cat": RenderConfig(method="cat",
+                                    mode=SamplingMode.SMOOTH_FOCUSED,
+                                    precision=MIXED, k_max=4000),
+    }
+    print(f"\n{'config':14s} {'PSNR':>7s} {'work/px':>8s} {'model-FPS':>10s}")
+    for name, cfg in configs.items():
+        out, counters = render_with_stats(scene, cam, cfg)
+        hw = pm.FLICKER_HW if cfg.method == "cat" else \
+            (pm.GSCORE_HW if cfg.method == "obb" else pm.FLICKER_NO_CTU)
+        w = pm.Workload.from_counters(
+            {k: float(v) for k, v in counters.items()}, height=128,
+            width=128)
+        fps = pm.frame_time_s(w, hw)["fps"]
+        print(f"{name:14s} {float(psnr(out.image, gt)):7.2f} "
+              f"{float(counters['processed_per_pixel']):8.1f} {fps:10.0f}")
+
+    print("\nFLICKER processes ~1/5 the Gaussians per pixel at matched "
+          "quality —\nthat skipped work is the paper's speed/energy win.")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,24 @@
+"""Train any assigned LM architecture (reduced config on CPU) through the
+production code path: sharded train_step, AdamW/Adafactor, checkpointing,
+gradient compression, straggler monitoring.
+
+    PYTHONPATH=src python examples/train_lm.py --arch deepseek-v2-lite-16b
+"""
+import argparse
+
+from repro.launch.train import main as train_main
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen1.5-0.5b")
+    ap.add_argument("--steps", type=int, default=30)
+    args = ap.parse_args()
+    return train_main(["--arch", args.arch, "--reduced",
+                       "--steps", str(args.steps), "--batch", "4",
+                       "--seq", "64", "--compress", "int8",
+                       "--ckpt-dir", f"/tmp/repro_{args.arch}_ckpt"])
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,63 @@
+"""Pinhole camera model for the 3DGS pipeline."""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class Camera:
+    R_wc: jax.Array   # (3, 3) world->camera rotation
+    t_wc: jax.Array   # (3,)   world->camera translation
+    fx: jax.Array     # scalar focal (px)
+    fy: jax.Array
+    cx: jax.Array
+    cy: jax.Array
+    width: int = dataclasses.field(metadata=dict(static=True))
+    height: int = dataclasses.field(metadata=dict(static=True))
+    near: float = dataclasses.field(default=0.2, metadata=dict(static=True))
+
+    @property
+    def tan_half_fov_x(self):
+        return self.width / (2.0 * self.fx)
+
+    @property
+    def tan_half_fov_y(self):
+        return self.height / (2.0 * self.fy)
+
+
+def default_camera(width: int = 128, height: int = 128,
+                   fov_deg: float = 60.0) -> Camera:
+    f = width / (2.0 * np.tan(np.radians(fov_deg) / 2.0))
+    return Camera(
+        R_wc=jnp.eye(3, dtype=jnp.float32),
+        t_wc=jnp.zeros((3,), jnp.float32),
+        fx=jnp.float32(f), fy=jnp.float32(f),
+        cx=jnp.float32(width / 2.0), cy=jnp.float32(height / 2.0),
+        width=width, height=height,
+    )
+
+
+def orbit_camera(theta: float, width: int = 128, height: int = 128,
+                 radius: float = 4.0, center=(0.0, 0.0, 4.0),
+                 fov_deg: float = 60.0) -> Camera:
+    """Camera on a circle of `radius` around `center` (the synthetic scenes'
+    centroid), always looking at the center — batched views for serving."""
+    cx, cy, cz = center
+    pos = np.array([cx + radius * np.sin(theta), cy,
+                    cz - radius * np.cos(theta)], np.float32)
+    fwd = np.array(center, np.float32) - pos
+    fwd = fwd / np.linalg.norm(fwd)
+    up = np.array([0.0, 1.0, 0.0], np.float32)
+    right = np.cross(up, fwd)
+    right = right / np.linalg.norm(right)
+    up2 = np.cross(fwd, right)
+    R = np.stack([right, up2, fwd])               # rows: world->camera
+    t = -R @ pos
+    base = default_camera(width, height, fov_deg)
+    return dataclasses.replace(base, R_wc=jnp.asarray(R),
+                               t_wc=jnp.asarray(t))

@@ -1,0 +1,205 @@
+"""Mini-Tile Contribution-Aware Test (paper §II-A, §III).
+
+A 4×4 mini-tile is marked intersected by a Gaussian iff at least one of its
+*leader pixels* receives alpha >= 1/255, i.e.
+
+    ln(255 * o) > E,   E = ½ Δᵀ Σ'⁻¹ Δ,  Δ = p_leader − μ'       (Eq. 2)
+
+Leader-pixel placement:
+  Dense sampling  — the 4 corner pixels of the mini-tile  -> one Pixel
+                    Rectangle (PR) per mini-tile.
+  Sparse sampling — the 2 main-diagonal corner pixels     -> two mini-tiles'
+                    diagonals combine into one PR (Fig. 3(b)).
+
+Pixel-Rectangle grouping (Alg. 1) shares the separable terms sˣ, sʸ between
+the main-diagonal and off-diagonal corners, nearly halving the FLOPs; the LHS
+ln(255·o) is computed once per Gaussian.
+
+Adaptive leader pixels (§III-A): Gaussians are classified smooth/spiky by
+axis ratio; SMOOTH_FOCUSED uses dense sampling for smooth + sparse for spiky
+(and vice versa for SPIKY_FOCUSED).
+"""
+from __future__ import annotations
+
+import enum
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.gaussians import Projected, classify_spiky
+from repro.core.culling import TileGrid
+from repro.core.precision import PrecisionScheme, FULL_FP32
+
+
+class SamplingMode(enum.Enum):
+    UNIFORM_DENSE = "uniform_dense"
+    UNIFORM_SPARSE = "uniform_sparse"
+    SMOOTH_FOCUSED = "smooth_focused"   # dense for smooth, sparse for spiky
+    SPIKY_FOCUSED = "spiky_focused"     # dense for spiky, sparse for smooth
+
+
+# ---------------------------------------------------------------------------
+# Alg. 1 — Pixel-Rectangle Gaussian weight computation
+# ---------------------------------------------------------------------------
+
+def pr_gaussian_weight(mu: jax.Array, conic: jax.Array,
+                       p_top: jax.Array, p_bot: jax.Array,
+                       prec: PrecisionScheme = FULL_FP32):
+    """Alg. 1: weights E0..E3 of a Gaussian at the 4 corners of a PR.
+
+    mu: (..., 2), conic: (..., 3) = (Σ⁻¹xx, Σ⁻¹xy, Σ⁻¹yy),
+    p_top/p_bot: (..., 2) main-diagonal pixel coordinates (p0 and p3).
+    Returns E: (..., 4) with corner order [top-left(p0), (xbot,ytop)(p1),
+    (xtop,ybot)(p2), bottom-right(p3)].
+
+    The intermediate-result sharing of Alg. 1 is kept literal so the FLOP
+    count in the perf model (and the Pallas PRTU kernel) matches: lines 2–3
+    give 4 separable terms, lines 4–5 give 4 cross terms, lines 6–7 combine.
+    """
+    # coordinate quantization (FULL_FP8 loses relative positional info HERE)
+    qc = prec.q_coord
+    mu_q = qc(mu)
+    cxx, cxy, cyy = qc(conic[..., 0]), qc(conic[..., 1]), qc(conic[..., 2])
+    # line 1 — subtract at coord precision, result converted to delta prec
+    d_top = prec.q_delta(qc(p_top) - mu_q)
+    d_bot = prec.q_delta(qc(p_bot) - mu_q)
+    dtx, dty = d_top[..., 0], d_top[..., 1]
+    dbx, dby = d_bot[..., 0], d_bot[..., 1]
+    # lines 2-3: separable terms (multipliers at mul precision)
+    qm, qa = prec.q_mul, prec.q_acc
+    s_top_x = qm(qm(0.5 * qm(dtx * dtx)) * cxx)
+    s_top_y = qm(qm(0.5 * qm(dty * dty)) * cyy)
+    s_bot_x = qm(qm(0.5 * qm(dbx * dbx)) * cxx)
+    s_bot_y = qm(qm(0.5 * qm(dby * dby)) * cyy)
+    # lines 4-5: cross terms
+    t0 = qm(qm(dtx * dty) * cxy)
+    t1 = qm(qm(dbx * dty) * cxy)
+    t2 = qm(qm(dtx * dby) * cxy)
+    t3 = qm(qm(dbx * dby) * cxy)
+    # lines 6-7: adders at acc precision
+    e0 = qa(qa(s_top_x + s_top_y) + t0)
+    e1 = qa(qa(s_bot_x + s_top_y) + t1)
+    e2 = qa(qa(s_top_x + s_bot_y) + t2)
+    e3 = qa(qa(s_bot_x + s_bot_y) + t3)
+    return jnp.stack([e0, e1, e2, e3], axis=-1)
+
+
+def leader_offsets_dense(minitile: int) -> jnp.ndarray:
+    """Pixel-center offsets of the 4 corner leader pixels of a mini-tile."""
+    m = minitile - 1
+    return jnp.asarray(
+        [[0.5, 0.5], [m + 0.5, 0.5], [0.5, m + 0.5], [m + 0.5, m + 0.5]],
+        dtype=jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# Mini-Tile CAT masks
+# ---------------------------------------------------------------------------
+
+def _pr_pass_mask(proj: Projected, p_top: jax.Array, p_bot: jax.Array,
+                  prec: PrecisionScheme):
+    """For PRs defined by (p_top, p_bot): per-corner pass flags.
+
+    p_top/p_bot: (R, 2) pixel coords. Returns (R, N, 4) bool — corner c of PR
+    r passes for Gaussian n. Shared LHS ln(255 o) computed once per Gaussian.
+    """
+    lhs = jnp.log(255.0 * jnp.maximum(proj.opacity, 1e-12))   # (N,)
+    E = pr_gaussian_weight(
+        proj.mean2d[None, :, :], proj.conic[None, :, :],
+        p_top[:, None, :], p_bot[:, None, :], prec)           # (R, N, 4)
+    ok = lhs[None, :, None] > E * (1.0 - prec.slack)
+    return ok & proj.in_frustum[None, :, None]
+
+
+GAUSS_CHUNK = 8192   # jnp-path blocking over Gaussians (the Pallas kernel
+#                      blocks via BlockSpecs instead); bounds the (M, G, 4)
+#                      weight tensor to ~0.5 GB at production scene sizes.
+
+
+def minitile_cat_mask(proj: Projected, grid: TileGrid,
+                      mode: SamplingMode = SamplingMode.UNIFORM_DENSE,
+                      prec: PrecisionScheme = FULL_FP32,
+                      spiky_threshold: float = 3.0) -> jax.Array:
+    """(num_minitiles, N) bool: mini-tile m processes Gaussian n.
+
+    Dense sampling: PR = the mini-tile's 4 corners; the mini-tile passes if
+    any corner passes.
+    Sparse sampling: leaders are the mini-tile's 2 main-diagonal corners; in
+    hardware two mini-tiles' diagonals share one PR (Fig. 3b) — numerically
+    that is corners {0, 3} of each mini-tile's own PR, so we evaluate the same
+    PR and use only the diagonal lanes. (The perf model, not this function,
+    accounts for the halved PR count.)
+    """
+    origins = grid.minitile_origins().astype(jnp.float32)     # (M, 2)
+    m = float(grid.minitile - 1)
+    p_top = origins + jnp.asarray([0.5, 0.5])
+    p_bot = origins + jnp.asarray([m + 0.5, m + 0.5])
+
+    n = proj.mean2d.shape[0]
+    if n > GAUSS_CHUNK and n % GAUSS_CHUNK == 0:
+        # block over Gaussians so the (M, chunk, 4) weights stay bounded
+        nch = n // GAUSS_CHUNK
+
+        def one_chunk(i):
+            sl = lambda x: jax.lax.dynamic_slice_in_dim(
+                x, i * GAUSS_CHUNK, GAUSS_CHUNK, axis=0)
+            sub = Projected(*(sl(getattr(proj, f)) for f in proj._fields))
+            c = _pr_pass_mask(sub, p_top, p_bot, prec)
+            return jnp.any(c, axis=-1), c[..., 0] | c[..., 3]
+
+        dense_c, sparse_c = jax.lax.map(one_chunk, jnp.arange(nch))
+        dense_hit = jnp.moveaxis(dense_c, 0, 1).reshape(p_top.shape[0], n)
+        sparse_hit = jnp.moveaxis(sparse_c, 0, 1).reshape(p_top.shape[0], n)
+    else:
+        corners = _pr_pass_mask(proj, p_top, p_bot, prec)      # (M, N, 4)
+        dense_hit = jnp.any(corners, axis=-1)                  # (M, N)
+        sparse_hit = corners[..., 0] | corners[..., 3]         # diag only
+
+    if mode == SamplingMode.UNIFORM_DENSE:
+        return dense_hit
+    if mode == SamplingMode.UNIFORM_SPARSE:
+        return sparse_hit
+    spiky = classify_spiky(proj.axis_ratio, spiky_threshold)   # (N,)
+    if mode == SamplingMode.SMOOTH_FOCUSED:
+        return jnp.where(spiky[None, :], sparse_hit, dense_hit)
+    if mode == SamplingMode.SPIKY_FOCUSED:
+        return jnp.where(spiky[None, :], dense_hit, sparse_hit)
+    raise ValueError(mode)
+
+
+def leader_pixel_count(proj: Projected, grid: TileGrid, mode: SamplingMode,
+                       spiky_threshold: float = 3.0):
+    """Number of leader-pixel tests implied by a mode (for Fig. 3a-style
+    accounting): dense = 4/minitile, sparse = 2/minitile, adaptive depends on
+    the Gaussian mix. Returns scalar (float) tests per (minitile, gaussian)
+    averaged over Gaussians in frustum."""
+    spiky = classify_spiky(proj.axis_ratio, spiky_threshold)
+    nf = jnp.maximum(jnp.sum(proj.in_frustum), 1)
+    frac_spiky = jnp.sum(spiky & proj.in_frustum) / nf
+    if mode == SamplingMode.UNIFORM_DENSE:
+        return jnp.float32(4.0)
+    if mode == SamplingMode.UNIFORM_SPARSE:
+        return jnp.float32(2.0)
+    if mode == SamplingMode.SMOOTH_FOCUSED:
+        return 4.0 * (1 - frac_spiky) + 2.0 * frac_spiky
+    if mode == SamplingMode.SPIKY_FOCUSED:
+        return 2.0 * (1 - frac_spiky) + 4.0 * frac_spiky
+    raise ValueError(mode)
+
+
+def exact_minitile_mask(proj: Projected, grid: TileGrid) -> jax.Array:
+    """Oracle: mini-tile truly contains a contributing pixel (all 16 pixels
+    tested). Used in tests to bound CAT's false-negative rate."""
+    origins = grid.minitile_origins().astype(jnp.float32)      # (M, 2)
+    mt = grid.minitile
+    dy, dx = jnp.meshgrid(jnp.arange(mt), jnp.arange(mt), indexing="ij")
+    offs = jnp.stack([dx.reshape(-1), dy.reshape(-1)], -1) + 0.5  # (mt*mt, 2)
+    pix = origins[:, None, :] + offs[None, :, :]               # (M, P, 2)
+    d = pix[:, :, None, :] - proj.mean2d[None, None, :, :]     # (M, P, N, 2)
+    cxx = proj.conic[:, 0]
+    cxy = proj.conic[:, 1]
+    cyy = proj.conic[:, 2]
+    E = 0.5 * (cxx * d[..., 0] ** 2 + cyy * d[..., 1] ** 2) + cxy * d[..., 0] * d[..., 1]
+    lhs = jnp.log(255.0 * jnp.maximum(proj.opacity, 1e-12))
+    hit = jnp.any(lhs[None, None, :] > E, axis=1)              # (M, N)
+    return hit & proj.in_frustum[None, :]

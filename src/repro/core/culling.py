@@ -1,0 +1,167 @@
+"""Tile grids and intersection tests: AABB (vanilla 3DGS), OBB (GSCore).
+
+Masks are dense boolean arrays (num_regions, N) — TPU-idiomatic dataflow: the
+"skip" decision becomes a mask / compaction instead of a branch.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.gaussians import Projected
+
+
+@dataclasses.dataclass(frozen=True)
+class TileGrid:
+    """Image tiling hierarchy: tile -> sub-tile -> mini-tile."""
+    height: int
+    width: int
+    tile: int = 16
+    subtile: int = 8
+    minitile: int = 4
+
+    def __post_init__(self):
+        assert self.height % self.tile == 0 and self.width % self.tile == 0, \
+            "image must be tile-aligned"
+        assert self.tile % self.subtile == 0 and self.subtile % self.minitile == 0
+
+    # --- counts ---
+    @property
+    def tiles_x(self) -> int:
+        return self.width // self.tile
+
+    @property
+    def tiles_y(self) -> int:
+        return self.height // self.tile
+
+    @property
+    def num_tiles(self) -> int:
+        return self.tiles_x * self.tiles_y
+
+    @property
+    def subtiles_per_tile(self) -> int:
+        return (self.tile // self.subtile) ** 2
+
+    @property
+    def minitiles_per_tile(self) -> int:
+        return (self.tile // self.minitile) ** 2
+
+    @property
+    def minitiles_per_subtile(self) -> int:
+        return (self.subtile // self.minitile) ** 2
+
+    @property
+    def num_subtiles(self) -> int:
+        return self.num_tiles * self.subtiles_per_tile
+
+    @property
+    def num_minitiles(self) -> int:
+        return self.num_tiles * self.minitiles_per_tile
+
+    # --- origins (row-major over the image, then row-major within tiles) ---
+    def region_origins(self, size: int) -> jax.Array:
+        """(num_regions, 2) pixel-space (x, y) origins of size×size regions,
+        ordered row-major over the whole image."""
+        ys = jnp.arange(self.height // size) * size
+        xs = jnp.arange(self.width // size) * size
+        gy, gx = jnp.meshgrid(ys, xs, indexing="ij")
+        return jnp.stack([gx.reshape(-1), gy.reshape(-1)], axis=-1)
+
+    def tile_origins(self) -> jax.Array:
+        return self.region_origins(self.tile)
+
+    def subtile_origins(self) -> jax.Array:
+        return self.region_origins(self.subtile)
+
+    def minitile_origins(self) -> jax.Array:
+        return self.region_origins(self.minitile)
+
+    def subtile_of_minitile(self) -> jax.Array:
+        """(num_minitiles,) index of the subtile containing each minitile
+        (both in image row-major order)."""
+        origins = self.minitile_origins()
+        sx = origins[:, 0] // self.subtile
+        sy = origins[:, 1] // self.subtile
+        return sy * (self.width // self.subtile) + sx
+
+    def tile_of_region(self, size: int) -> jax.Array:
+        origins = self.region_origins(size)
+        tx = origins[:, 0] // self.tile
+        ty = origins[:, 1] // self.tile
+        return ty * self.tiles_x + tx
+
+
+def aabb_mask(proj: Projected, origins: jax.Array, size: int) -> jax.Array:
+    """Vanilla-3DGS axis-aligned bounding-box test.
+
+    The Gaussian's 3-sigma disc is replaced by the square
+    [mean - r, mean + r]; a region intersects iff the rectangles overlap.
+    Returns (num_regions, N) bool.
+    """
+    mx, my = proj.mean2d[:, 0], proj.mean2d[:, 1]
+    r = proj.radius
+    x0 = origins[:, 0:1]                    # (R, 1)
+    y0 = origins[:, 1:2]
+    x1 = x0 + size
+    y1 = y0 + size
+    hit = ((mx + r)[None, :] > x0) & ((mx - r)[None, :] < x1) \
+        & ((my + r)[None, :] > y0) & ((my - r)[None, :] < y1)
+    return hit & proj.in_frustum[None, :]
+
+
+def obb_mask(proj: Projected, origins: jax.Array, size: int) -> jax.Array:
+    """GSCore-style oriented-bounding-box test via the separating axis theorem.
+
+    The OBB is the 3-sigma box in the Gaussian's eigenbasis. Two convex boxes
+    intersect iff no separating axis exists among the 4 face normals (2 of the
+    axis-aligned region, 2 of the OBB). Returns (num_regions, N) bool.
+    """
+    center = proj.mean2d                    # (N, 2)
+    e = proj.eigvecs                        # (N, 2, 2) columns = axes
+    half = 3.0 * jnp.sqrt(jnp.maximum(proj.eigvals, 1e-12))  # (N, 2)
+
+    # Region centers & half extents.
+    rc = origins + size / 2.0               # (R, 2)
+    rh = jnp.full((), size / 2.0)
+
+    d = rc[:, None, :] - center[None, :, :]  # (R, N, 2) center delta
+
+    # Axes to test: world x, world y, obb major, obb minor.
+    ax_obb = jnp.swapaxes(e, -1, -2)         # (N, 2, 2) rows = axes
+    # Projection radius of the OBB on an axis a: sum_k half_k |a . e_k|
+    def obb_radius(axis):  # axis: (N, 2) or (2,)
+        return (half[:, 0] * jnp.abs(jnp.sum(axis * e[:, :, 0], -1))
+                + half[:, 1] * jnp.abs(jnp.sum(axis * e[:, :, 1], -1)))
+
+    # World axes.
+    ex = jnp.array([1.0, 0.0])
+    ey = jnp.array([0.0, 1.0])
+    sep_x = jnp.abs(d[..., 0]) > (rh + obb_radius(jnp.broadcast_to(ex, e[:, :, 0].shape)))[None, :]
+    sep_y = jnp.abs(d[..., 1]) > (rh + obb_radius(jnp.broadcast_to(ey, e[:, :, 0].shape)))[None, :]
+
+    # OBB axes: region projection radius = rh * (|ax . ex| + |ax . ey|) = rh * (|ax_0| + |ax_1|)
+    sep_obb = []
+    for k in range(2):
+        axis = ax_obb[:, k, :]               # (N, 2)
+        proj_d = jnp.abs(jnp.einsum("rnd,nd->rn", d, axis))
+        r_reg = rh * (jnp.abs(axis[:, 0]) + jnp.abs(axis[:, 1]))
+        r_obb = half[:, k]
+        sep_obb.append(proj_d > (r_reg + r_obb)[None, :])
+
+    separated = sep_x | sep_y | sep_obb[0] | sep_obb[1]
+    return (~separated) & proj.in_frustum[None, :]
+
+
+def intersection_mask(proj: Projected, grid: TileGrid, method: str,
+                      level: str = "tile") -> jax.Array:
+    """Dispatch helper. level in {tile, subtile, minitile}."""
+    size = {"tile": grid.tile, "subtile": grid.subtile,
+            "minitile": grid.minitile}[level]
+    origins = grid.region_origins(size)
+    if method == "aabb":
+        return aabb_mask(proj, origins, size)
+    if method == "obb":
+        return obb_mask(proj, origins, size)
+    raise ValueError(f"unknown intersection method {method!r}")

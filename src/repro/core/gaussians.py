@@ -1,0 +1,219 @@
+"""3D Gaussian scene representation and projection (EWA splatting).
+
+A scene is a pytree of arrays over N Gaussians:
+  means      (N, 3)  float32   world-space centers
+  log_scales (N, 3)  float32   log of per-axis std-devs
+  quats      (N, 4)  float32   unnormalized rotation quaternions (w, x, y, z)
+  opacity_logits (N,) float32  sigmoid -> opacity in [0, 1]
+  colors     (N, 3)  float32   RGB in [0, 1] (SH degree 0; see sh.py for higher)
+
+Projection follows Kerbl et al. [2]: Sigma3D = R S S^T R^T, projected to the
+image plane with the EWA Jacobian, +0.3 px low-pass on the diagonal, conic =
+inverse 2D covariance.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class GaussianScene:
+    means: jax.Array          # (N, 3)
+    log_scales: jax.Array     # (N, 3)
+    quats: jax.Array          # (N, 4)
+    opacity_logits: jax.Array  # (N,)
+    colors: jax.Array         # (N, 3)
+
+    @property
+    def n(self) -> int:
+        return self.means.shape[0]
+
+    def astype(self, dtype) -> "GaussianScene":
+        return jax.tree.map(lambda x: x.astype(dtype), self)
+
+
+class Projected(NamedTuple):
+    """Per-Gaussian 2D (image-plane) features after preprocessing."""
+    mean2d: jax.Array     # (N, 2) pixel coords
+    conic: jax.Array      # (N, 3) inverse covariance entries (a, b, c):
+    #                       Sigma^-1 = [[a, b], [b, c]]
+    cov2d: jax.Array      # (N, 3) covariance entries (sxx, sxy, syy)
+    depth: jax.Array      # (N,) camera-space z
+    radius: jax.Array     # (N,) 3-sigma screen radius in pixels
+    opacity: jax.Array    # (N,)
+    color: jax.Array      # (N, 3)
+    axis_ratio: jax.Array  # (N,) major/minor sigma ratio (>= 1)
+    in_frustum: jax.Array  # (N,) bool
+    eigvecs: jax.Array    # (N, 2, 2) eigenvectors of cov2d (columns), for OBB
+    eigvals: jax.Array    # (N, 2) eigenvalues of cov2d (descending)
+
+
+def quat_to_rotmat(q: jax.Array) -> jax.Array:
+    """(..., 4) wxyz quaternion -> (..., 3, 3) rotation matrix."""
+    q = q / (jnp.linalg.norm(q, axis=-1, keepdims=True) + 1e-12)
+    w, x, y, z = q[..., 0], q[..., 1], q[..., 2], q[..., 3]
+    r00 = 1 - 2 * (y * y + z * z)
+    r01 = 2 * (x * y - w * z)
+    r02 = 2 * (x * z + w * y)
+    r10 = 2 * (x * y + w * z)
+    r11 = 1 - 2 * (x * x + z * z)
+    r12 = 2 * (y * z - w * x)
+    r20 = 2 * (x * z - w * y)
+    r21 = 2 * (y * z + w * x)
+    r22 = 1 - 2 * (x * x + y * y)
+    return jnp.stack(
+        [jnp.stack([r00, r01, r02], -1),
+         jnp.stack([r10, r11, r12], -1),
+         jnp.stack([r20, r21, r22], -1)], axis=-2)
+
+
+def covariance_3d(log_scales: jax.Array, quats: jax.Array) -> jax.Array:
+    """Sigma = R S S^T R^T, (..., 3, 3)."""
+    R = quat_to_rotmat(quats)
+    S = jnp.exp(log_scales)
+    RS = R * S[..., None, :]
+    return RS @ jnp.swapaxes(RS, -1, -2)
+
+
+def _sym2x2_eig(sxx, sxy, syy):
+    """Closed-form eigendecomposition of a symmetric 2x2 matrix.
+
+    Returns (eigvals (..., 2) descending, eigvecs (..., 2, 2) columns).
+    Numerically stable: the major eigenvector uses (l1-c, b) when sxx >= syy
+    and (b, l1-a) otherwise — both exact eigenvectors, chosen so the large
+    component never comes from a catastrophic cancellation.
+    """
+    tr = sxx + syy
+    det = sxx * syy - sxy * sxy
+    disc = jnp.sqrt(jnp.maximum(tr * tr / 4.0 - det, 0.0))
+    l1 = tr / 2.0 + disc  # major
+    l2 = tr / 2.0 - disc  # minor
+    use_x = sxx >= syy
+    v1x = jnp.where(use_x, l1 - syy, sxy)
+    v1y = jnp.where(use_x, sxy, l1 - sxx)
+    # Pre-scale by the max component so the squared norm cannot underflow
+    # (subnormal**2 flushes to zero); fully degenerate (isotropic) matrices
+    # get an axis-aligned basis.
+    m = jnp.maximum(jnp.abs(v1x), jnp.abs(v1y))
+    degen = m < 1e-30
+    v1x = jnp.where(degen, 1.0, v1x / jnp.where(degen, 1.0, m))
+    v1y = jnp.where(degen, 0.0, v1y / jnp.where(degen, 1.0, m))
+    n1 = jnp.sqrt(v1x * v1x + v1y * v1y)
+    v1x, v1y = v1x / n1, v1y / n1
+    # Minor axis orthogonal.
+    v2x, v2y = -v1y, v1x
+    vals = jnp.stack([l1, l2], axis=-1)
+    vecs = jnp.stack(
+        [jnp.stack([v1x, v2x], -1), jnp.stack([v1y, v2y], -1)], axis=-2)
+    return vals, vecs
+
+
+def project(scene: GaussianScene, camera) -> Projected:
+    """Preprocessing core Step (1): 3D -> 2D features + frustum cull flags.
+
+    `camera` is a core.camera.Camera.
+    """
+    means = scene.means
+    # World -> camera.
+    t = (camera.R_wc @ means.T).T + camera.t_wc  # (N, 3)
+    z = t[:, 2]
+    in_front = z > camera.near
+
+    # Perspective project.
+    zs = jnp.maximum(z, camera.near)
+    x_ndc = t[:, 0] / zs
+    y_ndc = t[:, 1] / zs
+    px = x_ndc * camera.fx + camera.cx
+    py = y_ndc * camera.fy + camera.cy
+    mean2d = jnp.stack([px, py], axis=-1)
+
+    # EWA: J (2x3) Jacobian of projection, W = R_wc.
+    # Clamp ndc as in the reference implementation to bound the Jacobian.
+    lim_x = 1.3 * camera.tan_half_fov_x
+    lim_y = 1.3 * camera.tan_half_fov_y
+    tx = jnp.clip(x_ndc, -lim_x, lim_x) * zs
+    ty = jnp.clip(y_ndc, -lim_y, lim_y) * zs
+    J = jnp.zeros((means.shape[0], 2, 3), means.dtype)
+    J = J.at[:, 0, 0].set(camera.fx / zs)
+    J = J.at[:, 0, 2].set(-camera.fx * tx / (zs * zs))
+    J = J.at[:, 1, 1].set(camera.fy / zs)
+    J = J.at[:, 1, 2].set(-camera.fy * ty / (zs * zs))
+
+    sigma3d = covariance_3d(scene.log_scales, scene.quats)  # (N, 3, 3)
+    JW = J @ camera.R_wc  # (N, 2, 3)
+    cov2d_m = JW @ sigma3d @ jnp.swapaxes(JW, -1, -2)  # (N, 2, 2)
+    sxx = cov2d_m[:, 0, 0] + 0.3
+    syy = cov2d_m[:, 1, 1] + 0.3
+    sxy = cov2d_m[:, 0, 1]
+
+    det = sxx * syy - sxy * sxy
+    det = jnp.maximum(det, 1e-12)
+    inv_det = 1.0 / det
+    conic = jnp.stack([syy * inv_det, -sxy * inv_det, sxx * inv_det], axis=-1)
+
+    eigvals, eigvecs = _sym2x2_eig(sxx, sxy, syy)
+    sigma_major = jnp.sqrt(jnp.maximum(eigvals[:, 0], 1e-12))
+    sigma_minor = jnp.sqrt(jnp.maximum(eigvals[:, 1], 1e-12))
+    radius = jnp.ceil(3.0 * sigma_major)
+    axis_ratio = sigma_major / jnp.maximum(sigma_minor, 1e-12)
+
+    # Frustum: in front and bbox overlaps image.
+    on_screen = (
+        (px + radius > 0) & (px - radius < camera.width)
+        & (py + radius > 0) & (py - radius < camera.height))
+    in_frustum = in_front & on_screen
+
+    return Projected(
+        mean2d=mean2d,
+        conic=conic,
+        cov2d=jnp.stack([sxx, sxy, syy], axis=-1),
+        depth=z,
+        radius=radius,
+        opacity=jax.nn.sigmoid(scene.opacity_logits),
+        color=scene.colors,
+        axis_ratio=axis_ratio,
+        in_frustum=in_frustum,
+        eigvecs=eigvecs,
+        eigvals=eigvals,
+    )
+
+
+def classify_spiky(axis_ratio: jax.Array, threshold: float = 3.0) -> jax.Array:
+    """Paper §III-A: Smooth (ratio < 3) vs Spiky (ratio >= 3). True = spiky."""
+    return axis_ratio >= threshold
+
+
+def random_scene(key: jax.Array, n: int, *, extent: float = 4.0,
+                 scale_range=(-4.5, -1.0), spiky_frac: float = 0.4,
+                 stretch: float = 6.0, opacity_range=(-2.0, 3.0),
+                 dtype=jnp.float32) -> GaussianScene:
+    """Synthetic scene generator used by tests/benchmarks (no datasets offline).
+
+    Draws means in a slab in front of the default camera, anisotropic scales so
+    that roughly `spiky_frac` of Gaussians exceed axis ratio 3 (major axis
+    multiplied by `stretch`).
+    """
+    k1, k2, k3, k4, k5, k6 = jax.random.split(key, 6)
+    means = jax.random.uniform(k1, (n, 3), minval=-extent, maxval=extent)
+    means = means.at[:, 2].set(jnp.abs(means[:, 2]) + 2.0)  # in front of cam
+    base = jax.random.uniform(k2, (n, 3), minval=scale_range[0],
+                              maxval=scale_range[1])
+    # Stretch one axis for a fraction of Gaussians to create spiky shapes.
+    spiky = jax.random.uniform(k3, (n,)) < spiky_frac
+    base = base.at[:, 0].add(jnp.where(spiky, jnp.log(stretch), 0.0))
+    quats = jax.random.normal(k4, (n, 4))
+    opacity_logits = jax.random.uniform(k5, (n,), minval=opacity_range[0],
+                                        maxval=opacity_range[1])
+    colors = jax.random.uniform(k6, (n, 3))
+    return GaussianScene(
+        means=means.astype(dtype),
+        log_scales=base.astype(dtype),
+        quats=quats.astype(dtype),
+        opacity_logits=opacity_logits.astype(dtype),
+        colors=colors.astype(dtype),
+    )

@@ -1,0 +1,134 @@
+"""Two-stage hierarchical Gaussian testing (paper §IV-B, Fig. 6).
+
+Stage 1 — sub-tile (8×8) AABB test in the preprocessing core: cheap, culls
+~30% of the CTU workload.
+Stage 2 — Mini-Tile CAT in the CTU, only on Gaussians that passed Stage 1,
+producing fine-grained (mini-tile × Gaussian) masks.
+
+The function also returns the workload counters the performance model
+consumes (CTU tests, VRU work, duplicate Gaussian instances per level) —
+these are the quantities behind Fig. 4, Fig. 8 and Fig. 9.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.gaussians import Projected, classify_spiky
+from repro.core.culling import TileGrid, aabb_mask, intersection_mask
+from repro.core.cat import SamplingMode, minitile_cat_mask, leader_pixel_count
+from repro.core.precision import PrecisionScheme, FULL_FP32
+
+
+class HierarchyOut(NamedTuple):
+    tile_mask: jax.Array        # (num_tiles, N) — any mini-tile in tile hit
+    minitile_mask: jax.Array    # (num_minitiles, N) — final fine-grained mask
+    subtile_mask: jax.Array     # (num_subtiles, N) — stage-1 result
+    counters: dict              # python dict of scalar jax counters
+
+
+def hierarchical_test(proj: Projected, grid: TileGrid,
+                      mode: SamplingMode = SamplingMode.SMOOTH_FOCUSED,
+                      prec: PrecisionScheme = FULL_FP32,
+                      spiky_threshold: float = 3.0,
+                      cat_mask=None) -> HierarchyOut:
+    """Stage-1 sub-tile AABB -> Stage-2 Mini-Tile CAT.
+
+    cat_mask: optional precomputed (num_minitiles, N) CAT mask (e.g. from the
+    Pallas PRTU kernel); computed with the pure-jnp path when None.
+    """
+    # Stage 1: sub-tile AABB (preprocessing core).
+    sub_mask = aabb_mask(proj, grid.subtile_origins(), grid.subtile)  # (S, N)
+
+    # Stage 2: Mini-Tile CAT gated by the containing sub-tile's Stage-1 bit.
+    if cat_mask is None:
+        cat = minitile_cat_mask(proj, grid, mode, prec, spiky_threshold)
+    else:
+        cat = cat_mask                                                 # (M, N)
+    sub_of_mini = grid.subtile_of_minitile()                           # (M,)
+    gate = sub_mask[sub_of_mini]                                       # (M, N)
+    mini_mask = cat & gate
+
+    # Tile-level mask = OR over the tile's mini-tiles (drives list compaction).
+    tile_of_mini = grid.tile_of_region(grid.minitile)                  # (M,)
+    tile_mask = jax.ops.segment_sum(
+        mini_mask.astype(jnp.int32), tile_of_mini,
+        num_segments=grid.num_tiles) > 0                               # (T, N)
+
+    # ---- workload counters -------------------------------------------------
+    n_frustum = jnp.sum(proj.in_frustum)
+    # CTU workload: (sub-tile, Gaussian) pairs that reach Stage 2. Each pair
+    # tests all mini-tiles of the sub-tile (PRs per Fig. 3b).
+    ctu_pairs = jnp.sum(sub_mask)
+    # Without Stage 1 the CTU would test every (sub-tile, frustum-Gaussian)
+    # pair whose *tile-level AABB* intersects (the paper's no-hierarchy ref).
+    tile_aabb = aabb_mask(proj, grid.tile_origins(), grid.tile)
+    sub_per_tile = grid.subtiles_per_tile
+    ctu_pairs_no_stage1 = jnp.sum(tile_aabb) * sub_per_tile
+
+    spiky = classify_spiky(proj.axis_ratio, spiky_threshold)
+    if mode == SamplingMode.UNIFORM_DENSE:
+        prs_per_minitile = jnp.full(proj.depth.shape, 1.0)
+    elif mode == SamplingMode.UNIFORM_SPARSE:
+        prs_per_minitile = jnp.full(proj.depth.shape, 0.5)
+    elif mode == SamplingMode.SMOOTH_FOCUSED:
+        prs_per_minitile = jnp.where(spiky, 0.5, 1.0)
+    else:  # SPIKY_FOCUSED
+        prs_per_minitile = jnp.where(spiky, 1.0, 0.5)
+    mpsub = grid.minitiles_per_subtile
+    ctu_prs = jnp.sum(sub_mask * prs_per_minitile[None, :]) * mpsub
+
+    counters = dict(
+        n_gaussians=jnp.asarray(proj.depth.shape[0], jnp.float32),
+        n_frustum=n_frustum.astype(jnp.float32),
+        ctu_pairs=ctu_pairs.astype(jnp.float32),
+        ctu_pairs_no_stage1=ctu_pairs_no_stage1.astype(jnp.float32),
+        ctu_prs=ctu_prs.astype(jnp.float32),
+        leader_tests_per_pair=leader_pixel_count(proj, grid, mode,
+                                                 spiky_threshold),
+        dup_tile=jnp.sum(tile_aabb).astype(jnp.float32),
+        dup_subtile=jnp.sum(sub_mask).astype(jnp.float32),
+        dup_minitile=jnp.sum(mini_mask).astype(jnp.float32),
+        # VRU workload: (mini-tile, Gaussian) pairs forwarded to FIFOs; each
+        # drives 16 pixel-blend ops.
+        vru_pairs=jnp.sum(mini_mask).astype(jnp.float32),
+        vru_pairs_tile_aabb=(jnp.sum(tile_aabb)
+                             * grid.minitiles_per_tile).astype(jnp.float32),
+    )
+    return HierarchyOut(tile_mask=tile_mask, minitile_mask=mini_mask,
+                        subtile_mask=sub_mask, counters=counters)
+
+
+def baseline_masks(proj: Projected, grid: TileGrid, method: str):
+    """Masks for the non-CAT baselines.
+
+    method 'aabb'  — vanilla 3DGS: tile-level AABB, every pixel blends the
+                     whole tile list.
+    method 'obb'   — GSCore: sub-tile level OBB; pixels blend their sub-tile's
+                     list (emulated as a mini-tile mask constant per sub-tile).
+    Returns (tile_mask (T,N), minitile_mask or None, counters dict).
+    """
+    if method == "aabb":
+        tile_mask = intersection_mask(proj, grid, "aabb", "tile")
+        counters = dict(
+            dup_tile=jnp.sum(tile_mask).astype(jnp.float32),
+            vru_pairs=(jnp.sum(tile_mask)
+                       * grid.minitiles_per_tile).astype(jnp.float32),
+        )
+        return tile_mask, None, counters
+    if method == "obb":
+        sub = intersection_mask(proj, grid, "obb", "subtile")   # (S, N)
+        sub_of_mini = grid.subtile_of_minitile()
+        mini = sub[sub_of_mini]                                  # (M, N)
+        tile_of_mini = grid.tile_of_region(grid.minitile)
+        tile_mask = jax.ops.segment_sum(
+            mini.astype(jnp.int32), tile_of_mini,
+            num_segments=grid.num_tiles) > 0
+        counters = dict(
+            dup_subtile=jnp.sum(sub).astype(jnp.float32),
+            vru_pairs=jnp.sum(mini).astype(jnp.float32),
+        )
+        return tile_mask, mini, counters
+    raise ValueError(method)

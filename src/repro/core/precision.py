@@ -1,0 +1,68 @@
+"""Precision emulation for the mixed-precision CTU study (paper §IV-C).
+
+The schemes differ in WHERE quantization hits, which is the paper's whole
+point:
+
+  FULL_FP16 — coordinates, Δ, products, sums all fp16.
+  FULL_FP8  — coordinates (p, μ′) quantized to fp8 BEFORE the subtract:
+              this "compresses the relative positional information between
+              pixels and Gaussians" (fp8 resolution at coordinate ~100 px is
+              4-8 px), producing the blocky artifacts of Fig. 7(c).
+  MIXED     — the paper's CTU: Δ = p − μ′ computed in FP16 (positional info
+              preserved), THEN converted to FP8 for the quadratic unit
+              (lines 2-7 of Alg. 1); accumulation in FP16.
+
+Quantization uses JAX's native float16 / float8_e4m3fn round-trip casts, so
+numerics match the hardware units' mantissa truncation.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax.numpy as jnp
+
+FP8 = jnp.float8_e4m3fn
+
+
+@dataclasses.dataclass(frozen=True)
+class PrecisionScheme:
+    coord: str = "fp32"   # p, μ′, conic entries entering the unit
+    delta: str = "fp32"   # Δ after the subtract (input to the quad unit)
+    mul: str = "fp32"     # multiplier outputs (lines 2-5)
+    acc: str = "fp32"     # adder outputs (lines 6-7)
+    # Conservative threshold slack: the CTU tests lhs > E·(1-slack) so the
+    # KNOWN bounded quantization error of the quad unit can only produce
+    # false positives (wasted work), never false negatives (quality loss).
+    # FULL_FP8 cannot be rescued this way: its coordinate quantization error
+    # is unbounded in E (several pixels of positional blur).
+    slack: float = 0.0
+
+    def q_coord(self, x):
+        return _quant(x, self.coord)
+
+    def q_delta(self, x):
+        return _quant(x, self.delta)
+
+    def q_mul(self, x):
+        return _quant(x, self.mul)
+
+    def q_acc(self, x):
+        return _quant(x, self.acc)
+
+
+FULL_FP32 = PrecisionScheme()
+FULL_FP16 = PrecisionScheme("fp16", "fp16", "fp16", "fp16")
+# fp8 multiplier INPUTS, fp16 products/accumulation (fp8 x fp8 products are
+# exact in fp16) — the standard narrow-multiplier / wide-accumulator MAC.
+FULL_FP8 = PrecisionScheme("fp8", "fp8", "fp16", "fp16", slack=0.15)
+MIXED = PrecisionScheme("fp16", "fp8", "fp16", "fp16", slack=0.15)
+
+
+def _quant(x, kind: str):
+    if kind == "fp32":
+        return x
+    if kind == "fp16":
+        return x.astype(jnp.float16).astype(jnp.float32)
+    if kind == "fp8":
+        return x.astype(FP8).astype(jnp.float32)
+    raise ValueError(kind)

@@ -1,0 +1,68 @@
+"""Contribution-based pruning (paper §V-A, following [21] "Trimming the Fat").
+
+Ranks Gaussians by a global contribution score accumulated over a set of
+training views — the transmittance-weighted alpha mass each Gaussian
+deposits — and removes the lowest-scoring fraction. The paper prunes, then
+fine-tunes 3K iterations; we expose both steps (fine-tuning via
+core.training.fit).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.gaussians import GaussianScene, project
+from repro.core.culling import TileGrid
+from repro.core import raster
+
+
+def contribution_scores(scene: GaussianScene, cameras, grid: TileGrid,
+                        k_max: int = 2048) -> jax.Array:
+    """(N,) accumulated blending weight of each Gaussian over the cameras."""
+    n = scene.n
+    scores = jnp.zeros((n,))
+    for cam in cameras:
+        proj = project(scene, cam)
+        order = raster.depth_order(proj)
+        tile_mask = raster.compact_tile_lists  # noqa: F841 (doc anchor)
+        from repro.core.culling import aabb_mask
+        mask = aabb_mask(proj, grid.tile_origins(), grid.tile)
+        lists, valid, _ = raster.compact_tile_lists(mask, order, k_max)
+
+        tile_origins = grid.tile_origins().astype(jnp.float32)
+        poffs = raster._pixel_offsets(grid.tile)
+
+        def one_tile(origin, lst, val):
+            g_mean = proj.mean2d[lst]
+            g_conic = proj.conic[lst]
+            g_op = proj.opacity[lst]
+            pix = origin[None, :] + poffs
+            d = pix[:, None, :] - g_mean[None, :, :]
+            E = (0.5 * (g_conic[None, :, 0] * d[..., 0] ** 2
+                        + g_conic[None, :, 2] * d[..., 1] ** 2)
+                 + g_conic[None, :, 1] * d[..., 0] * d[..., 1])
+            a = jnp.minimum(g_op[None, :] * jnp.exp(-E), raster.ALPHA_MAX)
+            a = jnp.where(val[None, :] & (a >= raster.ALPHA_MIN), a, 0.0)
+            T = jnp.cumprod(1.0 - a, axis=1)
+            T_excl = jnp.concatenate([jnp.ones_like(T[:, :1]), T[:, :-1]], 1)
+            w = jnp.sum(T_excl * a, axis=0)          # (K,) per-gaussian mass
+            return lst, w
+
+        lsts, ws = jax.vmap(one_tile)(tile_origins, lists, valid)
+        scores = scores.at[lsts.reshape(-1).clip(0)].add(
+            jnp.where(lsts.reshape(-1) >= 0, ws.reshape(-1), 0.0))
+    return scores
+
+
+def prune(scene: GaussianScene, scores: jax.Array,
+          keep_frac: float = 0.6) -> tuple[GaussianScene, jax.Array]:
+    """Keep the top `keep_frac` Gaussians by score. Returns (scene, kept_idx).
+
+    Note: changes N (host-side op; not jit-able by design — pruning is an
+    offline compression step, as in the paper).
+    """
+    n = scene.n
+    k = max(1, int(n * keep_frac))
+    idx = jnp.argsort(-scores)[:k]
+    new = jax.tree.map(lambda x: x[idx], scene)
+    return new, idx

@@ -1,0 +1,203 @@
+"""Tile rasterizer: depth sort, per-tile list compaction, alpha blending.
+
+TPU-idiomatic realization of the paper's skipping: intersection/CAT masks are
+*compacted* into dense per-tile Gaussian lists (the analogue of the per-FIFO
+duplication in Fig. 6), so the SIMD blending kernel wastes no lanes on
+Gaussians that no mini-tile in the tile needs.
+
+All blending math matches vanilla 3DGS [2]:
+    alpha = min(0.99, o * exp(-E)),  skip if alpha < 1/255
+    T_i = prod_{j<i} (1 - alpha_j),  c = sum_i T_i c_i alpha_i
+Early termination (T < 1e-4) is modeled by the processed-Gaussian counters
+(the quantity the accelerator's speedup derives from); the image itself is
+computed with the full cumulative product, which differs by < 1e-4 in
+transmittance-weighted contribution and is invisible at 8-bit PSNR.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.gaussians import Projected
+from repro.core.culling import TileGrid
+
+ALPHA_MIN = 1.0 / 255.0
+ALPHA_MAX = 0.99
+T_EPS = 1e-4
+
+
+class RenderOut(NamedTuple):
+    image: jax.Array            # (H, W, 3)
+    alpha: jax.Array            # (H, W) accumulated opacity
+    processed_per_pixel: jax.Array  # (H, W) Gaussians the VRU lane touched
+    blended_per_pixel: jax.Array    # (H, W) Gaussians actually blended
+    overflow: jax.Array         # () bool: any tile exceeded its K_max list
+    entry_alive: jax.Array      # (T, K) list entry processed before the tile
+    #                             fully terminated (drives CTU accounting)
+
+
+def depth_order(proj: Projected) -> jax.Array:
+    """Global front-to-back order of Gaussians (culled ones pushed last).
+
+    The sort key is stop-gradiented: ordering is a discrete decision, and
+    gradients flow through the gathered values, not the permutation.
+    """
+    key = jnp.where(proj.in_frustum, proj.depth, jnp.inf)
+    return jnp.argsort(jax.lax.stop_gradient(key))
+
+
+def compact_tile_lists(mask: jax.Array, order: jax.Array, k_max: int):
+    """Build dense per-tile Gaussian lists in depth order.
+
+    mask: (T, N) bool over *unsorted* Gaussian ids; order: (N,) depth argsort.
+    Returns (lists (T, K) int32 gaussian ids, valid (T, K) bool, overflow ()).
+    """
+    mask_sorted = mask[:, order]                         # (T, N)
+    pos = jnp.cumsum(mask_sorted, axis=1) - 1            # (T, N)
+    take = mask_sorted & (pos < k_max)
+    tgt = jnp.where(take, pos, k_max)                    # overflow slot K
+
+    def one_tile(tgt_row, take_row):
+        lst = jnp.full((k_max + 1,), -1, jnp.int32)
+        lst = lst.at[tgt_row].set(jnp.where(take_row, order, -1).astype(jnp.int32),
+                                  mode="drop")
+        return lst[:k_max]
+
+    lists = jax.vmap(one_tile)(tgt, take)
+    valid = lists >= 0
+    overflow = jnp.any(jnp.sum(mask, axis=1) > k_max)
+    return lists, valid, overflow
+
+
+def _pixel_offsets(tile: int):
+    dy, dx = jnp.meshgrid(jnp.arange(tile), jnp.arange(tile), indexing="ij")
+    return (jnp.stack([dx.reshape(-1), dy.reshape(-1)], -1)
+            .astype(jnp.float32) + 0.5)                   # (P, 2) centers
+
+
+def _minitile_index_in_tile(grid: TileGrid):
+    """(P,) index of each tile pixel's mini-tile, row-major within the tile."""
+    t, m = grid.tile, grid.minitile
+    dy, dx = jnp.meshgrid(jnp.arange(t), jnp.arange(t), indexing="ij")
+    return ((dy // m) * (t // m) + (dx // m)).reshape(-1)
+
+
+def render_tiles(proj: Projected, grid: TileGrid,
+                 lists: jax.Array, valid: jax.Array,
+                 minitile_mask: Optional[jax.Array] = None,
+                 background: float = 0.0,
+                 overflow: jax.Array | bool = False) -> RenderOut:
+    """Blend per-tile compacted lists into the image.
+
+    minitile_mask: optional (num_minitiles_global, N) CAT mask — pixel p in
+    mini-tile m blends Gaussian g only if minitile_mask[m, g]. None = every
+    listed Gaussian is blended by every pixel of the tile (AABB/OBB behavior).
+    """
+    tile_origins = grid.tile_origins().astype(jnp.float32)   # (T, 2)
+    poffs = _pixel_offsets(grid.tile)                        # (P, 2)
+    mt_in_tile = _minitile_index_in_tile(grid)               # (P,)
+    mtx = grid.width // grid.minitile
+
+    # Gather features OUTSIDE the tile vmap (plain fancy indexing — its VJP
+    # is a scatter-add over the whole feature table).
+    idx = lists.clip(0)
+    g_mean_all = proj.mean2d[idx]                            # (T, K, 2)
+    g_conic_all = proj.conic[idx]
+    g_op_all = proj.opacity[idx]
+    g_col_all = proj.color[idx]
+    if minitile_mask is not None:
+        ox = (tile_origins[:, 0] // grid.minitile).astype(jnp.int32)
+        oy = (tile_origins[:, 1] // grid.minitile).astype(jnp.int32)
+        rows = oy[:, None] + mt_in_tile[None, :] // (grid.tile // grid.minitile)
+        cols = ox[:, None] + mt_in_tile[None, :] % (grid.tile // grid.minitile)
+        mids = rows * mtx + cols                              # (T, P)
+        allow_all = minitile_mask[mids[:, :, None], idx[:, None, :]]  # (T,P,K)
+    else:
+        allow_all = None
+
+    def one_tile(origin, lst, val, g_mean, g_conic, g_op, g_col, allow_m):
+        pix = origin[None, :] + poffs                        # (P, 2)
+        d = pix[:, None, :] - g_mean[None, :, :]             # (P, K, 2)
+        E = (0.5 * (g_conic[None, :, 0] * d[..., 0] ** 2
+                    + g_conic[None, :, 2] * d[..., 1] ** 2)
+             + g_conic[None, :, 1] * d[..., 0] * d[..., 1])
+        a = jnp.minimum(g_op[None, :] * jnp.exp(-E), ALPHA_MAX)  # (P, K)
+
+        allow = val[None, :]
+        if allow_m is not None:
+            allow = allow & allow_m
+        a = jnp.where(allow & (a >= ALPHA_MIN), a, 0.0)
+
+        # Exclusive cumulative transmittance.
+        T = jnp.cumprod(1.0 - a, axis=1)
+        T_excl = jnp.concatenate([jnp.ones_like(T[:, :1]), T[:, :-1]], axis=1)
+        w = T_excl * a                                        # (P, K)
+        rgb = w @ g_col                                       # (P, 3)
+        acc = jnp.sum(w, axis=1)
+        rgb = rgb + background * (1.0 - acc)[:, None]
+
+        alive = T_excl >= T_EPS
+        processed = jnp.sum(allow & alive, axis=1)
+        blended = jnp.sum((a > 0) & alive, axis=1)
+        # Tile-level termination (paper: "rendering of the current tile can
+        # terminate early if the transmittance of all pixels falls below a
+        # threshold") — entry k is processed iff any pixel is still alive.
+        entry_alive = jnp.any(alive, axis=0) & val
+        return rgb, acc, processed, blended, entry_alive
+
+    if allow_all is None:
+        vm = jax.vmap(lambda o, l, v, gm, gc, go, gl:
+                      one_tile(o, l, v, gm, gc, go, gl, None))
+        rgb, acc, processed, blended, entry_alive = vm(
+            tile_origins, lists, valid, g_mean_all, g_conic_all, g_op_all,
+            g_col_all)
+    else:
+        rgb, acc, processed, blended, entry_alive = jax.vmap(one_tile)(
+            tile_origins, lists, valid, g_mean_all, g_conic_all, g_op_all,
+            g_col_all, allow_all)
+
+    # Reassemble (T, P, ...) -> (H, W, ...)
+    def untile(x):
+        c = x.shape[2:]
+        x = x.reshape(grid.tiles_y, grid.tiles_x, grid.tile, grid.tile, *c)
+        x = jnp.moveaxis(x, 2, 1)  # (ty, tile, tx, tile, ...)
+        return x.reshape(grid.height, grid.width, *c)
+
+    return RenderOut(
+        image=untile(rgb), alpha=untile(acc),
+        processed_per_pixel=untile(processed.astype(jnp.float32)),
+        blended_per_pixel=untile(blended.astype(jnp.float32)),
+        overflow=jnp.asarray(overflow),
+        entry_alive=entry_alive,
+    )
+
+
+def render_reference(proj: Projected, grid: TileGrid,
+                     background: float = 0.0) -> jax.Array:
+    """Oracle renderer: every pixel blends every in-frustum Gaussian in exact
+    depth order (no tiling, no tests). O(H·W·N) — tests only."""
+    order = depth_order(proj)
+    mean = proj.mean2d[order]
+    conic = proj.conic[order]
+    op = jnp.where(proj.in_frustum[order], proj.opacity[order], 0.0)
+    col = proj.color[order]
+
+    ys = jnp.arange(grid.height, dtype=jnp.float32) + 0.5
+    xs = jnp.arange(grid.width, dtype=jnp.float32) + 0.5
+
+    def one_row(y):
+        d_x = xs[:, None] - mean[None, :, 0]                 # (W, N)
+        d_y = y - mean[None, :, 1]
+        E = (0.5 * (conic[None, :, 0] * d_x ** 2 + conic[None, :, 2] * d_y ** 2)
+             + conic[None, :, 1] * d_x * d_y)
+        a = jnp.minimum(op[None, :] * jnp.exp(-E), ALPHA_MAX)
+        a = jnp.where(a >= ALPHA_MIN, a, 0.0)
+        T = jnp.cumprod(1.0 - a, axis=1)
+        T_excl = jnp.concatenate([jnp.ones_like(T[:, :1]), T[:, :-1]], axis=1)
+        w = T_excl * a
+        rgb = w @ col + background * (1.0 - jnp.sum(w, axis=1))[:, None]
+        return rgb
+
+    return jax.lax.map(one_row, ys)                          # (H, W, 3)

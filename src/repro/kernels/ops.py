@@ -1,0 +1,91 @@
+"""Jit'd wrappers routing the render pipeline through the Pallas kernels."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.gaussians import Projected, classify_spiky
+from repro.core.culling import TileGrid
+from repro.core.cat import SamplingMode
+from repro.core.precision import PrecisionScheme
+from repro.core import hierarchy as H
+from repro.kernels import prtu, render as krender
+from repro.kernels import ref as kref
+
+
+def cat_mask_pallas(proj: Projected, grid: TileGrid, mode: SamplingMode,
+                    prec: PrecisionScheme, spiky_threshold: float = 3.0,
+                    interpret: bool = True) -> jax.Array:
+    """(num_minitiles, N) bool CAT mask via the PRTU kernel."""
+    origins = grid.minitile_origins().astype(jnp.float32)
+    m = float(grid.minitile - 1)
+    p_top = origins + jnp.asarray([0.5, 0.5])
+    p_bot = origins + jnp.asarray([m + 0.5, m + 0.5])
+    lhs = jnp.log(255.0 * jnp.maximum(proj.opacity, 1e-12))
+    lhs = jnp.where(proj.in_frustum, lhs, -jnp.inf)   # culled never pass
+    spiky = classify_spiky(proj.axis_ratio, spiky_threshold)
+    mask = prtu.prtu_cat_mask(
+        p_top, p_bot, proj.mean2d, proj.conic, lhs, spiky,
+        mode=mode.value, coord_prec=prec.coord, delta_prec=prec.delta,
+        mul_prec=prec.mul, acc_prec=prec.acc, slack=prec.slack,
+        interpret=interpret)
+    return mask != 0
+
+
+def hierarchical_test_pallas(proj: Projected, grid: TileGrid,
+                             mode: SamplingMode, prec: PrecisionScheme,
+                             spiky_threshold: float = 3.0,
+                             interpret: bool = True) -> H.HierarchyOut:
+    cat = cat_mask_pallas(proj, grid, mode, prec, spiky_threshold, interpret)
+    return H.hierarchical_test(proj, grid, mode, prec, spiky_threshold,
+                               cat_mask=cat)
+
+
+def gather_tile_features(proj: Projected, grid: TileGrid, lists, valid,
+                         minitile_mask=None):
+    """Build the kernel operand blocks from compacted per-tile lists.
+
+    Returns (pix (T,P,2), feat (T,K,8), colors (T,K,3), valid_i8 (T,K),
+    allow (T,K,P))."""
+    from repro.core import raster
+    t_origins = grid.tile_origins().astype(jnp.float32)   # (T, 2)
+    poffs = raster._pixel_offsets(grid.tile)              # (P, 2)
+    pix = t_origins[:, None, :] + poffs[None, :, :]       # (T, P, 2)
+
+    idx = lists.clip(0)
+    feat = jnp.concatenate([
+        proj.mean2d[idx],                                 # (T, K, 2)
+        proj.conic[idx],                                  # (T, K, 3)
+        proj.opacity[idx][..., None],                     # (T, K, 1)
+        jnp.zeros(lists.shape + (2,), jnp.float32),
+    ], axis=-1)
+    colors = proj.color[idx]
+
+    p = pix.shape[1]
+    if minitile_mask is None:
+        allow = jnp.ones(lists.shape + (p,), jnp.int8)
+    else:
+        mt_in_tile = raster._minitile_index_in_tile(grid)  # (P,)
+        mtx = grid.width // grid.minitile
+        ox = (t_origins[:, 0] // grid.minitile).astype(jnp.int32)  # (T,)
+        oy = (t_origins[:, 1] // grid.minitile).astype(jnp.int32)
+        rows = oy[:, None] + mt_in_tile[None, :] // (grid.tile // grid.minitile)
+        cols = ox[:, None] + mt_in_tile[None, :] % (grid.tile // grid.minitile)
+        mids = rows * mtx + cols                          # (T, P)
+        # allow[t, k, p] = minitile_mask[mids[t, p], lists[t, k]]
+        allow = jax.vmap(
+            lambda mid_row, lst: minitile_mask[mid_row][:, lst].T
+        )(mids, idx).astype(jnp.int8)
+    valid_i8 = valid.astype(jnp.int8)
+    return pix, feat, colors, valid_i8, allow
+
+
+def blend_tiles_pallas(proj, grid, lists, valid, minitile_mask=None,
+                       interpret: bool = True):
+    ops = gather_tile_features(proj, grid, lists, valid, minitile_mask)
+    return krender.blend_tiles(*ops, interpret=interpret)
+
+
+def blend_tiles_reference(proj, grid, lists, valid, minitile_mask=None):
+    ops = gather_tile_features(proj, grid, lists, valid, minitile_mask)
+    return kref.blend_tiles_ref(*ops)

@@ -1,0 +1,62 @@
+"""Pure-jnp oracles for the Pallas kernels (shape-for-shape identical)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.precision import PrecisionScheme
+from repro.core.cat import pr_gaussian_weight
+
+ALPHA_MIN = 1.0 / 255.0
+ALPHA_MAX = 0.99
+
+
+def prtu_cat_mask_ref(p_top, p_bot, mu, conic, lhs, spiky, *,
+                      mode: str = "smooth_focused", coord_prec: str = "fp16",
+                      delta_prec: str = "fp8", mul_prec: str = "fp8",
+                      acc_prec: str = "fp16", slack: float = 0.0) -> jax.Array:
+    """(M, G) int8 — oracle for kernels.prtu.prtu_cat_mask."""
+    prec = PrecisionScheme(coord_prec, delta_prec, mul_prec, acc_prec,
+                           slack=slack)
+    E = pr_gaussian_weight(mu[None, :, :], conic[None, :, :],
+                           p_top[:, None, :], p_bot[:, None, :], prec)
+    hit = lhs[None, :, None] > E * (1.0 - prec.slack)  # (M, G, 4)
+    dense = jnp.any(hit, axis=-1)
+    sparse = hit[..., 0] | hit[..., 3]
+    if mode == "uniform_dense":
+        out = dense
+    elif mode == "uniform_sparse":
+        out = sparse
+    elif mode == "smooth_focused":
+        out = jnp.where(spiky[None, :] != 0, sparse, dense)
+    elif mode == "spiky_focused":
+        out = jnp.where(spiky[None, :] != 0, dense, sparse)
+    else:
+        raise ValueError(mode)
+    return out.astype(jnp.int8)
+
+
+def blend_tiles_ref(pix, feat, colors, valid, allow):
+    """Oracle for kernels.render.blend_tiles. Same signature/outputs."""
+    px = pix[..., 0][:, :, None]                      # (T, P, 1)
+    py = pix[..., 1][:, :, None]
+    mx = feat[..., 0][:, None, :]                     # (T, 1, K)
+    my = feat[..., 1][:, None, :]
+    cxx = feat[..., 2][:, None, :]
+    cxy = feat[..., 3][:, None, :]
+    cyy = feat[..., 4][:, None, :]
+    op = feat[..., 5][:, None, :]
+    dx = px - mx
+    dy = py - my
+    e = 0.5 * (cxx * dx * dx + cyy * dy * dy) + cxy * dx * dy
+    a = jnp.minimum(op * jnp.exp(-e), ALPHA_MAX)      # (T, P, K)
+    ok = ((valid[:, None, :] != 0)
+          & (jnp.swapaxes(allow, 1, 2) != 0) & (a >= ALPHA_MIN))
+    a = jnp.where(ok, a, 0.0)
+    tcum = jnp.cumprod(1.0 - a, axis=-1)
+    t_excl = jnp.concatenate([jnp.ones_like(tcum[..., :1]),
+                              tcum[..., :-1]], axis=-1)
+    w = t_excl * a                                    # (T, P, K)
+    rgb = jnp.einsum("tpk,tkc->tpc", w, colors)
+    trans = tcum[..., -1]
+    return rgb, trans

@@ -1,0 +1,128 @@
+"""Pallas tile alpha-blend kernel — the VRU array on TPU.
+
+One grid step blends a (P pixels × K_BLK Gaussians) block of a tile's
+compacted, depth-sorted list. The sequential transmittance dependency runs
+along the K grid axis: per-pixel transmittance T and the RGB accumulator
+live in VMEM scratch and persist across the K-axis grid iterations (TPU
+"arbitrary" dimension semantics; exact in interpret mode). This is the
+TPU-idiomatic version of the VRU pipeline: front-to-back order is preserved
+at block granularity, and all pixel lanes blend the same Gaussian in
+lockstep — which is precisely why the CAT compaction upstream matters (no
+masked-out lanes).
+
+Inputs are pre-gathered per-tile feature blocks (the analogue of the feature
+FIFOs in Fig. 6):
+    pix    (T, P, 2)  pixel centers
+    feat   (T, K, 8)  = [mean_x, mean_y, cxx, cxy, cyy, opacity, 0, 0]
+    colors (T, K, 3)
+    valid  (T, K)     int8 (list slot occupied)
+    allow  (T, K, P)  int8 per-pixel CAT/mini-tile mask
+Output: (T, P, 3) blended RGB + (T, P) final transmittance.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+ALPHA_MIN = 1.0 / 255.0
+ALPHA_MAX = 0.99
+
+K_BLK = 128
+
+
+def _blend_kernel(pix_ref, feat_ref, col_ref, valid_ref, allow_ref,
+                  rgb_ref, trans_ref, t_scr, acc_scr, *, n_kblocks: int):
+    k = pl.program_id(1)
+
+    @pl.when(k == 0)
+    def _init():
+        t_scr[...] = jnp.ones_like(t_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    pix = pix_ref[0]                       # (P, 2)
+    feat = feat_ref[0]                     # (K, 8)
+    col = col_ref[0]                       # (K, 3)
+    valid = valid_ref[0]                   # (K,)
+    allow = allow_ref[0]                   # (K, P)
+
+    px = pix[:, 0][:, None]                # (P, 1)
+    py = pix[:, 1][:, None]
+    mx = feat[:, 0][None, :]               # (1, K)
+    my = feat[:, 1][None, :]
+    cxx = feat[:, 2][None, :]
+    cxy = feat[:, 3][None, :]
+    cyy = feat[:, 4][None, :]
+    op = feat[:, 5][None, :]
+
+    dx = px - mx                           # (P, K)
+    dy = py - my
+    e = 0.5 * (cxx * dx * dx + cyy * dy * dy) + cxy * dx * dy
+    a = jnp.minimum(op * jnp.exp(-e), ALPHA_MAX)
+    ok = (valid[None, :] != 0) & (allow.T != 0) & (a >= ALPHA_MIN)
+    a = jnp.where(ok, a, 0.0)              # (P, K)
+
+    # Sequential front-to-back blend within the block via cumprod.
+    cum = jnp.cumprod(1.0 - a, axis=1)
+    t_in = t_scr[...][:, None]             # (P, 1) carried transmittance
+    t_excl = t_in * jnp.concatenate(
+        [jnp.ones_like(cum[:, :1]), cum[:, :-1]], axis=1)
+    w = t_excl * a                         # (P, K)
+    acc_scr[...] += w @ col                # (P, 3)
+    t_scr[...] *= cum[:, -1]
+
+    @pl.when(k == n_kblocks - 1)
+    def _out():
+        rgb_ref[0] = acc_scr[...]
+        trans_ref[0] = t_scr[...]
+
+
+def blend_tiles(pix: jax.Array, feat: jax.Array, colors: jax.Array,
+                valid: jax.Array, allow: jax.Array,
+                interpret: bool = True):
+    """pix: (T, P, 2); feat: (T, K, 8); colors: (T, K, 3); valid: (T, K) i8;
+    allow: (T, K, P) i8. Returns (rgb (T, P, 3), transmittance (T, P))."""
+    t, p, _ = pix.shape
+    k = feat.shape[1]
+    kp = -(-k // K_BLK) * K_BLK
+    if kp != k:
+        padk = kp - k
+        feat = jnp.pad(feat, ((0, 0), (0, padk), (0, 0)))
+        colors = jnp.pad(colors, ((0, 0), (0, padk), (0, 0)))
+        valid = jnp.pad(valid, ((0, 0), (0, padk)))
+        allow = jnp.pad(allow, ((0, 0), (0, padk), (0, 0)))
+    n_kblocks = kp // K_BLK
+
+    kernel = functools.partial(_blend_kernel, n_kblocks=n_kblocks)
+    rgb, trans = pl.pallas_call(
+        kernel,
+        grid=(t, n_kblocks),
+        in_specs=[
+            pl.BlockSpec((1, p, 2), lambda i, j: (i, 0, 0)),
+            pl.BlockSpec((1, K_BLK, 8), lambda i, j: (i, j, 0)),
+            pl.BlockSpec((1, K_BLK, 3), lambda i, j: (i, j, 0)),
+            pl.BlockSpec((1, K_BLK), lambda i, j: (i, j)),
+            pl.BlockSpec((1, K_BLK, p), lambda i, j: (i, j, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, p, 3), lambda i, j: (i, 0, 0)),
+            pl.BlockSpec((1, p), lambda i, j: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((t, p, 3), jnp.float32),
+            jax.ShapeDtypeStruct((t, p), jnp.float32),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((p,), jnp.float32),
+            pltpu.VMEM((p, 3), jnp.float32),
+        ],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("arbitrary", "arbitrary")),
+        interpret=interpret,
+    )(pix.astype(jnp.float32), feat.astype(jnp.float32),
+      colors.astype(jnp.float32), valid.astype(jnp.int8),
+      allow.astype(jnp.int8))
+    return rgb, trans

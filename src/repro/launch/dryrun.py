@@ -1,0 +1,140 @@
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
+                           + " --xla_force_host_platform_device_count=512")
+
+"""Multi-pod dry-run: .lower().compile() every (arch × shape × mesh) cell.
+
+MUST be the first jax touch in the process (the XLA_FLAGS line above runs
+before any other import). For each cell we record:
+    memory_analysis()  — bytes per device (proves it fits)
+    cost_analysis()    — FLOPs / bytes for the roofline
+    collective bytes   — parsed from the compiled HLO text
+
+Usage:
+    PYTHONPATH=src python -m repro.launch.dryrun \
+        [--arch NAME] [--shape NAME] [--multi-pod] [--out results.json]
+"""
+import argparse
+import json
+import sys
+import time
+import traceback
+
+import jax
+
+from repro.configs import ARCHS, SHAPES, shape_applicable, get_arch
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.models.model import Model
+from repro.optim import adamw
+from repro.launch.mesh import make_production_mesh
+from repro.launch import steps as ST
+from repro.launch import roofline as RL
+
+
+def run_cell(cfg: ModelConfig, shape: ShapeConfig, mesh, *,
+             verbose: bool = True) -> dict:
+    model = Model(cfg)
+    t0 = time.time()
+    if shape.kind == "train":
+        opt_cfg = adamw.AdamWConfig(
+            moment_dtype=(jax.numpy.bfloat16
+                          if cfg.moment_dtype == "bfloat16"
+                          else jax.numpy.float32))
+        fn, args = ST.jit_train_step(model, opt_cfg, mesh, shape)
+        lowered = fn.lower(*args)
+    elif shape.kind == "prefill":
+        fn, args = ST.jit_prefill_step(model, mesh, shape)
+        lowered = fn.lower(*args)
+    else:
+        fn, args = ST.jit_decode_step(model, mesh, shape)
+        lowered = fn.lower(*args)
+
+    compiled = lowered.compile()
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis()
+    coll = RL.collective_bytes(compiled.as_text())
+    n_dev = mesh.devices.size
+
+    out = dict(
+        arch=cfg.name, shape=shape.name, mesh=str(dict(mesh.shape)),
+        devices=n_dev,
+        compile_s=round(time.time() - t0, 1),
+        flops=cost.get("flops", 0.0),
+        bytes_accessed=cost.get("bytes accessed", 0.0),
+        mem=dict(
+            argument_bytes=getattr(mem, "argument_size_in_bytes", 0),
+            output_bytes=getattr(mem, "output_size_in_bytes", 0),
+            temp_bytes=getattr(mem, "temp_size_in_bytes", 0),
+            peak_bytes=(getattr(mem, "temp_size_in_bytes", 0)
+                        + getattr(mem, "argument_size_in_bytes", 0)),
+        ),
+        collectives=coll,
+    )
+    if verbose:
+        peak_gb = out["mem"]["peak_bytes"] / 2**30
+        print(f"  OK   compile={out['compile_s']}s "
+              f"flops={out['flops']:.3e} peak={peak_gb:.2f} GiB/dev "
+              f"coll={coll['total_bytes']:.3e} B", flush=True)
+        print(f"       memory_analysis: {mem}", flush=True)
+        print(f"       cost_analysis: flops={cost.get('flops')} "
+              f"bytes={cost.get('bytes accessed')}", flush=True)
+    return out
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--out", default=None)
+    args = ap.parse_args()
+
+    meshes = []
+    if args.both_meshes:
+        meshes = [("single_pod", make_production_mesh(multi_pod=False)),
+                  ("multi_pod", make_production_mesh(multi_pod=True))]
+    else:
+        name = "multi_pod" if args.multi_pod else "single_pod"
+        meshes = [(name, make_production_mesh(multi_pod=args.multi_pod))]
+
+    archs = [get_arch(args.arch)] if args.arch else list(ARCHS.values())
+    shapes = [SHAPES[args.shape]] if args.shape else list(SHAPES.values())
+
+    results, failures = [], []
+    for mesh_name, mesh in meshes:
+        for cfg in archs:
+            for shape in shapes:
+                tag = f"{mesh_name} {cfg.name} x {shape.name}"
+                if not shape_applicable(cfg, shape):
+                    print(f"SKIP {tag} (long_500k needs sub-quadratic "
+                          f"attention; {cfg.family} is full-attention)",
+                          flush=True)
+                    results.append(dict(arch=cfg.name, shape=shape.name,
+                                        mesh=mesh_name, skipped=True))
+                    continue
+                print(f"CELL {tag}", flush=True)
+                try:
+                    with mesh:
+                        r = run_cell(cfg, shape, mesh)
+                    r["mesh_name"] = mesh_name
+                    results.append(r)
+                except Exception as e:
+                    traceback.print_exc()
+                    failures.append(tag)
+                    results.append(dict(arch=cfg.name, shape=shape.name,
+                                        mesh=mesh_name, error=str(e)[:500]))
+
+    if args.out:
+        with open(args.out, "w") as f:
+            json.dump(results, f, indent=1)
+    print(f"\n{len([r for r in results if 'flops' in r])} compiled, "
+          f"{len([r for r in results if r.get('skipped')])} skipped, "
+          f"{len(failures)} FAILED")
+    for f_ in failures:
+        print(f"  FAILED: {f_}")
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

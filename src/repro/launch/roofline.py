@@ -1,0 +1,114 @@
+"""Roofline analysis from compiled dry-run artifacts.
+
+Three terms per (arch × shape × mesh), in seconds:
+    compute    = HLO_FLOPs / (chips × peak)
+    memory     = HLO_bytes / (chips × HBM_bw)
+    collective = Σ per-op collective_bytes / (chips × link_bw)
+
+HLO FLOPs/bytes come from compiled.cost_analysis(). XLA's cost analysis
+counts a while-loop body ONCE, so scanned layer stacks under-report; we
+cross-check against MODEL_FLOPS = 6·N·D (dense) / 6·N_active·D (MoE) and
+report the scan trip-count correction factor explicitly.
+
+Collective bytes are parsed from the compiled HLO text: shapes of every
+all-gather / all-reduce / reduce-scatter / all-to-all / collective-permute
+result, summed (same once-per-loop-body caveat, same correction).
+
+Hardware constants (TPU v5e-class): 197 TFLOP/s bf16 per chip, 819 GB/s
+HBM, ~50 GB/s/link ICI.
+"""
+from __future__ import annotations
+
+import re
+from typing import Dict
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+ICI_BW = 50e9
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8, "c128": 16,
+}
+
+_COLL_RE = re.compile(
+    r"^\s*(?:%?[\w.\-]+\s*=\s*)?"
+    r"(\((?:[^()]|\([^()]*\))*\)|[\w\[\],{}]+)\s*"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start|-done)?\(",
+    re.MULTILINE)
+
+_SHAPE_RE = re.compile(r"(\w+?)\[([\d,]*)\]")
+
+
+def _shape_bytes(shape_str: str) -> int:
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(shape_str):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+def collective_bytes(hlo_text: str) -> Dict:
+    """Sum result sizes of collective ops in compiled HLO text."""
+    per_kind: Dict[str, float] = {}
+    count = 0
+    for m in _COLL_RE.finditer(hlo_text):
+        shape_str, kind = m.group(1), m.group(2)
+        if kind.endswith("-done"):
+            continue
+        b = _shape_bytes(shape_str)
+        per_kind[kind] = per_kind.get(kind, 0.0) + b
+        count += 1
+    return dict(total_bytes=sum(per_kind.values()), per_kind=per_kind,
+                num_ops=count)
+
+
+def model_flops(cfg, shape) -> float:
+    """6·N·D for training (fwd+bwd), 2·N·D for inference; N = active."""
+    n = cfg.active_param_count()
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * n * tokens
+    if shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * n * tokens
+    return 2.0 * n * shape.global_batch        # decode: one token
+
+
+def analyze(cell: dict, cfg, shape, scan_correction: float = 1.0) -> dict:
+    """Roofline terms for a dry-run cell (see launch.dryrun.run_cell).
+
+    cost_analysis() and the parsed collective bytes come from the
+    SPMD-partitioned (per-device) program — each term divides by the
+    PER-CHIP rate only. MODEL_FLOPS is global, so the ideal time divides
+    by all chips.
+    """
+    chips = cell["devices"]
+    flops = cell["flops"] * scan_correction          # per device
+    hbm = cell["bytes_accessed"] * scan_correction   # per device
+    coll = cell["collectives"]["total_bytes"] * scan_correction
+
+    t_compute = flops / PEAK_FLOPS
+    t_memory = hbm / HBM_BW
+    t_coll = coll / ICI_BW
+    terms = dict(compute=t_compute, memory=t_memory, collective=t_coll)
+    bottleneck = max(terms, key=terms.get)
+    mf = model_flops(cfg, shape)
+    t_ideal = mf / (chips * PEAK_FLOPS)
+    t_bound = max(terms.values())
+    return dict(
+        **{f"t_{k}": v for k, v in terms.items()},
+        bottleneck=bottleneck,
+        model_flops=mf,
+        useful_flops_frac=(mf / (flops * chips)) if flops else 0.0,
+        roofline_frac=min(1.0, t_ideal / t_bound) if t_bound else 0.0,
+        scan_correction=scan_correction,
+    )

@@ -1,0 +1,114 @@
+"""Serving driver.
+
+--mode render : the paper's workload — batched camera requests rendered by
+                the contribution-aware FLICKER pipeline (frames shard over
+                the data axes; each request is one camera pose).
+--mode lm     : prefill + decode loop for any --arch (reduced config on CPU).
+
+    PYTHONPATH=src python -m repro.launch.serve --mode render --frames 8
+    PYTHONPATH=src python -m repro.launch.serve --mode lm \
+        --arch qwen1.5-0.5b --reduced --prefill 64 --decode 16
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.launch.mesh import make_local_mesh
+
+
+def serve_render(args) -> int:
+    from repro.core import (random_scene, orbit_camera, render_with_stats,
+                            RenderConfig, SamplingMode, MIXED)
+    scene = random_scene(jax.random.PRNGKey(0), args.gaussians,
+                         scale_range=(-2.9, -2.4), stretch=4.0,
+                         opacity_range=(-1.0, 3.0))
+    cfg = RenderConfig(height=args.res, width=args.res, method="cat",
+                       mode=SamplingMode.SMOOTH_FOCUSED, precision=MIXED,
+                       k_max=args.gaussians, use_pallas=args.pallas)
+    render_fn = jax.jit(lambda s, cam: render_with_stats(s, cam, cfg))
+
+    lat = []
+    for i in range(args.frames):
+        cam = orbit_camera(2 * np.pi * i / args.frames,
+                           args.res, args.res)
+        t0 = time.perf_counter()
+        out, counters = jax.block_until_ready(render_fn(scene, cam))
+        lat.append(time.perf_counter() - t0)
+        print(f"frame {i}: {lat[-1]*1e3:7.1f} ms  "
+              f"processed/px={float(counters['processed_per_pixel']):6.1f} "
+              f"alpha_mean={float(out.alpha.mean()):.3f}", flush=True)
+    lat = np.array(lat[1:]) if len(lat) > 1 else np.array(lat)
+    print(f"served {args.frames} frames; median {np.median(lat)*1e3:.1f} ms "
+          f"(compile excluded)")
+    return 0
+
+
+def serve_lm(args) -> int:
+    from repro.configs import get_arch, reduced as reduce_cfg
+    from repro.models.model import Model
+
+    cfg = get_arch(args.arch)
+    if args.reduced:
+        cfg = reduce_cfg(cfg)
+    model = Model(cfg)
+    mesh = make_local_mesh()
+
+    with mesh:
+        params = model.init(jax.random.PRNGKey(0))
+        b, s = args.batch, args.prefill
+        if cfg.family == "encdec":
+            batch = dict(
+                enc_embeds=jnp.zeros((b, s, cfg.d_model), jnp.bfloat16),
+                tokens=jnp.ones((b, s), jnp.int32))
+        elif cfg.embeds_input:
+            batch = dict(embeds=jnp.zeros((b, s, cfg.d_model), jnp.bfloat16))
+        else:
+            batch = dict(tokens=jnp.ones((b, s), jnp.int32))
+
+        t0 = time.perf_counter()
+        logits, _ = jax.block_until_ready(
+            jax.jit(lambda p, bt: model.prefill(p, bt, mesh))(params, batch))
+        print(f"prefill ({b}x{s}): {time.perf_counter()-t0:.2f}s "
+              f"logits {logits.shape}")
+
+        # Decode with freshly initialized caches sized prefill+decode.
+        caches = model.init_caches(b, s + args.decode)
+        step = jax.jit(lambda p, c, t: model.decode_step(p, c, t, mesh))
+        tok = jnp.argmax(logits, -1).astype(jnp.int32)[:, None]
+        lat = []
+        for i in range(args.decode):
+            t0 = time.perf_counter()
+            logits_i, caches = jax.block_until_ready(step(params, caches, tok))
+            lat.append(time.perf_counter() - t0)
+            tok = jnp.argmax(logits_i, -1).astype(jnp.int32)[:, None]
+        lat = np.array(lat[1:]) if len(lat) > 1 else np.array(lat)
+        print(f"decoded {args.decode} tokens; median {np.median(lat)*1e3:.1f}"
+              f" ms/token; last tokens {np.asarray(tok[:, 0])[:4]}")
+    return 0
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--mode", default="render", choices=["render", "lm"])
+    # render
+    ap.add_argument("--frames", type=int, default=4)
+    ap.add_argument("--res", type=int, default=128)
+    ap.add_argument("--gaussians", type=int, default=4000)
+    ap.add_argument("--pallas", action="store_true")
+    # lm
+    ap.add_argument("--arch", default="qwen1.5-0.5b")
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--batch", type=int, default=2)
+    ap.add_argument("--prefill", type=int, default=64)
+    ap.add_argument("--decode", type=int, default=8)
+    args = ap.parse_args(argv)
+    return serve_render(args) if args.mode == "render" else serve_lm(args)
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

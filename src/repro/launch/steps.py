@@ -1,0 +1,200 @@
+"""train_step / serve_step builders: the jit'd, sharded entry points that
+both the real launcher (train.py/serve.py) and the dry-run compile.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.models.model import Model
+from repro.models import pspec
+from repro.models.pspec import PSpec, is_pspec
+from repro.optim import adamw, adafactor
+from repro.distributed.sharding import dp_axes, resolve
+
+
+def batch_shardings(model: Model, shape: ShapeConfig, mesh: Mesh):
+    """NamedSharding per batch leaf: batch dim over all data axes."""
+    dp = dp_axes(mesh)
+    specs = model.input_specs(shape)
+
+    def spec_for(name, sds):
+        b = sds.shape[0]
+        nd = len(sds.shape)
+        bdim = dp if b % _dp_size(mesh) == 0 and b > 1 else None
+        rest = [None] * (nd - 1)
+        return NamedSharding(mesh, P(bdim, *rest))
+
+    return {k: spec_for(k, v) for k, v in specs.items()}
+
+
+def _dp_size(mesh: Mesh) -> int:
+    n = 1
+    for a in dp_axes(mesh):
+        n *= mesh.shape[a]
+    return n
+
+
+def opt_shardings(model: Model, mesh: Mesh):
+    """Adam m/v shard exactly like their parameters."""
+    s = pspec.shardings(model.specs(), mesh, model.cfg.fsdp_over_pod)
+    return adamw.OptState(m=s, v=s,
+                          step=NamedSharding(mesh, P()))
+
+
+def adafactor_shardings(model: Model, mesh: Mesh, cfg):
+    """Factored moments: row/col inherit the parameter's leading logical axes."""
+    fop = model.cfg.fsdp_over_pod
+
+    def one(p: PSpec):
+        if adafactor._should_factor(p.shape, cfg):
+            return adafactor.FactoredMoment(
+                row=NamedSharding(mesh, resolve(p.logical[:-1], mesh, fop)),
+                col=NamedSharding(
+                    mesh, resolve(p.logical[:-2] + p.logical[-1:], mesh,
+                                  fop)),
+                full=NamedSharding(mesh, P()))
+        return adafactor.FactoredMoment(
+            row=NamedSharding(mesh, P()),
+            col=NamedSharding(mesh, P()),
+            full=NamedSharding(mesh, resolve(p.logical, mesh, fop)))
+
+    v = jax.tree.map(one, model.specs(), is_leaf=is_pspec)
+    return adafactor.AdafactorState(v=v, step=NamedSharding(mesh, P()))
+
+
+def _opt_module(cfg: ModelConfig):
+    return adafactor if cfg.optimizer == "adafactor" else adamw
+
+
+def make_opt_cfg(cfg: ModelConfig, lr: float = 3e-4):
+    if cfg.optimizer == "adafactor":
+        return adafactor.AdafactorConfig(lr=lr)
+    import jax.numpy as _jnp
+    return adamw.AdamWConfig(
+        lr=lr, moment_dtype=(_jnp.bfloat16 if cfg.moment_dtype == "bfloat16"
+                             else _jnp.float32))
+
+
+def make_train_step(model: Model, opt_cfg, mesh: Mesh):
+    """Train step with gradient accumulation over cfg.microbatches (cuts
+    activation memory by N at the cost of N sequential passes)."""
+    cfg = model.cfg
+    opt = _opt_module(cfg)
+    nmb = max(1, cfg.microbatches)
+    acc_dtype = (jnp.bfloat16 if cfg.moment_dtype == "bfloat16"
+                 else jnp.float32)
+
+    def train_step(params, opt_state, batch):
+        def loss_fn(p, b):
+            return model.loss(p, b, mesh)
+
+        if nmb == 1:
+            loss, grads = jax.value_and_grad(loss_fn)(params, batch)
+        else:
+            split = jax.tree.map(
+                lambda x: x.reshape((nmb, x.shape[0] // nmb) + x.shape[1:]),
+                batch)
+
+            def mb_body(carry, mb):
+                g_acc, l_acc = carry
+                l, g = jax.value_and_grad(loss_fn)(params, mb)
+                g_acc = jax.tree.map(
+                    lambda a, b_: a + b_.astype(acc_dtype), g_acc, g)
+                return (g_acc, l_acc + l), None
+
+            g0 = jax.tree.map(lambda p: jnp.zeros(p.shape, acc_dtype),
+                              params)
+            (grads, loss), _ = jax.lax.scan(
+                mb_body, (g0, jnp.zeros((), jnp.float32)), split, length=nmb)
+            grads = jax.tree.map(lambda g: g / nmb, grads)
+            loss = loss / nmb
+
+        params, opt_state, metrics = opt.apply(params, grads, opt_state,
+                                               opt_cfg)
+        metrics["loss"] = loss
+        return params, opt_state, metrics
+    return train_step
+
+
+def make_prefill_step(model: Model, mesh: Mesh):
+    def prefill_step(params, batch):
+        return model.prefill(params, batch, mesh)
+    return prefill_step
+
+
+def make_decode_step(model: Model, mesh: Mesh):
+    def decode_step(params, caches, tokens):
+        logits, caches = model.decode_step(params, caches, tokens, mesh)
+        next_tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)[:, None]
+        return next_tok, caches
+    return decode_step
+
+
+def cache_shardings(model: Model, batch: int, seq: int, mesh: Mesh):
+    logical = model.cache_logical(batch)
+    caches = jax.eval_shape(lambda: model.init_caches(batch, seq))
+
+    def to_sharding(log, leaf):
+        return NamedSharding(mesh, resolve(log, mesh))
+
+    return jax.tree.map(to_sharding, logical, caches,
+                        is_leaf=lambda x: isinstance(x, tuple) and all(
+                            isinstance(e, (str, type(None))) for e in x))
+
+
+def jit_train_step(model: Model, opt_cfg, mesh: Mesh, shape: ShapeConfig):
+    """Fully-specified jit for lowering: returns (jitted_fn, example_args)."""
+    opt = _opt_module(model.cfg)
+    p_shard = pspec.shardings(model.specs(), mesh, model.cfg.fsdp_over_pod)
+    if model.cfg.optimizer == "adafactor":
+        if not isinstance(opt_cfg, adafactor.AdafactorConfig):
+            opt_cfg = adafactor.AdafactorConfig(lr=getattr(opt_cfg, "lr",
+                                                           3e-4))
+        o_shard = adafactor_shardings(model, mesh, opt_cfg)
+    else:
+        o_shard = opt_shardings(model, mesh)
+    b_shard = batch_shardings(model, shape, mesh)
+    fn = jax.jit(
+        make_train_step(model, opt_cfg, mesh),
+        in_shardings=(p_shard, o_shard, b_shard),
+        out_shardings=(p_shard, o_shard, None),
+        donate_argnums=(0, 1),
+    )
+    params_abs = model.abstract()
+    opt_abs = jax.eval_shape(lambda: opt.init(params_abs, opt_cfg))
+    batch_abs = model.input_specs(shape)
+    return fn, (params_abs, opt_abs, batch_abs)
+
+
+def jit_prefill_step(model: Model, mesh: Mesh, shape: ShapeConfig):
+    p_shard = pspec.shardings(model.specs(), mesh, model.cfg.fsdp_over_pod)
+    b_shard = batch_shardings(model, shape, mesh)
+    fn = jax.jit(make_prefill_step(model, mesh),
+                 in_shardings=(p_shard, b_shard))
+    params_abs = model.abstract()
+    batch_abs = model.input_specs(shape)
+    return fn, (params_abs, batch_abs)
+
+
+def jit_decode_step(model: Model, mesh: Mesh, shape: ShapeConfig):
+    b = shape.global_batch
+    p_shard = pspec.shardings(model.specs(), mesh, model.cfg.fsdp_over_pod)
+    c_shard = cache_shardings(model, b, shape.seq_len, mesh)
+    dp = dp_axes(mesh)
+    t_shard = NamedSharding(
+        mesh, P(dp if b % _dp_size(mesh) == 0 and b > 1 else None, None))
+    fn = jax.jit(make_decode_step(model, mesh),
+                 in_shardings=(p_shard, c_shard, t_shard),
+                 out_shardings=(t_shard, c_shard),
+                 donate_argnums=(1,))
+    params_abs = model.abstract()
+    caches_abs = jax.eval_shape(
+        lambda: model.init_caches(b, shape.seq_len))
+    tok_abs = jax.ShapeDtypeStruct((b, 1), jnp.int32)
+    return fn, (params_abs, caches_abs, tok_abs)

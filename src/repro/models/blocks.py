@@ -1,0 +1,181 @@
+"""Transformer / SSM / MoE block assembly with lax.scan over layers + remat.
+
+Sequence parallelism (SP): at block boundaries activations are sharded
+(batch -> data axes, seq -> model axis); inside a block they are gathered to
+(batch, full seq) with heads/ffn sharded (TP). Under GSPMD the transitions
+lower to all-gather / reduce-scatter pairs — Megatron-SP style — and the
+remat policy keeps only the SP-sharded boundary tensors resident.
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.pspec import PSpec, stack
+from repro.models import layers as L
+from repro.models import attention as A
+from repro.models import mla as M
+from repro.models import mamba2 as S
+from repro.models import moe as E
+from repro.distributed.sharding import constrain
+
+
+def _sp_ok(x, mesh):
+    """Sequence axis shardable on the model axis?"""
+    if mesh is None:
+        return False
+    msize = mesh.shape.get("model", 1)
+    return x.shape[1] % msize == 0 and x.shape[1] >= msize
+
+
+def boundary(x, mesh):
+    bl = "dp" if x.shape[0] > 1 else None
+    if _sp_ok(x, mesh):
+        return constrain(x, mesh, bl, "sp", None)
+    return constrain(x, mesh, bl, None, "model") \
+        if x.shape[-1] % (mesh.shape.get("model", 1) if mesh else 1) == 0 \
+        else x
+
+
+def gathered(x, mesh):
+    bl = "dp" if x.shape[0] > 1 else None
+    return constrain(x, mesh, bl, None, None)
+
+
+# ---------------------------------------------------------------------------
+# Block specs / apply per family
+# ---------------------------------------------------------------------------
+
+def dense_block_specs(cfg: ModelConfig):
+    return dict(
+        ln1=L.rmsnorm_spec(cfg.d_model),
+        attn=A.attn_specs(cfg),
+        ln2=L.rmsnorm_spec(cfg.d_model),
+        mlp=L.mlp_specs(cfg),
+    )
+
+
+def dense_block(p, x, cfg: ModelConfig, mesh=None):
+    h = gathered(L.rmsnorm(x, p["ln1"].astype(x.dtype), cfg.norm_eps), mesh)
+    y, _ = A.attend_train(p["attn"], h, cfg, mesh)
+    x = boundary(x + y, mesh)
+    h = gathered(L.rmsnorm(x, p["ln2"].astype(x.dtype), cfg.norm_eps), mesh)
+    x = boundary(x + L.mlp_apply(p["mlp"], h, cfg, mesh), mesh)
+    return x, jnp.zeros((), jnp.float32)
+
+
+def moe_block_specs(cfg: ModelConfig):
+    attn = M.mla_specs(cfg) if cfg.use_mla else A.attn_specs(cfg)
+    return dict(
+        ln1=L.rmsnorm_spec(cfg.d_model),
+        attn=attn,
+        ln2=L.rmsnorm_spec(cfg.d_model),
+        moe=E.moe_specs(cfg),
+    )
+
+
+def moe_block(p, x, cfg: ModelConfig, mesh=None):
+    h = gathered(L.rmsnorm(x, p["ln1"].astype(x.dtype), cfg.norm_eps), mesh)
+    if cfg.use_mla:
+        y = M.mla_train(p["attn"], h, cfg, mesh)
+    else:
+        y, _ = A.attend_train(p["attn"], h, cfg, mesh)
+    x = boundary(x + y, mesh)
+    h = gathered(L.rmsnorm(x, p["ln2"].astype(x.dtype), cfg.norm_eps), mesh)
+    y, aux = E.moe_apply(p["moe"], h, cfg, mesh)
+    x = boundary(x + y, mesh)
+    return x, aux
+
+
+def dense_ffn_block_specs(cfg: ModelConfig):
+    """DeepSeek first-k-dense layer: MLA attention + dense SwiGLU."""
+    attn = M.mla_specs(cfg) if cfg.use_mla else A.attn_specs(cfg)
+    return dict(
+        ln1=L.rmsnorm_spec(cfg.d_model),
+        attn=attn,
+        ln2=L.rmsnorm_spec(cfg.d_model),
+        mlp=L.mlp_specs(cfg),
+    )
+
+
+def dense_ffn_block(p, x, cfg: ModelConfig, mesh=None):
+    h = gathered(L.rmsnorm(x, p["ln1"].astype(x.dtype), cfg.norm_eps), mesh)
+    if cfg.use_mla:
+        y = M.mla_train(p["attn"], h, cfg, mesh)
+    else:
+        y, _ = A.attend_train(p["attn"], h, cfg, mesh)
+    x = boundary(x + y, mesh)
+    h = gathered(L.rmsnorm(x, p["ln2"].astype(x.dtype), cfg.norm_eps), mesh)
+    x = boundary(x + L.mlp_apply(p["mlp"], h, cfg, mesh), mesh)
+    return x, jnp.zeros((), jnp.float32)
+
+
+def ssm_block_specs(cfg: ModelConfig):
+    return dict(
+        ln=L.rmsnorm_spec(cfg.d_model),
+        mixer=S.mamba_specs(cfg),
+    )
+
+
+def ssm_block(p, x, cfg: ModelConfig, mesh=None):
+    h = gathered(L.rmsnorm(x, p["ln"].astype(x.dtype), cfg.norm_eps), mesh)
+    x = boundary(x + S.mamba_train(p["mixer"], h, cfg, mesh), mesh)
+    return x, jnp.zeros((), jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# Layer stacks (scan + remat)
+# ---------------------------------------------------------------------------
+
+def scan_stack(block_fn, params_stacked, x, cfg: ModelConfig, mesh=None,
+               remat: bool = True):
+    """Run `block_fn` over stacked layer params via lax.scan."""
+    fn = functools.partial(block_fn, cfg=cfg, mesh=mesh)
+    if remat:
+        fn = jax.checkpoint(fn)
+
+    def body(carry, layer_p):
+        y, aux = fn(layer_p, carry)
+        return y, aux
+
+    x, auxs = jax.lax.scan(body, x, params_stacked)
+    return x, jnp.sum(auxs)
+
+
+# ---------------------------------------------------------------------------
+# Decode-through-stack helpers
+# ---------------------------------------------------------------------------
+
+def dense_decode_block(p, x, cache, cfg: ModelConfig, mesh=None):
+    h = L.rmsnorm(x, p["ln1"].astype(x.dtype), cfg.norm_eps)
+    y, cache = A.attend_decode(p["attn"], h, cache, cfg, mesh)
+    x = x + y
+    h = L.rmsnorm(x, p["ln2"].astype(x.dtype), cfg.norm_eps)
+    x = x + L.mlp_apply(p["mlp"], h, cfg, mesh)
+    return x, cache
+
+
+def moe_decode_block(p, x, cache, cfg: ModelConfig, mesh=None):
+    h = L.rmsnorm(x, p["ln1"].astype(x.dtype), cfg.norm_eps)
+    if cfg.use_mla:
+        y, cache = M.mla_decode(p["attn"], h, cache, cfg, mesh)
+    else:
+        y, cache = A.attend_decode(p["attn"], h, cache, cfg, mesh)
+    x = x + y
+    h = L.rmsnorm(x, p["ln2"].astype(x.dtype), cfg.norm_eps)
+    if "moe" in p:
+        y, _ = E.moe_apply(p["moe"], h, cfg, mesh)
+    else:
+        y = L.mlp_apply(p["mlp"], h, cfg, mesh)
+    x = x + y
+    return x, cache
+
+
+def ssm_decode_block(p, x, cache, cfg: ModelConfig, mesh=None):
+    h = L.rmsnorm(x, p["ln"].astype(x.dtype), cfg.norm_eps)
+    y, cache = S.mamba_decode(p["mixer"], h, cache, cfg, mesh)
+    return x + y, cache

@@ -1,0 +1,111 @@
+"""Shared layers: norms, rotary embeddings, MLPs, embedding tables."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.pspec import PSpec
+from repro.distributed.sharding import constrain
+
+
+def rmsnorm(x, w, eps=1e-5):
+    var = jnp.mean(jnp.square(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    return (x * jax.lax.rsqrt(var + eps).astype(x.dtype)) * w
+
+
+def rmsnorm_spec(d):
+    return PSpec((d,), (None,), "ones")
+
+
+# --- rotary ---------------------------------------------------------------
+
+def rope_freqs(head_dim: int, theta: float):
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, jnp.float32) / head_dim))
+
+
+def apply_rope(x, positions, theta: float = 10000.0):
+    """x: (B, S, H, hd); positions: (B, S) int32."""
+    hd = x.shape[-1]
+    freqs = rope_freqs(hd, theta)                       # (hd/2,)
+    angles = positions[..., None].astype(jnp.float32) * freqs  # (B, S, hd/2)
+    cos = jnp.cos(angles)[:, :, None, :]
+    sin = jnp.sin(angles)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], -1)
+    return out.astype(x.dtype)
+
+
+# --- MLP ------------------------------------------------------------------
+
+def mlp_specs(cfg: ModelConfig, d_ff=None):
+    d, f = cfg.d_model, d_ff or cfg.d_ff
+    if cfg.mlp_act == "swiglu":
+        return dict(
+            wi=PSpec((d, 2 * f), ("fsdp", "model")),
+            wo=PSpec((f, d), ("model", "fsdp")),
+        )
+    # relu2 (nemotron squared-ReLU): single up projection
+    return dict(
+        wi=PSpec((d, f), ("fsdp", "model")),
+        wo=PSpec((f, d), ("model", "fsdp")),
+    )
+
+
+def mlp_apply(p, x, cfg: ModelConfig, mesh=None):
+    """x: (B, S, D) -> (B, S, D). Hidden sharded on the model axis."""
+    h = jnp.einsum("bsd,df->bsf", x, p["wi"].astype(x.dtype))
+    h = constrain(h, mesh, "dp", None, "model")
+    if cfg.mlp_act == "swiglu":
+        u, g = jnp.split(h, 2, axis=-1)
+        h = u * jax.nn.silu(g)
+    else:
+        r = jax.nn.relu(h)
+        h = r * r
+    out = jnp.einsum("bsf,fd->bsd", h, p["wo"].astype(x.dtype))
+    return out
+
+
+# --- embeddings -----------------------------------------------------------
+
+def embed_specs(cfg: ModelConfig):
+    # Input table: vocab-sharded gathers force SPMD to replicate the looked-
+    # up activations; shard d over the data axis instead (local gather, then
+    # a cheap boundary reshard). Tied embeddings keep the vocab sharding the
+    # logits matmul needs.
+    tok_logical = ("model", "fsdp") if cfg.tie_embeddings else (None, "fsdp")
+    out = dict(tok=PSpec((cfg.padded_vocab, cfg.d_model), tok_logical,
+                         "small"))
+    if not cfg.tie_embeddings:
+        out["out"] = PSpec((cfg.d_model, cfg.padded_vocab),
+                           ("fsdp", "model"), "small")
+    return out
+
+
+def embed_tokens(p, tokens, mesh=None):
+    """tokens (B, S) -> (B, S, D)."""
+    tab = p["tok"]
+    x = jnp.take(tab, tokens, axis=0)
+    bl = "dp" if tokens.shape[0] > 1 else None
+    return constrain(x, mesh, bl, None, None)
+
+
+def unembed(p, x, cfg: ModelConfig, mesh=None):
+    if cfg.tie_embeddings:
+        logits = jnp.einsum("bsd,vd->bsv", x,
+                            p["tok"].astype(x.dtype))
+    else:
+        logits = jnp.einsum("bsd,dv->bsv", x, p["out"].astype(x.dtype))
+    return constrain(logits, mesh, "dp", None, "model")
+
+
+def softmax_xent(logits, labels, vocab_size: int):
+    """Stable CE; labels == -1 are masked. logits may be vocab-sharded —
+    the reductions lower to partial + all-reduce under GSPMD."""
+    logits = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    ll = jnp.take_along_axis(
+        logits, labels.clip(0)[..., None], axis=-1)[..., 0]
+    mask = labels >= 0
+    nll = (lse - ll) * mask
+    return jnp.sum(nll) / jnp.maximum(jnp.sum(mask), 1)

@@ -1,0 +1,174 @@
+"""Mamba2 mixer via SSD (state-space duality, arXiv:2405.21060).
+
+Chunked algorithm: within a chunk the output is a masked quadratic form
+(duality with attention); across chunks a small recurrent state
+(B, H, P, N) is carried by lax.scan — O(L) total, which is why the SSM
+archs run long_500k.
+
+Heads shard on the model axis; the recurrent state is tiny, so decode is a
+pure recurrence (one state update per token, no cache growth).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.pspec import PSpec
+from repro.distributed.sharding import constrain
+
+D_CONV = 4
+
+
+def mamba_specs(cfg: ModelConfig):
+    d, di, h, n = cfg.d_model, cfg.d_inner, cfg.ssm_heads, cfg.ssm_state
+    return dict(
+        in_proj=PSpec((d, 2 * di), ("fsdp", "model")),       # x, z(gate)
+        bc_proj=PSpec((d, 2 * n), ("fsdp", None)),           # B, C (1 group)
+        dt_proj=PSpec((d, h), ("fsdp", "model")),
+        conv_w=PSpec((D_CONV, di), (None, "model"), "small"),
+        conv_b=PSpec((di,), ("model",), "zeros"),
+        a_log=PSpec((h,), ("model",), "zeros"),
+        d_skip=PSpec((h,), ("model",), "ones"),
+        dt_bias=PSpec((h,), ("model",), "zeros"),
+        norm_w=PSpec((di,), ("model",), "ones"),
+        out_proj=PSpec((di, d), ("model", "fsdp")),
+    )
+
+
+def _conv_causal(x, w, b):
+    """Depthwise causal conv. x: (B, L, di); w: (D_CONV, di)."""
+    pads = [(0, 0), (D_CONV - 1, 0), (0, 0)]
+    xp = jnp.pad(x, pads)
+    out = sum(xp[:, i:i + x.shape[1], :] * w[i] for i in range(D_CONV))
+    return jax.nn.silu(out + b)
+
+
+def _gated_norm(y, z, w, eps):
+    y = y * jax.nn.silu(z)
+    var = jnp.mean(jnp.square(y.astype(jnp.float32)), -1, keepdims=True)
+    return (y * jax.lax.rsqrt(var + eps).astype(y.dtype)) * w
+
+
+def ssd_chunked(x, dt, a_log, B, C, chunk: int):
+    """SSD scan. x: (B, L, H, P); dt: (B, L, H); B, C: (B, L, N).
+
+    Returns y: (B, L, H, P) and the final state (B, H, P, N).
+    """
+    b, l, h, p = x.shape
+    n = B.shape[-1]
+    assert l % chunk == 0, (l, chunk)
+    nc = l // chunk
+    a = -jnp.exp(a_log.astype(jnp.float32))              # (H,) negative
+    dA = dt * a                                          # (B, L, H) log-decay
+    xc = x.reshape(b, nc, chunk, h, p)
+    dtc = dt.reshape(b, nc, chunk, h)
+    dAc = dA.reshape(b, nc, chunk, h)
+    Bc = B.reshape(b, nc, chunk, n)
+    Cc = C.reshape(b, nc, chunk, n)
+
+    cum = jnp.cumsum(dAc, axis=2)                        # (B, nc, Q, H)
+    seg_end = cum[:, :, -1:, :]                          # total decay of chunk
+
+    # Intra-chunk (quadratic, masked): y_q = sum_{k<=q} C_q.B_k e^{cum_q-cum_k} dt_k x_k
+    decay = cum[:, :, :, None, :] - cum[:, :, None, :, :]    # (B,nc,Q,K,H)
+    iq = jnp.arange(chunk)
+    mask = (iq[:, None] >= iq[None, :])[None, None, :, :, None]
+    w = jnp.where(mask, jnp.exp(decay), 0.0)                 # (B,nc,Q,K,H)
+    cb = jnp.einsum("bcqn,bckn->bcqk", Cc, Bc)               # (B,nc,Q,K)
+    wgt = (cb[..., None] * w * dtc[:, :, None, :, :]).astype(x.dtype)
+    y_intra = jnp.einsum("bcqkh,bckhp->bcqhp", wgt, xc)
+
+    # Chunk states: S_c = sum_k e^{seg_end - cum_k} dt_k B_k x_k^T
+    sdec = jnp.exp(seg_end - cum)                            # (B,nc,Q,H)
+    sw = (sdec * dtc).astype(x.dtype)
+    states = jnp.einsum("bckh,bckn,bckhp->bchpn", sw, Bc.astype(x.dtype), xc)
+
+    # Inter-chunk recurrence over nc chunks.
+    def body(s_prev, inp):
+        st, dec = inp                                        # (B,H,P,N),(B,H)
+        s_new = st + dec[:, :, None, None].astype(x.dtype) * s_prev
+        return s_new, s_prev
+
+    chunk_dec = jnp.exp(seg_end[:, :, 0, :])                 # (B, nc, H)
+    s_final, s_prevs = jax.lax.scan(
+        body, jnp.zeros((b, h, p, n), x.dtype),
+        (jnp.moveaxis(states, 1, 0), jnp.moveaxis(chunk_dec, 1, 0)))
+    s_prevs = jnp.moveaxis(s_prevs, 0, 1)                    # (B,nc,H,P,N)
+
+    # Inter-chunk contribution: y_q += C_q . (e^{cum_q} S_prev)
+    qdec = jnp.exp(cum).astype(x.dtype)                      # (B,nc,Q,H)
+    y_inter = jnp.einsum("bcqn,bchpn,bcqh->bcqhp",
+                         Cc.astype(x.dtype), s_prevs, qdec)
+    y = (y_intra + y_inter).reshape(b, l, h, p)
+    return y, s_final
+
+
+def mamba_train(p, x, cfg: ModelConfig, mesh=None):
+    """x: (B, L, D) -> (B, L, D)."""
+    b, l, _ = x.shape
+    h, pd, n = cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state
+    xz = jnp.einsum("bld,de->ble", x, p["in_proj"].astype(x.dtype))
+    xin, z = jnp.split(xz, 2, axis=-1)
+    bl = "dp" if b > 1 else None
+    xin = constrain(xin, mesh, bl, None, "model")
+    xin = _conv_causal(xin, p["conv_w"].astype(x.dtype),
+                       p["conv_b"].astype(x.dtype))
+    bc = jnp.einsum("bld,dn->bln", x, p["bc_proj"].astype(x.dtype))
+    B, C = jnp.split(bc, 2, axis=-1)
+    dt = jax.nn.softplus(
+        jnp.einsum("bld,dh->blh", x, p["dt_proj"].astype(x.dtype))
+        + p["dt_bias"].astype(x.dtype)).astype(jnp.float32)
+    xh = xin.reshape(b, l, h, pd)
+    y, _ = ssd_chunked(xh, dt, p["a_log"], B.astype(jnp.float32),
+                       C.astype(jnp.float32), cfg.ssm_chunk)
+    y = y + xh * p["d_skip"].astype(x.dtype)[None, None, :, None]
+    y = y.reshape(b, l, h * pd)
+    y = _gated_norm(y, z, p["norm_w"].astype(x.dtype), cfg.norm_eps)
+    return jnp.einsum("ble,ed->bld", y, p["out_proj"].astype(x.dtype))
+
+
+class MambaCache(NamedTuple):
+    conv: jax.Array    # (B, D_CONV-1, d_inner) trailing inputs
+    state: jax.Array   # (B, H, P, N)
+
+
+def init_mamba_cache(cfg: ModelConfig, batch: int, dtype=jnp.bfloat16):
+    return MambaCache(
+        conv=jnp.zeros((batch, D_CONV - 1, cfg.d_inner), dtype),
+        state=jnp.zeros((batch, cfg.ssm_heads, cfg.ssm_head_dim,
+                         cfg.ssm_state), dtype),
+    )
+
+
+def mamba_decode(p, x, cache: MambaCache, cfg: ModelConfig, mesh=None):
+    """x: (B, 1, D) one token; O(1) state update."""
+    b = x.shape[0]
+    h, pd = cfg.ssm_heads, cfg.ssm_head_dim
+    xz = jnp.einsum("bld,de->ble", x, p["in_proj"].astype(x.dtype))
+    xin, z = jnp.split(xz, 2, axis=-1)
+    window = jnp.concatenate([cache.conv.astype(x.dtype), xin], axis=1)
+    conv = sum(window[:, i] * p["conv_w"][i].astype(x.dtype)
+               for i in range(D_CONV))
+    xc = jax.nn.silu(conv + p["conv_b"].astype(x.dtype))[:, None]  # (B,1,di)
+    bc = jnp.einsum("bld,dn->bln", x, p["bc_proj"].astype(x.dtype))
+    B, C = jnp.split(bc, 2, axis=-1)
+    dt = jax.nn.softplus(
+        jnp.einsum("bld,dh->blh", x, p["dt_proj"].astype(x.dtype))
+        + p["dt_bias"].astype(x.dtype)).astype(jnp.float32)[:, 0]   # (B,H)
+    a = -jnp.exp(p["a_log"].astype(jnp.float32))
+    dec = jnp.exp(dt * a)                                           # (B,H)
+    xh = xc[:, 0].reshape(b, h, pd)
+    upd = jnp.einsum("bh,bhp,bn->bhpn", dt.astype(x.dtype), xh,
+                     B[:, 0].astype(x.dtype))
+    state = cache.state.astype(x.dtype) * dec[:, :, None, None].astype(x.dtype) + upd
+    y = jnp.einsum("bn,bhpn->bhp", C[:, 0].astype(x.dtype), state)
+    y = y + xh * p["d_skip"].astype(x.dtype)[None, :, None]
+    y = y.reshape(b, 1, h * pd)
+    y = _gated_norm(y, z, p["norm_w"].astype(x.dtype), cfg.norm_eps)
+    out = jnp.einsum("ble,ed->bld", y, p["out_proj"].astype(x.dtype))
+    new_cache = MambaCache(conv=window[:, 1:].astype(cache.conv.dtype),
+                           state=state.astype(cache.state.dtype))
+    return out, new_cache

@@ -1,0 +1,122 @@
+"""Multi-head Latent Attention (DeepSeek-V2). KV is compressed into a
+kv_lora_rank latent (plus a shared RoPE key); the decode cache stores only
+the latent — the paper-accurate memory saving (~1/16 of GQA cache).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.pspec import PSpec
+from repro.models.layers import apply_rope
+from repro.models.attention import chunked_attention, NEG_INF
+from repro.distributed.sharding import constrain
+
+
+def mla_specs(cfg: ModelConfig):
+    d, h = cfg.d_model, cfg.num_heads
+    r, rd = cfg.kv_lora_rank, cfg.qk_rope_head_dim
+    nd, vd = cfg.qk_nope_head_dim, cfg.v_head_dim
+    return dict(
+        w_dkv=PSpec((d, r + rd), ("fsdp", None)),
+        kv_norm=PSpec((r,), (None,), "ones"),
+        w_uk=PSpec((r, h, nd), ("fsdp", "model", None)),
+        w_uv=PSpec((r, h, vd), ("fsdp", "model", None)),
+        w_q=PSpec((d, h, nd + rd), ("fsdp", "model", None)),
+        wo=PSpec((h, vd, d), ("model", None, "fsdp")),
+    )
+
+
+def _latent(p, x, cfg: ModelConfig, positions):
+    from repro.models.layers import rmsnorm
+    dkv = jnp.einsum("bsd,dr->bsr", x, p["w_dkv"].astype(x.dtype))
+    c_kv, k_rope = jnp.split(dkv, [cfg.kv_lora_rank], axis=-1)
+    c_kv = rmsnorm(c_kv, p["kv_norm"].astype(x.dtype), cfg.norm_eps)
+    k_rope = apply_rope(k_rope[:, :, None, :], positions,
+                        cfg.rope_theta)[:, :, 0, :]
+    return c_kv, k_rope
+
+
+def _expand_kv(p, c_kv, k_rope, cfg: ModelConfig, dtype):
+    """Latent -> per-head K, V. K = [nope | shared rope]."""
+    k_nope = jnp.einsum("bsr,rhn->bshn", c_kv, p["w_uk"].astype(dtype))
+    v = jnp.einsum("bsr,rhn->bshn", c_kv, p["w_uv"].astype(dtype))
+    h = cfg.num_heads
+    k_rope_b = jnp.broadcast_to(k_rope[:, :, None, :],
+                                k_nope.shape[:3] + (cfg.qk_rope_head_dim,))
+    k = jnp.concatenate([k_nope, k_rope_b], axis=-1)
+    return k, v
+
+
+def _queries(p, x, cfg: ModelConfig, positions, mesh):
+    q = jnp.einsum("bsd,dhk->bshk", x, p["w_q"].astype(x.dtype))
+    q_nope, q_rope = jnp.split(q, [cfg.qk_nope_head_dim], axis=-1)
+    q_rope = apply_rope(q_rope, positions, cfg.rope_theta)
+    q = jnp.concatenate([q_nope, q_rope], axis=-1)
+    bl = "dp" if x.shape[0] > 1 else None
+    return constrain(q, mesh, bl, None, "model", None)
+
+
+def mla_train(p, x, cfg: ModelConfig, mesh=None):
+    b, s, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(s), (b, s))
+    q = _queries(p, x, cfg, positions, mesh)
+    c_kv, k_rope = _latent(p, x, cfg, positions)
+    k, v = _expand_kv(p, c_kv, k_rope, cfg, x.dtype)
+    # chunked_attention expects (B, S, Kv, hd) with GQA groups; MLA expands
+    # to full heads, so Kv == H here. Pad V's head_dim up to K's for the
+    # shared kernel, then slice.
+    import dataclasses
+    cfg_attn = dataclasses.replace(
+        cfg, head_dim=cfg.qk_nope_head_dim + cfg.qk_rope_head_dim)
+    vd = v.shape[-1]
+    if v.shape[-1] != k.shape[-1]:
+        v = jnp.pad(v, ((0, 0), (0, 0), (0, 0), (0, k.shape[-1] - vd)))
+    out = chunked_attention(q, k, v, cfg_attn, causal=True)[..., :vd]
+    return jnp.einsum("bshk,hkd->bsd", out, p["wo"].astype(x.dtype))
+
+
+class MLACache(NamedTuple):
+    c_kv: jax.Array    # (B, Smax, kv_lora_rank)
+    k_rope: jax.Array  # (B, Smax, rope_dim)
+    pos: jax.Array
+
+
+def init_mla_cache(cfg: ModelConfig, batch: int, seq: int,
+                   dtype=jnp.bfloat16) -> MLACache:
+    return MLACache(
+        c_kv=jnp.zeros((batch, seq, cfg.kv_lora_rank), dtype),
+        k_rope=jnp.zeros((batch, seq, cfg.qk_rope_head_dim), dtype),
+        pos=jnp.zeros((), jnp.int32),
+    )
+
+
+def mla_decode(p, x, cache: MLACache, cfg: ModelConfig, mesh=None):
+    b = x.shape[0]
+    pos = cache.pos
+    positions = jnp.broadcast_to(pos[None, None], (b, 1)).astype(jnp.int32)
+    q = _queries(p, x, cfg, positions, mesh)           # (B, 1, H, nd+rd)
+    c_new, kr_new = _latent(p, x, cfg, positions)
+    c_kv = jax.lax.dynamic_update_slice(
+        cache.c_kv, c_new.astype(cache.c_kv.dtype), (0, pos, 0))
+    k_rope = jax.lax.dynamic_update_slice(
+        cache.k_rope, kr_new.astype(cache.k_rope.dtype), (0, pos, 0))
+    bl = "dp" if b > 1 else None
+    c_kv = constrain(c_kv, mesh, bl, "sp", None)
+    k_rope = constrain(k_rope, mesh, bl, "sp", None)
+
+    # Score against the latent cache (expand per-chip slice only).
+    k, v = _expand_kv(p, c_kv.astype(q.dtype), k_rope.astype(q.dtype),
+                      cfg, q.dtype)
+    scale = 1.0 / ((cfg.qk_nope_head_dim + cfg.qk_rope_head_dim) ** 0.5)
+    s = jnp.einsum("bohk,bshk->bhso", q, k)[..., 0] * scale  # (B, H, Smax)
+    smax = c_kv.shape[1]
+    mask = jnp.arange(smax) <= pos
+    s = jnp.where(mask[None, None, :], s.astype(jnp.float32), NEG_INF)
+    w = jax.nn.softmax(s, axis=-1).astype(q.dtype)
+    out = jnp.einsum("bhs,bshn->bhn", w, v)[:, None]    # (B, 1, H, vd)
+    y = jnp.einsum("bshk,hkd->bsd", out, p["wo"].astype(x.dtype))
+    return y, MLACache(c_kv=c_kv, k_rope=k_rope, pos=pos + 1)

@@ -1,0 +1,648 @@
+"""Unified model API over all assigned architecture families.
+
+Model(cfg) exposes:
+    specs()                      — PSpec tree (drives init/abstract/shardings)
+    init(key)                    — real params (smoke tests, examples)
+    loss(params, batch, mesh)    — next-token CE (+ MoE aux) for train_step
+    prefill(params, batch, mesh) — full forward, returns (last_logits, caches)
+    decode_step(params, caches, tokens, mesh) — one-token serve step
+    init_caches(batch, seq)      — decode caches (KV / latent / SSM state)
+    cache_logical()              — logical sharding tree for the caches
+    input_specs(shape)           — ShapeDtypeStruct stand-ins per shape
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.models.pspec import (PSpec, stack, init_params, abstract_params)
+from repro.models import layers as L
+from repro.models import attention as A
+from repro.models import mla as M
+from repro.models import mamba2 as S
+from repro.models import blocks as B
+from repro.models.moe import moe_apply as E_moe_apply
+from repro.distributed.sharding import constrain
+
+
+def _compute_dtype(cfg):
+    return jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+
+
+# ---------------------------------------------------------------------------
+# Cross-attention (enc-dec)
+# ---------------------------------------------------------------------------
+
+def cross_attn_specs(cfg: ModelConfig):
+    d, h, hd = cfg.d_model, cfg.padded_heads, cfg.head_dim_
+    kv = cfg.num_kv_heads
+    kvl = A.kv_logical(cfg)
+    return dict(
+        wq=PSpec((d, h, hd), ("fsdp", "model", None)),
+        wk=PSpec((d, kv, hd), ("fsdp", kvl, None)),
+        wv=PSpec((d, kv, hd), ("fsdp", kvl, None)),
+        wo=PSpec((h, hd, d), ("model", None, "fsdp")),
+    )
+
+
+def cross_attend(p, x, enc_kv, cfg: ModelConfig, mesh=None):
+    """x: (B, Sq, D); enc_kv: (k, v) each (B, Se, Kv, hd). No RoPE."""
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"].astype(x.dtype))
+    bl = "dp" if x.shape[0] > 1 else None
+    q = constrain(q, mesh, bl, None, "model", None)
+    k, v = enc_kv
+    out = A.chunked_attention(q, k.astype(q.dtype), v.astype(q.dtype),
+                              cfg, causal=False)
+    return jnp.einsum("bshk,hkd->bsd", out, p["wo"].astype(x.dtype))
+
+
+def enc_kv_from(p, enc_out, cfg: ModelConfig, mesh=None):
+    k = jnp.einsum("bsd,dhk->bshk", enc_out, p["wk"].astype(enc_out.dtype))
+    v = jnp.einsum("bsd,dhk->bshk", enc_out, p["wv"].astype(enc_out.dtype))
+    return k, v
+
+
+def encoder_block_specs(cfg):
+    return B.dense_block_specs(cfg)
+
+
+def encoder_block(p, x, cfg, mesh=None):
+    """Bidirectional (non-causal) transformer block."""
+    h = B.gathered(L.rmsnorm(x, p["ln1"].astype(x.dtype), cfg.norm_eps), mesh)
+    b, s, _ = h.shape
+    positions = jnp.broadcast_to(jnp.arange(s), (b, s))
+    q, k, v = A._qkv(p["attn"], h, cfg, positions, mesh)
+    y = A.chunked_attention(q, k, v, cfg, causal=False)
+    y = jnp.einsum("bshk,hkd->bsd", y, p["attn"]["wo"].astype(x.dtype))
+    x = B.boundary(x + y, mesh)
+    h = B.gathered(L.rmsnorm(x, p["ln2"].astype(x.dtype), cfg.norm_eps), mesh)
+    x = B.boundary(x + L.mlp_apply(p["mlp"], h, cfg, mesh), mesh)
+    return x, jnp.zeros((), jnp.float32)
+
+
+def decoder_block_specs(cfg):
+    return dict(
+        ln1=L.rmsnorm_spec(cfg.d_model),
+        attn=A.attn_specs(cfg),
+        lnx=L.rmsnorm_spec(cfg.d_model),
+        xattn=cross_attn_specs(cfg),
+        ln2=L.rmsnorm_spec(cfg.d_model),
+        mlp=L.mlp_specs(cfg),
+    )
+
+
+def decoder_block(p, x, enc_kv, cfg, mesh=None):
+    h = B.gathered(L.rmsnorm(x, p["ln1"].astype(x.dtype), cfg.norm_eps), mesh)
+    y, kv = A.attend_train(p["attn"], h, cfg, mesh)
+    x = B.boundary(x + y, mesh)
+    h = B.gathered(L.rmsnorm(x, p["lnx"].astype(x.dtype), cfg.norm_eps), mesh)
+    x = B.boundary(x + cross_attend(p["xattn"], h, enc_kv, cfg, mesh), mesh)
+    h = B.gathered(L.rmsnorm(x, p["ln2"].astype(x.dtype), cfg.norm_eps), mesh)
+    x = B.boundary(x + L.mlp_apply(p["mlp"], h, cfg, mesh), mesh)
+    return x, kv
+
+
+# ---------------------------------------------------------------------------
+# Model
+# ---------------------------------------------------------------------------
+
+class Model:
+    def __init__(self, cfg: ModelConfig):
+        self.cfg = cfg
+
+    # ---- parameter tree ----
+    def specs(self):
+        cfg = self.cfg
+        out: Dict[str, Any] = dict(embed=L.embed_specs(cfg),
+                                   ln_f=L.rmsnorm_spec(cfg.d_model))
+        if cfg.family in ("dense", "vlm", "audio"):
+            out["layers"] = stack(B.dense_block_specs(cfg), cfg.num_layers)
+        elif cfg.family == "moe":
+            n_moe = cfg.num_layers - cfg.first_k_dense
+            if cfg.first_k_dense:
+                out["first"] = stack(B.dense_ffn_block_specs(cfg),
+                                     cfg.first_k_dense)
+            out["layers"] = stack(B.moe_block_specs(cfg), n_moe)
+        elif cfg.family == "ssm":
+            out["layers"] = stack(B.ssm_block_specs(cfg), cfg.num_layers)
+        elif cfg.family == "hybrid":
+            k = cfg.attn_every
+            n_groups, rem = divmod(cfg.num_layers, k)
+            out["groups"] = stack(stack(B.ssm_block_specs(cfg), k), n_groups)
+            if rem:
+                out["tail"] = stack(B.ssm_block_specs(cfg), rem)
+            out["shared_attn"] = B.dense_block_specs(cfg)  # ONE shared block
+        elif cfg.family == "encdec":
+            out["encoder"] = stack(encoder_block_specs(cfg),
+                                   cfg.encoder_layers)
+            out["layers"] = stack(decoder_block_specs(cfg), cfg.num_layers)
+            out["ln_enc"] = L.rmsnorm_spec(cfg.d_model)
+        else:
+            raise ValueError(cfg.family)
+        return out
+
+    def init(self, key, dtype=None):
+        dt = dtype or (jnp.bfloat16 if self.cfg.param_dtype == "bfloat16"
+                       else jnp.float32)
+        return init_params(self.specs(), key, dt)
+
+    def abstract(self):
+        dt = jnp.bfloat16 if self.cfg.param_dtype == "bfloat16" \
+            else jnp.float32
+        return abstract_params(self.specs(), dt)
+
+    # ---- forward ----
+    def _embed_in(self, params, batch, mesh):
+        cfg = self.cfg
+        if "embeds" in batch:
+            x = batch["embeds"].astype(_compute_dtype(cfg))
+        else:
+            x = L.embed_tokens(params["embed"], batch["tokens"], mesh)
+            x = x.astype(_compute_dtype(cfg))
+        return B.boundary(x, mesh)
+
+    def _backbone(self, params, x, mesh):
+        cfg = self.cfg
+        aux = jnp.zeros((), jnp.float32)
+        if cfg.family in ("dense", "vlm", "audio"):
+            x, aux = B.scan_stack(B.dense_block, params["layers"], x, cfg, mesh)
+        elif cfg.family == "moe":
+            if cfg.first_k_dense:
+                x, _ = B.scan_stack(B.dense_ffn_block, params["first"], x,
+                                    cfg, mesh)
+            x, aux = B.scan_stack(B.moe_block, params["layers"], x, cfg, mesh)
+        elif cfg.family == "ssm":
+            x, aux = B.scan_stack(B.ssm_block, params["layers"], x, cfg, mesh)
+        elif cfg.family == "hybrid":
+            shared = params["shared_attn"]
+
+            def group_fn(carry, group_p):
+                y, _ = B.scan_stack(B.ssm_block, group_p, carry, cfg, mesh,
+                                    remat=False)
+                y, _ = B.dense_block(shared, y, cfg, mesh)
+                return y, jnp.zeros((), jnp.float32)
+
+            x, _ = jax.lax.scan(jax.checkpoint(group_fn), x, params["groups"])
+            if "tail" in params:
+                x, _ = B.scan_stack(B.ssm_block, params["tail"], x, cfg, mesh)
+        else:
+            raise ValueError(cfg.family)
+        return x, aux
+
+    def _encode(self, params, batch, mesh):
+        cfg = self.cfg
+        x = batch["enc_embeds"].astype(_compute_dtype(cfg))
+        x = B.boundary(x, mesh)
+        x, _ = B.scan_stack(encoder_block, params["encoder"], x, cfg, mesh)
+        return L.rmsnorm(x, params["ln_enc"].astype(x.dtype), cfg.norm_eps)
+
+    def _decode_stack(self, params, x, enc_out, mesh, collect_caches=False):
+        """Enc-dec decoder over stacked layers."""
+        cfg = self.cfg
+
+        def body(carry, layer_p):
+            y, kv = decoder_block(layer_p, carry, enc_kv_from(
+                layer_p["xattn"], enc_out, cfg, mesh), cfg, mesh)
+            return y, kv if collect_caches else None
+
+        fn = jax.checkpoint(body) if not collect_caches else body
+        x, kvs = jax.lax.scan(fn, x, params["layers"])
+        return x, kvs
+
+    def forward(self, params, batch, mesh=None):
+        """Full forward -> logits (B, S, V)."""
+        cfg = self.cfg
+        if cfg.family == "encdec":
+            enc_out = self._encode(params, batch, mesh)
+            x = L.embed_tokens(params["embed"], batch["tokens"], mesh)
+            x = B.boundary(x.astype(_compute_dtype(cfg)), mesh)
+            x, _ = self._decode_stack(params, x, enc_out, mesh)
+            aux = jnp.zeros((), jnp.float32)
+        else:
+            x = self._embed_in(params, batch, mesh)
+            x, aux = self._backbone(params, x, mesh)
+        x = L.rmsnorm(x, params["ln_f"].astype(x.dtype), cfg.norm_eps)
+        logits = L.unembed(params["embed"], x, cfg, mesh)
+        return logits, aux
+
+    def loss(self, params, batch, mesh=None):
+        logits, aux = self.forward(params, batch, mesh)
+        ce = L.softmax_xent(logits, batch["labels"], self.cfg.padded_vocab)
+        return ce + 0.01 * aux
+
+    # ---- serving ----
+    def prefill(self, params, batch, mesh=None):
+        """Returns (last-token logits, decode caches)."""
+        cfg = self.cfg
+        if cfg.family == "encdec":
+            enc_out = self._encode(params, batch, mesh)
+            x = L.embed_tokens(params["embed"], batch["tokens"], mesh)
+            x = B.boundary(x.astype(_compute_dtype(cfg)), mesh)
+            x, kvs = self._decode_stack(params, x, enc_out, mesh,
+                                        collect_caches=True)
+            caches = dict(self_kv=kvs, enc_out=enc_out)
+        elif cfg.family in ("dense", "vlm", "audio"):
+            x = self._embed_in(params, batch, mesh)
+
+            def body(carry, layer_p):
+                y, kv = self._dense_prefill_block(layer_p, carry, mesh)
+                return y, kv
+
+            x, kvs = jax.lax.scan(body, x, params["layers"])
+            caches = dict(kv=kvs)
+        elif cfg.family == "moe":
+            x = self._embed_in(params, batch, mesh)
+            caches = {}
+            if cfg.first_k_dense:
+                def fbody(carry, layer_p):
+                    return self._moe_prefill_block(layer_p, carry, mesh,
+                                                   dense=True)
+                x, kv_f = jax.lax.scan(fbody, x, params["first"])
+                caches["first"] = kv_f
+
+            def body(carry, layer_p):
+                return self._moe_prefill_block(layer_p, carry, mesh)
+            x, kvs = jax.lax.scan(body, x, params["layers"])
+            caches["kv"] = kvs
+        elif cfg.family in ("ssm", "hybrid"):
+            # SSM prefill = train-shape pass capturing final states.
+            x, caches = self._ssm_prefill(params, x_batch=batch, mesh=mesh)
+        else:
+            raise ValueError(cfg.family)
+        x = L.rmsnorm(x, params["ln_f"].astype(x.dtype), cfg.norm_eps)
+        logits = L.unembed(params["embed"], x[:, -1:], cfg, mesh)
+        return logits[:, 0], caches
+
+    def _dense_prefill_block(self, p, x, mesh):
+        cfg = self.cfg
+        h = B.gathered(L.rmsnorm(x, p["ln1"].astype(x.dtype), cfg.norm_eps),
+                       mesh)
+        y, (k, v) = A.attend_train(p["attn"], h, cfg, mesh)
+        bl = "dp" if x.shape[0] > 1 else None
+        k = constrain(k, mesh, bl, "sp", None, None)
+        v = constrain(v, mesh, bl, "sp", None, None)
+        x = B.boundary(x + y, mesh)
+        h = B.gathered(L.rmsnorm(x, p["ln2"].astype(x.dtype), cfg.norm_eps),
+                       mesh)
+        x = B.boundary(x + L.mlp_apply(p["mlp"], h, cfg, mesh), mesh)
+        return x, (k.astype(jnp.bfloat16), v.astype(jnp.bfloat16))
+
+    def _moe_prefill_block(self, p, x, mesh, dense=False):
+        cfg = self.cfg
+        h = B.gathered(L.rmsnorm(x, p["ln1"].astype(x.dtype), cfg.norm_eps),
+                       mesh)
+        bl = "dp" if x.shape[0] > 1 else None
+        if cfg.use_mla:
+            b, s, _ = h.shape
+            positions = jnp.broadcast_to(jnp.arange(s), (b, s))
+            c_kv, k_rope = M._latent(p["attn"], h, cfg, positions)
+            y = M.mla_train(p["attn"], h, cfg, mesh)
+            cache = (constrain(c_kv.astype(jnp.bfloat16), mesh,
+                               bl, "sp", None),
+                     constrain(k_rope.astype(jnp.bfloat16), mesh,
+                               bl, "sp", None))
+        else:
+            y, (k, v) = A.attend_train(p["attn"], h, cfg, mesh)
+            cache = (constrain(k.astype(jnp.bfloat16), mesh,
+                               bl, "sp", None, None),
+                     constrain(v.astype(jnp.bfloat16), mesh,
+                               bl, "sp", None, None))
+        x = B.boundary(x + y, mesh)
+        h = B.gathered(L.rmsnorm(x, p["ln2"].astype(x.dtype), cfg.norm_eps),
+                       mesh)
+        if dense:
+            y = L.mlp_apply(p["mlp"], h, cfg, mesh)
+        else:
+            y, _ = E_moe_apply(p["moe"], h, cfg, mesh)
+        x = B.boundary(x + y, mesh)
+        return x, cache
+
+    def _ssm_prefill(self, params, x_batch, mesh):
+        cfg = self.cfg
+        x = self._embed_in(params, x_batch, mesh)
+        caches: Dict[str, Any] = {}
+
+        def ssm_body(carry, layer_p):
+            h = L.rmsnorm(carry, layer_p["ln"].astype(carry.dtype),
+                          cfg.norm_eps)
+            # capture final state via a second chunked pass
+            y, st, conv_tail = self._mamba_with_state(layer_p["mixer"], h,
+                                                      mesh)
+            return carry + y, (st, conv_tail)
+
+        if cfg.family == "ssm":
+            x, states = jax.lax.scan(ssm_body, x, params["layers"])
+            caches["ssm"] = states
+        else:  # hybrid
+            shared = params["shared_attn"]
+
+            def group_fn(carry, group_p):
+                y, sts = jax.lax.scan(ssm_body, carry, group_p)
+                h = B.gathered(L.rmsnorm(y, shared["ln1"].astype(y.dtype),
+                                         cfg.norm_eps), mesh)
+                a, (k, v) = A.attend_train(shared["attn"], h, cfg, mesh)
+                y = B.boundary(y + a, mesh)
+                h = B.gathered(L.rmsnorm(y, shared["ln2"].astype(y.dtype),
+                                         cfg.norm_eps), mesh)
+                y = B.boundary(y + L.mlp_apply(shared["mlp"], h, cfg, mesh),
+                               mesh)
+                return y, (sts, (k.astype(jnp.bfloat16),
+                                 v.astype(jnp.bfloat16)))
+
+            x, (g_states, g_kv) = jax.lax.scan(group_fn, x, params["groups"])
+            caches["groups"] = g_states
+            caches["attn_kv"] = g_kv
+            if "tail" in params:
+                x, tail_states = jax.lax.scan(ssm_body, x, params["tail"])
+                caches["tail"] = tail_states
+        return x, caches
+
+    def _mamba_with_state(self, p, x, mesh):
+        cfg = self.cfg
+        b, l, _ = x.shape
+        h, pd = cfg.ssm_heads, cfg.ssm_head_dim
+        xz = jnp.einsum("bld,de->ble", x, p["in_proj"].astype(x.dtype))
+        xin, z = jnp.split(xz, 2, axis=-1)
+        conv_tail = xin[:, -(S.D_CONV - 1):, :]
+        xin = S._conv_causal(xin, p["conv_w"].astype(x.dtype),
+                             p["conv_b"].astype(x.dtype))
+        bc = jnp.einsum("bld,dn->bln", x, p["bc_proj"].astype(x.dtype))
+        Bm, Cm = jnp.split(bc, 2, axis=-1)
+        dt = jax.nn.softplus(
+            jnp.einsum("bld,dh->blh", x, p["dt_proj"].astype(x.dtype))
+            + p["dt_bias"].astype(x.dtype)).astype(jnp.float32)
+        xh = xin.reshape(b, l, h, pd)
+        y, st = S.ssd_chunked(xh, dt, p["a_log"], Bm.astype(jnp.float32),
+                              Cm.astype(jnp.float32), cfg.ssm_chunk)
+        y = y + xh * p["d_skip"].astype(x.dtype)[None, None, :, None]
+        y = y.reshape(b, l, h * pd)
+        y = S._gated_norm(y, z, p["norm_w"].astype(x.dtype), cfg.norm_eps)
+        out = jnp.einsum("ble,ed->bld", y, p["out_proj"].astype(x.dtype))
+        return out, st.astype(jnp.bfloat16), conv_tail.astype(jnp.bfloat16)
+
+    # ---- decode ----
+    def init_caches(self, batch: int, seq: int):
+        cfg = self.cfg
+        if cfg.family in ("dense", "vlm", "audio"):
+            if cfg.kv_quant:
+                L = cfg.num_layers
+                shape = (L, batch, seq, cfg.num_kv_heads, cfg.head_dim_)
+                sshape = (L, batch, seq, cfg.num_kv_heads)
+                return dict(kv=dict(kv=(jnp.zeros(shape, jnp.int8),
+                                        jnp.zeros(shape, jnp.int8)),
+                                    scale=(jnp.zeros(sshape, jnp.float32),
+                                           jnp.zeros(sshape, jnp.float32))),
+                            pos=jnp.zeros((), jnp.int32))
+            return dict(kv=self._stacked_kv(batch, seq, cfg.num_layers),
+                        pos=jnp.zeros((), jnp.int32))
+        if cfg.family == "moe":
+            out = dict(pos=jnp.zeros((), jnp.int32))
+            n_moe = cfg.num_layers - cfg.first_k_dense
+            if cfg.use_mla:
+                mk = lambda n: (jnp.zeros((n, batch, seq, cfg.kv_lora_rank),
+                                          jnp.bfloat16),
+                                jnp.zeros((n, batch, seq,
+                                           cfg.qk_rope_head_dim),
+                                          jnp.bfloat16))
+            else:
+                mk = lambda n: self._stacked_kv(batch, seq, n)["kv"]
+            if cfg.first_k_dense:
+                out["first"] = mk(cfg.first_k_dense)
+            out["kv"] = mk(n_moe)
+            return out
+        if cfg.family == "ssm":
+            c = S.init_mamba_cache(cfg, batch)
+            return dict(ssm=jax.tree.map(
+                lambda x: jnp.zeros((cfg.num_layers,) + x.shape, x.dtype),
+                tuple(c)), pos=jnp.zeros((), jnp.int32))
+        if cfg.family == "hybrid":
+            k = cfg.attn_every
+            n_groups, rem = divmod(cfg.num_layers, k)
+            c = S.init_mamba_cache(cfg, batch)
+            out = dict(
+                groups=jax.tree.map(
+                    lambda x: jnp.zeros((n_groups, k) + x.shape, x.dtype),
+                    tuple(c)),
+                attn_kv=(jnp.zeros((n_groups, batch, seq, cfg.num_kv_heads,
+                                    cfg.head_dim_), jnp.bfloat16),
+                         jnp.zeros((n_groups, batch, seq, cfg.num_kv_heads,
+                                    cfg.head_dim_), jnp.bfloat16)),
+                pos=jnp.zeros((), jnp.int32))
+            if rem:
+                out["tail"] = jax.tree.map(
+                    lambda x: jnp.zeros((rem,) + x.shape, x.dtype), tuple(c))
+            return out
+        if cfg.family == "encdec":
+            enc_len = seq
+            return dict(
+                self_kv=self._stacked_kv(batch, seq, cfg.num_layers)["kv"],
+                enc_out=jnp.zeros((batch, enc_len, cfg.d_model),
+                                  jnp.bfloat16),
+                pos=jnp.zeros((), jnp.int32))
+        raise ValueError(cfg.family)
+
+    def _stacked_kv(self, batch, seq, n_layers):
+        cfg = self.cfg
+        shape = (n_layers, batch, seq, cfg.num_kv_heads, cfg.head_dim_)
+        return dict(kv=(jnp.zeros(shape, jnp.bfloat16),
+                        jnp.zeros(shape, jnp.bfloat16)))
+
+    def cache_logical(self, batch: int):
+        """Logical-sharding tree with the same structure as init_caches."""
+        cfg = self.cfg
+        bl = "dp" if batch > 1 else None
+        kv5 = (None, bl, "sp", None, None)       # (L, B, S, Kv, hd)
+        mla4 = (None, bl, "sp", None)            # (L, B, S, r)
+        ssm_state = (None, bl, "model", None, None)   # (L, B, H, P, N)
+        ssm_conv = (None, bl, None, "model")     # (L, B, 3, d_inner)
+        if cfg.family in ("dense", "vlm", "audio"):
+            if cfg.kv_quant:
+                sc = (None, bl, "sp", None)
+                return dict(kv=dict(kv=(kv5, kv5), scale=(sc, sc)), pos=())
+            return dict(kv=dict(kv=(kv5, kv5)), pos=())
+        if cfg.family == "moe":
+            pair = (mla4, mla4) if cfg.use_mla else (kv5, kv5)
+            out = dict(kv=pair, pos=())
+            if cfg.first_k_dense:
+                out["first"] = pair
+            return out
+        if cfg.family == "ssm":
+            return dict(ssm=(ssm_conv, ssm_state), pos=())
+        if cfg.family == "hybrid":
+            g_conv = (None, None, bl, None, "model")
+            g_state = (None, None, bl, "model", None, None)
+            k = cfg.attn_every
+            out = dict(groups=(g_conv, g_state),
+                       attn_kv=(kv5, kv5), pos=())
+            if cfg.num_layers % k:
+                out["tail"] = (ssm_conv, ssm_state)
+            return out
+        if cfg.family == "encdec":
+            return dict(self_kv=(kv5, kv5),
+                        enc_out=(bl, "sp", None), pos=())
+        raise ValueError(cfg.family)
+
+    def decode_step(self, params, caches, tokens, mesh=None):
+        """tokens: (B, 1) int32 -> (logits (B, V), new caches)."""
+        cfg = self.cfg
+        x = L.embed_tokens(params["embed"], tokens, mesh)
+        x = x.astype(_compute_dtype(cfg))
+        pos = caches["pos"]
+
+        if cfg.family in ("dense", "vlm", "audio"):
+            kstack, vstack = caches["kv"]["kv"]
+            if cfg.kv_quant:
+                ks_stack, vs_stack = caches["kv"]["scale"]
+
+                def qbody(carry, inp):
+                    layer_p, k, v, ks, vs = inp
+                    c = A.Int8KVCache(k=k, v=v, k_scale=ks, v_scale=vs,
+                                      pos=pos)
+                    y, c = B.dense_decode_block(layer_p, carry, c, cfg, mesh)
+                    return y, (c.k, c.v, c.k_scale, c.v_scale)
+
+                x, (knew, vnew, ksn, vsn) = jax.lax.scan(
+                    qbody, x, (params["layers"], kstack, vstack,
+                               ks_stack, vs_stack))
+                new = dict(kv=dict(kv=(knew, vnew), scale=(ksn, vsn)),
+                           pos=pos + 1)
+            else:
+                def body(carry, inp):
+                    layer_p, k, v = inp
+                    c = A.KVCache(k=k, v=v, pos=pos)
+                    y, c = B.dense_decode_block(layer_p, carry, c, cfg, mesh)
+                    return y, (c.k, c.v)
+
+                x, (knew, vnew) = jax.lax.scan(
+                    body, x, (params["layers"], kstack, vstack))
+                new = dict(kv=dict(kv=(knew, vnew)), pos=pos + 1)
+        elif cfg.family == "moe":
+            new = dict(pos=pos + 1)
+
+            def moe_body(dense):
+                def body(carry, inp):
+                    layer_p, c1, c2 = inp
+                    if cfg.use_mla:
+                        c = M.MLACache(c_kv=c1, k_rope=c2, pos=pos)
+                    else:
+                        c = A.KVCache(k=c1, v=c2, pos=pos)
+                    y, c = B.moe_decode_block(layer_p, carry, c, cfg, mesh)
+                    return y, ((c.c_kv, c.k_rope) if cfg.use_mla
+                               else (c.k, c.v))
+                return body
+
+            if cfg.first_k_dense:
+                c1, c2 = caches["first"]
+                x, cf = jax.lax.scan(moe_body(True), x,
+                                     (params["first"], c1, c2))
+                new["first"] = cf
+            c1, c2 = caches["kv"]
+            x, ck = jax.lax.scan(moe_body(False), x,
+                                 (params["layers"], c1, c2))
+            new["kv"] = ck
+        elif cfg.family == "ssm":
+            conv, state = caches["ssm"]
+
+            def body(carry, inp):
+                layer_p, cv, st = inp
+                c = S.MambaCache(conv=cv, state=st)
+                y, c = B.ssm_decode_block(layer_p, carry, c, cfg, mesh)
+                return y, (c.conv, c.state)
+
+            x, new_ssm = jax.lax.scan(body, x, (params["layers"], conv, state))
+            new = dict(ssm=new_ssm, pos=pos + 1)
+        elif cfg.family == "hybrid":
+            shared = params["shared_attn"]
+            gconv, gstate = caches["groups"]
+            ka, va = caches["attn_kv"]
+
+            def inner(carry, inp):
+                layer_p, cv, st = inp
+                c = S.MambaCache(conv=cv, state=st)
+                y, c = B.ssm_decode_block(layer_p, carry, c, cfg, mesh)
+                return y, (c.conv, c.state)
+
+            def group_fn(carry, inp):
+                group_p, cv, st, k, v = inp
+                y, new_ssm = jax.lax.scan(inner, carry, (group_p, cv, st))
+                c = A.KVCache(k=k, v=v, pos=pos)
+                y, c = B.dense_decode_block(shared, y, c, cfg, mesh)
+                return y, (new_ssm, c.k, c.v)
+
+            x, (new_g, knew, vnew) = jax.lax.scan(
+                group_fn, x, (params["groups"], gconv, gstate, ka, va))
+            new = dict(groups=new_g, attn_kv=(knew, vnew), pos=pos + 1)
+            if "tail" in caches:
+                tconv, tstate = caches["tail"]
+                x, new_t = jax.lax.scan(inner, x,
+                                        (params["tail"], tconv, tstate))
+                new["tail"] = new_t
+        elif cfg.family == "encdec":
+            enc_out = caches["enc_out"].astype(x.dtype)
+            kstack, vstack = caches["self_kv"]
+
+            def body(carry, inp):
+                layer_p, k, v = inp
+                h = L.rmsnorm(carry, layer_p["ln1"].astype(carry.dtype),
+                              cfg.norm_eps)
+                c = A.KVCache(k=k, v=v, pos=pos)
+                y, c = A.attend_decode(layer_p["attn"], h, c, cfg, mesh)
+                carry = carry + y
+                h = L.rmsnorm(carry, layer_p["lnx"].astype(carry.dtype),
+                              cfg.norm_eps)
+                carry = carry + cross_attend(
+                    layer_p["xattn"], h,
+                    enc_kv_from(layer_p["xattn"], enc_out, cfg, mesh),
+                    cfg, mesh)
+                h = L.rmsnorm(carry, layer_p["ln2"].astype(carry.dtype),
+                              cfg.norm_eps)
+                carry = carry + L.mlp_apply(layer_p["mlp"], h, cfg, mesh)
+                return carry, (c.k, c.v)
+
+            x, (knew, vnew) = jax.lax.scan(
+                body, x, (params["layers"], kstack, vstack))
+            new = dict(self_kv=(knew, vnew), enc_out=caches["enc_out"],
+                       pos=pos + 1)
+        else:
+            raise ValueError(cfg.family)
+
+        x = L.rmsnorm(x, params["ln_f"].astype(x.dtype), cfg.norm_eps)
+        logits = L.unembed(params["embed"], x, cfg, mesh)
+        return logits[:, 0], new
+
+    # ---- input specs (dry-run stand-ins) ----
+    def input_specs(self, shape: ShapeConfig):
+        cfg = self.cfg
+        b, s = shape.global_batch, shape.seq_len
+        i32 = jnp.int32
+        bf16 = jnp.bfloat16
+        if shape.kind == "train":
+            if cfg.family == "encdec":
+                half = s // 2
+                return dict(
+                    enc_embeds=jax.ShapeDtypeStruct((b, half, cfg.d_model),
+                                                    bf16),
+                    tokens=jax.ShapeDtypeStruct((b, half), i32),
+                    labels=jax.ShapeDtypeStruct((b, half), i32),
+                )
+            if cfg.embeds_input:
+                return dict(
+                    embeds=jax.ShapeDtypeStruct((b, s, cfg.d_model), bf16),
+                    labels=jax.ShapeDtypeStruct((b, s), i32),
+                )
+            return dict(tokens=jax.ShapeDtypeStruct((b, s), i32),
+                        labels=jax.ShapeDtypeStruct((b, s), i32))
+        if shape.kind == "prefill":
+            spec = self.input_specs(dataclasses.replace(
+                shape, kind="train"))
+            spec.pop("labels")
+            return spec
+        # decode
+        return dict(tokens=jax.ShapeDtypeStruct((b, 1), i32))
+
+

@@ -1,0 +1,71 @@
+"""Parameter-spec trees: one declaration drives init, abstract shapes, and
+shardings — structure can never drift between them."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding
+
+from repro.distributed.sharding import resolve
+
+
+@dataclasses.dataclass(frozen=True)
+class PSpec:
+    """Declaration of one parameter tensor."""
+    shape: Tuple[int, ...]
+    logical: Tuple          # logical axis names, len == len(shape)
+    init: str = "fanin"     # fanin | zeros | ones | small
+    dtype: Any = jnp.float32
+
+    def __post_init__(self):
+        assert len(self.shape) == len(self.logical), (self.shape, self.logical)
+
+
+def is_pspec(x) -> bool:
+    return isinstance(x, PSpec)
+
+
+def stack(tree, n: int):
+    """Prepend a stacked-layer dimension (for lax.scan over layers)."""
+    return jax.tree.map(
+        lambda p: PSpec((n,) + p.shape, (None,) + tuple(p.logical),
+                        p.init, p.dtype),
+        tree, is_leaf=is_pspec)
+
+
+def init_params(tree, key, dtype=None):
+    leaves, treedef = jax.tree.flatten(tree, is_leaf=is_pspec)
+    keys = jax.random.split(key, len(leaves))
+
+    def one(p: PSpec, k):
+        dt = dtype or p.dtype
+        if p.init == "zeros":
+            return jnp.zeros(p.shape, dt)
+        if p.init == "ones":
+            return jnp.ones(p.shape, dt)
+        fan_in = p.shape[-2] if len(p.shape) >= 2 else p.shape[-1]
+        scale = 0.02 if p.init == "small" else (1.0 / max(fan_in, 1)) ** 0.5
+        return (jax.random.normal(k, p.shape) * scale).astype(dt)
+
+    return jax.tree.unflatten(treedef, [one(p, k) for p, k in zip(leaves, keys)])
+
+
+def abstract_params(tree, dtype=None):
+    return jax.tree.map(
+        lambda p: jax.ShapeDtypeStruct(p.shape, dtype or p.dtype),
+        tree, is_leaf=is_pspec)
+
+
+def shardings(tree, mesh: Mesh, fsdp_over_pod: bool = False):
+    return jax.tree.map(
+        lambda p: NamedSharding(mesh, resolve(p.logical, mesh,
+                                              fsdp_over_pod)),
+        tree, is_leaf=is_pspec)
+
+
+def partition_specs(tree, mesh: Mesh, fsdp_over_pod: bool = False):
+    return jax.tree.map(lambda p: resolve(p.logical, mesh, fsdp_over_pod),
+                        tree, is_leaf=is_pspec)

@@ -1,0 +1,106 @@
+"""Adafactor (Shazeer & Stern, 2018) — factored second moments.
+
+For the largest models (arctic-480b) Adam's full m/v does not fit v5e HBM
+even fully sharded; Adafactor's row/column-factored v plus optional no-m
+(beta1=0) cuts optimizer state from 2x params to ~params/d — the standard
+production trick for half-terabyte models on 16 GB chips.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class AdafactorConfig:
+    lr: float = 3e-4
+    decay: float = 0.8          # \hat{beta2}_t = 1 - t^-decay
+    eps: float = 1e-30
+    clip_threshold: float = 1.0
+    weight_decay: float = 0.0
+    min_dim_size_to_factor: int = 128
+    warmup_steps: int = 100
+    total_steps: int = 10000
+
+
+class FactoredMoment(NamedTuple):
+    row: Any     # (..., d_row) or None-placeholder
+    col: Any
+    full: Any    # unfactored fallback for small/1D params
+
+
+class AdafactorState(NamedTuple):
+    v: Any       # pytree of FactoredMoment
+    step: jax.Array
+
+
+def _should_factor(shape, cfg) -> bool:
+    return (len(shape) >= 2 and shape[-1] >= cfg.min_dim_size_to_factor
+            and shape[-2] >= cfg.min_dim_size_to_factor)
+
+
+def init(params, cfg: AdafactorConfig) -> AdafactorState:
+    def one(p):
+        if _should_factor(p.shape, cfg):
+            return FactoredMoment(
+                row=jnp.zeros(p.shape[:-1], jnp.float32),
+                col=jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32),
+                full=jnp.zeros((), jnp.float32))
+        return FactoredMoment(row=jnp.zeros((), jnp.float32),
+                              col=jnp.zeros((), jnp.float32),
+                              full=jnp.zeros(p.shape, jnp.float32))
+
+    return AdafactorState(
+        v=jax.tree.map(one, params),
+        step=jnp.zeros((), jnp.int32))
+
+
+def apply(params, grads, state: AdafactorState, cfg: AdafactorConfig):
+    from repro.optim.adamw import lr_at, AdamWConfig, global_norm
+    step = state.step + 1
+    t = step.astype(jnp.float32)
+    beta2 = 1.0 - t ** (-cfg.decay)
+    lr = lr_at(step, AdamWConfig(lr=cfg.lr, warmup_steps=cfg.warmup_steps,
+                                 total_steps=cfg.total_steps))
+    gnorm = global_norm(grads)
+
+    def upd(p, g, v: FactoredMoment):
+        # Keep elementwise intermediates in the PARAM dtype (bf16 for the
+        # largest models) so no fp32 copy of a layer-stacked expert leaf is
+        # ever materialized; reductions accumulate in fp32 (XLA fuses the
+        # square into the reduce, so g^2 never materializes either).
+        ct = p.dtype
+        if _should_factor(p.shape, cfg):
+            g2_row = jnp.mean(jnp.square(g.astype(jnp.float32)), axis=-1)
+            g2_col = jnp.mean(jnp.square(g.astype(jnp.float32)), axis=-2)
+            row = beta2 * v.row + (1 - beta2) * (g2_row + cfg.eps)
+            col = beta2 * v.col + (1 - beta2) * (g2_col + cfg.eps)
+            row_mean = jnp.mean(row, axis=-1, keepdims=True)
+            rfac = (row / jnp.maximum(row_mean, cfg.eps))
+            denom = (jnp.sqrt(jnp.maximum(rfac, cfg.eps))[..., None]
+                     * jnp.sqrt(jnp.maximum(col, cfg.eps))[..., None, :])
+            u = g.astype(ct) / denom.astype(ct)
+            new_v = FactoredMoment(row=row, col=col, full=v.full)
+        else:
+            g2 = jnp.square(g.astype(jnp.float32)) + cfg.eps
+            vhat = beta2 * v.full + (1 - beta2) * g2
+            u = g.astype(ct) / jnp.sqrt(jnp.maximum(vhat, cfg.eps)).astype(ct)
+            new_v = FactoredMoment(row=v.row, col=v.col, full=vhat)
+        # update clipping (RMS(u) <= clip_threshold); fp32-accumulated reduce
+        rms_u = jnp.sqrt(jnp.mean(jnp.square(u.astype(jnp.float32))) + 1e-30)
+        scale = (1.0 / jnp.maximum(1.0, rms_u / cfg.clip_threshold))
+        p_new = (p.astype(ct) * jnp.asarray(1 - lr * cfg.weight_decay, ct)
+                 - (lr * scale).astype(ct) * u)
+        return p_new.astype(p.dtype), new_v
+
+    out = jax.tree.map(upd, params, grads, state.v,
+                       is_leaf=lambda x: isinstance(x, FactoredMoment))
+    is_tup = lambda x: isinstance(x, tuple) and not isinstance(
+        x, FactoredMoment)
+    new_params = jax.tree.map(lambda x: x[0], out, is_leaf=is_tup)
+    new_v = jax.tree.map(lambda x: x[1], out, is_leaf=is_tup)
+    return new_params, AdafactorState(new_v, step), dict(grad_norm=gnorm,
+                                                         lr=lr)

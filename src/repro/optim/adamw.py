@@ -1,0 +1,88 @@
+"""AdamW with production knobs: fp32 (or bf16) moments sharded like the
+params, global-norm clipping, decoupled weight decay, and optional gradient
+compression hooks (see optim.compression).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    moment_dtype: Any = jnp.float32   # bf16 for the very largest models
+    warmup_steps: int = 100
+    total_steps: int = 10000
+    min_lr_frac: float = 0.1
+
+
+class OptState(NamedTuple):
+    m: Any
+    v: Any
+    step: jax.Array
+
+
+def init(params, cfg: AdamWConfig) -> OptState:
+    zeros = lambda p: jnp.zeros(p.shape, cfg.moment_dtype)
+    return OptState(m=jax.tree.map(zeros, params),
+                    v=jax.tree.map(zeros, params),
+                    step=jnp.zeros((), jnp.int32))
+
+
+def lr_at(step, cfg: AdamWConfig):
+    """Linear warmup + cosine decay."""
+    t = step.astype(jnp.float32)
+    warm = t / jnp.maximum(cfg.warmup_steps, 1)
+    frac = (t - cfg.warmup_steps) / jnp.maximum(
+        cfg.total_steps - cfg.warmup_steps, 1)
+    frac = jnp.clip(frac, 0.0, 1.0)
+    cos = cfg.min_lr_frac + (1 - cfg.min_lr_frac) * 0.5 \
+        * (1 + jnp.cos(jnp.pi * frac))
+    return cfg.lr * jnp.where(t < cfg.warmup_steps, warm, cos)
+
+
+def global_norm(tree):
+    leaves = jax.tree.leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in leaves))
+
+
+def apply(params, grads, state: OptState, cfg: AdamWConfig):
+    """One AdamW step. Returns (new_params, new_state, metrics)."""
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.grad_clip / (gnorm + 1e-9))
+    step = state.step + 1
+    t = step.astype(jnp.float32)
+    lr = lr_at(step, cfg)
+    bc1 = 1 - cfg.b1 ** t
+    bc2 = 1 - cfg.b2 ** t
+
+    def upd(p, g, m, v):
+        g = g.astype(jnp.float32) * scale
+        m32 = m.astype(jnp.float32)
+        v32 = v.astype(jnp.float32)
+        m_new = cfg.b1 * m32 + (1 - cfg.b1) * g
+        v_new = cfg.b2 * v32 + (1 - cfg.b2) * g * g
+        u = (m_new / bc1) / (jnp.sqrt(v_new / bc2) + cfg.eps)
+        p_new = p.astype(jnp.float32) * (1 - lr * cfg.weight_decay) - lr * u
+        return (p_new.astype(p.dtype), m_new.astype(cfg.moment_dtype),
+                v_new.astype(cfg.moment_dtype))
+
+    out = jax.tree.map(upd, params, grads, state.m, state.v)
+    new_params = jax.tree.map(lambda x: x[0], out,
+                              is_leaf=lambda x: isinstance(x, tuple))
+    new_m = jax.tree.map(lambda x: x[1], out,
+                         is_leaf=lambda x: isinstance(x, tuple))
+    new_v = jax.tree.map(lambda x: x[2], out,
+                         is_leaf=lambda x: isinstance(x, tuple))
+    metrics = dict(grad_norm=gnorm, lr=lr)
+    return new_params, OptState(new_m, new_v, step), metrics

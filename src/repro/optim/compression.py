@@ -1,0 +1,59 @@
+"""Gradient compression for the data-parallel all-reduce.
+
+Two production schemes, both with error feedback (residual accumulation) so
+compression error does not bias convergence:
+
+  - top-k sparsification: keep the k largest-magnitude entries per tensor,
+    all-reduce only those (modeled here as mask-multiply; the wire format
+    on a real cluster is (indices, values)).
+  - int8 quantization: symmetric per-tensor scaling to int8.
+
+Used by launch.train when cfg.grad_compression is set; ~8-64x less DP
+traffic at <1% quality cost at the scales the literature reports.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class CompressionConfig:
+    kind: str = "none"        # none | topk | int8
+    topk_frac: float = 0.01   # fraction of entries kept
+
+
+def init_residuals(params):
+    return jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+
+def compress_decompress(g, residual, cfg: CompressionConfig):
+    """Returns (g_hat, new_residual): g_hat is what survives the wire."""
+    g = g.astype(jnp.float32) + residual
+    if cfg.kind == "none":
+        return g, jnp.zeros_like(g)
+    if cfg.kind == "topk":
+        k = max(1, int(g.size * cfg.topk_frac))
+        flat = jnp.abs(g.reshape(-1))
+        thresh = jax.lax.top_k(flat, k)[0][-1]
+        mask = (jnp.abs(g) >= thresh).astype(g.dtype)
+        g_hat = g * mask
+        return g_hat, g - g_hat
+    if cfg.kind == "int8":
+        scale = jnp.max(jnp.abs(g)) / 127.0 + 1e-12
+        q = jnp.clip(jnp.round(g / scale), -127, 127).astype(jnp.int8)
+        g_hat = q.astype(jnp.float32) * scale
+        return g_hat, g - g_hat
+    raise ValueError(cfg.kind)
+
+
+def apply_tree(grads, residuals, cfg: CompressionConfig):
+    out = jax.tree.map(
+        lambda g, r: compress_decompress(g, r, cfg), grads, residuals)
+    is_tup = lambda x: isinstance(x, tuple)
+    g_hat = jax.tree.map(lambda x: x[0], out, is_leaf=is_tup)
+    new_res = jax.tree.map(lambda x: x[1], out, is_leaf=is_tup)
+    return g_hat, new_res

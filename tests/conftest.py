@@ -1,0 +1,29 @@
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core.gaussians import random_scene, project
+from repro.core.camera import default_camera
+from repro.core.culling import TileGrid
+
+
+@pytest.fixture(scope="session")
+def small_scene():
+    return random_scene(jax.random.PRNGKey(0), 800,
+                        scale_range=(-2.9, -2.2), stretch=4.0,
+                        opacity_range=(-1.5, 3.0), spiky_frac=0.4)
+
+
+@pytest.fixture(scope="session")
+def cam64():
+    return default_camera(64, 64)
+
+
+@pytest.fixture(scope="session")
+def grid64():
+    return TileGrid(64, 64)
+
+
+@pytest.fixture(scope="session")
+def proj64(small_scene, cam64):
+    return project(small_scene, cam64)

@@ -1,0 +1,75 @@
+"""Unit + property tests for projection math."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.gaussians import (quat_to_rotmat, covariance_3d, project,
+                                  classify_spiky, random_scene, _sym2x2_eig)
+from repro.core.camera import default_camera
+
+
+@settings(deadline=None, max_examples=50)
+@given(st.lists(st.floats(-1, 1, allow_nan=False).map(float),
+                min_size=4, max_size=4))
+def test_quat_rotation_orthonormal(q):
+    if sum(abs(x) for x in q) < 1e-3:
+        q = [1.0, 0.0, 0.0, 0.0]
+    R = np.asarray(quat_to_rotmat(jnp.asarray(q)))
+    np.testing.assert_allclose(R @ R.T, np.eye(3), atol=1e-5)
+    assert np.linalg.det(R) == pytest.approx(1.0, abs=1e-5)
+
+
+@settings(deadline=None, max_examples=50)
+@given(st.integers(0, 2**31 - 1))
+def test_cov3d_psd(seed):
+    key = jax.random.PRNGKey(seed)
+    ls = jax.random.uniform(key, (5, 3), minval=-4, maxval=0)
+    q = jax.random.normal(jax.random.fold_in(key, 1), (5, 4))
+    cov = np.asarray(covariance_3d(ls, q))
+    for c in cov:
+        w = np.linalg.eigvalsh(c)
+        assert (w > -1e-8).all()
+
+
+@settings(deadline=None, max_examples=100)
+@given(st.floats(0.01, 10), st.floats(0.01, 10), st.floats(-5, 5))
+def test_sym2x2_eig(a, c, b):
+    # ensure PSD-ish input
+    b = min(abs(b), (a * c) ** 0.5 * 0.99) * (1 if b >= 0 else -1)
+    vals, vecs = _sym2x2_eig(jnp.float32(a), jnp.float32(b), jnp.float32(c))
+    vals, vecs = np.asarray(vals), np.asarray(vecs)
+    M = np.array([[a, b], [b, c]])
+    recon = vecs @ np.diag(vals) @ vecs.T
+    np.testing.assert_allclose(recon, M, atol=1e-3, rtol=1e-3)
+    assert vals[0] >= vals[1] - 1e-6
+
+
+def test_projection_shapes_and_flags(small_scene, cam64, proj64):
+    n = small_scene.n
+    assert proj64.mean2d.shape == (n, 2)
+    assert proj64.conic.shape == (n, 3)
+    assert proj64.in_frustum.dtype == jnp.bool_
+    assert bool(proj64.in_frustum.any())
+    # conic must be PSD where in frustum
+    a, b, c = proj64.conic[:, 0], proj64.conic[:, 1], proj64.conic[:, 2]
+    det = a * c - b * b
+    assert bool((det[proj64.in_frustum] > 0).all())
+    assert bool((proj64.axis_ratio >= 1.0 - 1e-5).all())
+
+
+def test_behind_camera_culled(cam64):
+    scene = random_scene(jax.random.PRNGKey(1), 16)
+    scene = jax.tree.map(lambda x: x, scene)
+    import dataclasses
+    means = scene.means.at[:, 2].set(-5.0)   # behind camera
+    scene = dataclasses.replace(scene, means=means)
+    proj = project(scene, cam64)
+    assert not bool(proj.in_frustum.any())
+
+
+def test_classify_spiky_threshold():
+    ratios = jnp.asarray([1.0, 2.9, 3.0, 10.0])
+    np.testing.assert_array_equal(
+        np.asarray(classify_spiky(ratios)), [False, False, True, True])

@@ -1,0 +1,56 @@
+"""int8 KV cache: decode correctness vs bf16 cache, memory halving."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+import repro.configs as R
+from repro.models.model import Model
+
+
+def _decode_run(cfg, params, toks):
+    model = Model(cfg)
+    b, s = toks.shape
+    caches = model.init_caches(b, s)
+    step = jax.jit(lambda p, c, t: model.decode_step(p, c, t))
+    outs = []
+    for i in range(s):
+        lg, caches = step(params, caches, toks[:, i:i + 1])
+        outs.append(lg)
+    return jnp.stack(outs, axis=1)
+
+
+def test_int8_kv_decode_close_to_bf16():
+    base = R.reduced(R.get_arch("yi-34b"))
+    base = dataclasses.replace(base, attn_chunk=8)
+    model = Model(base)
+    params = model.init(jax.random.PRNGKey(0))
+    toks = jax.random.randint(jax.random.PRNGKey(3), (2, 12), 0,
+                              base.vocab_size, jnp.int32)
+    ref = _decode_run(base, params, toks)
+    quant = _decode_run(dataclasses.replace(base, kv_quant=True),
+                        params, toks)
+    ref32 = np.asarray(ref, np.float32)
+    err = np.abs(np.asarray(quant, np.float32) - ref32)
+    rms = np.sqrt((err ** 2).mean()) / (np.sqrt((ref32 ** 2).mean()) + 1e-9)
+    assert rms < 0.05, rms
+    # greedy tokens almost always agree
+    agree = (ref32.argmax(-1) == np.asarray(quant, np.float32).argmax(-1))
+    assert agree.mean() >= 0.9
+
+
+def test_int8_cache_memory_halves():
+    cfg = R.get_arch("yi-34b")
+    m_bf16 = Model(cfg)
+    m_int8 = Model(dataclasses.replace(cfg, kv_quant=True))
+    c16 = jax.eval_shape(lambda: m_bf16.init_caches(4, 1024))
+    c8 = jax.eval_shape(lambda: m_int8.init_caches(4, 1024))
+
+    def nbytes(t):
+        return sum(np.prod(x.shape) * x.dtype.itemsize
+                   for x in jax.tree.leaves(t))
+
+    ratio = nbytes(c8) / nbytes(c16)
+    assert ratio < 0.6   # int8 values + f32 scales ~ 0.52x of bf16

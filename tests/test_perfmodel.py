@@ -1,0 +1,72 @@
+"""Performance/energy/area model invariants (the paper's claims as tests)."""
+import dataclasses
+
+import pytest
+
+from repro.core import perfmodel as pm
+
+W = pm.Workload(blend_ops=1e7, ctu_prs=8e5, preproc_gaussians=8e3,
+                sort_elems=3e4, dram_bytes=1e6, pixels=16384.0,
+                vru_imbalance=1.8)
+
+
+def test_fifo_depth_monotone_speedup():
+    times = [pm.render_time_s(W, dataclasses.replace(pm.FLICKER_HW,
+                                                     fifo_depth=d))
+             for d in (1, 2, 4, 8, 16, 32, 64, 128)]
+    assert all(a >= b - 1e-12 for a, b in zip(times, times[1:]))
+    # depth 16 captures >= 90% of the 1->128 gain (paper: 96%)
+    gain_16 = times[0] - times[4]
+    gain_128 = times[0] - times[-1]
+    assert gain_16 / gain_128 > 0.90
+
+
+def test_ctu_stall_decreases_with_depth():
+    stalls = [pm.ctu_stall_rate(W, dataclasses.replace(pm.FLICKER_HW,
+                                                       fifo_depth=d))
+              for d in (1, 4, 16, 64)]
+    assert all(a >= b - 1e-12 for a, b in zip(stalls, stalls[1:]))
+    assert 0.0 <= stalls[-1] <= stalls[0] <= 1.0
+
+
+def test_ctu_bound_workload_no_stall():
+    w = dataclasses.replace(W, ctu_prs=1e9)
+    assert pm.ctu_stall_rate(w, pm.FLICKER_HW) == 0.0
+
+
+def test_area_savings_vs_64vru_baseline():
+    ours = pm.area_mm2(pm.FLICKER_HW)["total"]
+    base = pm.area_mm2(pm.BASELINE_64VRU)["total"]
+    saving = 1 - ours / base
+    assert 0.10 < saving < 0.20         # paper: 14%
+
+
+def test_ctu_under_10pct_of_vru_area():
+    a = pm.area_mm2(pm.FLICKER_HW)
+    assert a["ctu"] / a["vru"] < 0.10   # paper: <10%
+
+
+def test_mixed_precision_ctu_cheaper():
+    hw16 = dataclasses.replace(pm.FLICKER_HW, ctu_precision="fp16")
+    assert pm.area_mm2(pm.FLICKER_HW)["ctu"] < pm.area_mm2(hw16)["ctu"]
+    e_mixed = pm.render_energy_j(W, pm.FLICKER_HW)["ctu"]
+    e_fp16 = pm.render_energy_j(W, hw16)["ctu"]
+    assert e_mixed < e_fp16
+
+
+def test_energy_scales_with_work():
+    w2 = dataclasses.replace(W, blend_ops=2 * W.blend_ops)
+    assert pm.energy_j(w2, pm.FLICKER_HW)["total"] > \
+        pm.energy_j(W, pm.FLICKER_HW)["total"]
+
+
+def test_frame_time_is_max_of_stages():
+    t = pm.frame_time_s(W, pm.FLICKER_HW)
+    assert t["t_frame"] == pytest.approx(
+        max(t["t_pre"], t["t_sort"], t["t_render"], t["t_dram"]))
+
+
+def test_gpu_model_slower_than_accel():
+    gpu = pm.gpu_frame(W, pm.XNX_GPU)
+    acc = pm.frame_time_s(W, pm.FLICKER_HW)
+    assert gpu["t_frame"] > acc["t_frame"]
