@@ -1,54 +1,59 @@
-"""Batched-request serving: render an orbit of camera poses through the
-FLICKER pipeline (optionally via the Pallas kernels) and report latency +
-the machine model's projected FPS on the accelerator.
+"""Serving-engine quickstart: a mixed multi-scene request stream (two scenes,
+two resolutions, varying batch sizes) micro-batched through
+`repro.serving.RenderEngine`, with per-request latency splits and the machine
+model's projected FPS on the FLICKER accelerator.
 
-    PYTHONPATH=src python examples/serve_render.py [--frames 6] [--pallas]
+    PYTHONPATH=src python examples/serve_render.py [--requests 12] [--pallas]
 """
 import argparse
-import time
 
 import numpy as np
-import jax
 
-from repro.core import (random_scene, orbit_camera, render_with_stats,
-                        RenderConfig, SamplingMode, MIXED)
-from repro.core import perfmodel as pm
+from repro.core import orbit_camera, RenderConfig
+from repro.serving import RenderEngine, MicroBatcher, register_demo_scenes
 
 
 def main():
     ap = argparse.ArgumentParser()
-    ap.add_argument("--frames", type=int, default=6)
+    ap.add_argument("--requests", type=int, default=12)
     ap.add_argument("--res", type=int, default=128)
     ap.add_argument("--gaussians", type=int, default=4000)
+    ap.add_argument("--max-batch", type=int, default=4)
     ap.add_argument("--pallas", action="store_true")
     args = ap.parse_args()
 
-    scene = random_scene(jax.random.PRNGKey(0), args.gaussians,
-                         scale_range=(-2.9, -2.4), stretch=4.0,
-                         opacity_range=(-1.0, 3.0))
-    cfg = RenderConfig(height=args.res, width=args.res, method="cat",
-                       mode=SamplingMode.SMOOTH_FOCUSED, precision=MIXED,
-                       k_max=args.gaussians, use_pallas=args.pallas)
-    fn = jax.jit(lambda s, c: render_with_stats(s, c, cfg))
+    engine = RenderEngine(RenderConfig(use_pallas=args.pallas),
+                          max_batch=args.max_batch)
+    register_demo_scenes(engine, args.gaussians)
+    batcher = MicroBatcher(engine)
 
-    print(f"serving {args.frames} poses "
-          f"({'pallas' if args.pallas else 'jnp'} path) ...")
-    fps_model = []
-    for i in range(args.frames):
-        cam = orbit_camera(2 * np.pi * i / args.frames, args.res, args.res)
-        t0 = time.perf_counter()
-        out, counters = jax.block_until_ready(fn(scene, cam))
-        dt = time.perf_counter() - t0
-        w = pm.Workload.from_counters(
-            {k: float(v) for k, v in counters.items()},
-            height=args.res, width=args.res)
-        f = pm.frame_time_s(w, pm.FLICKER_HW)["fps"]
-        fps_model.append(f)
-        print(f"  pose {i}: host {dt*1e3:7.1f} ms | modeled FLICKER "
-              f"{f:8.0f} FPS | work/px "
-              f"{float(counters['processed_per_pixel']):6.1f}")
-    print(f"modeled accelerator throughput: {np.mean(fps_model):.0f} FPS "
-          f"(paper targets real-time >> 60)")
+    scenes = engine.scene_names()
+    resolutions = (args.res, max(args.res // 2, 16))
+    print(f"serving {args.requests} requests over {len(scenes)} scenes x "
+          f"{resolutions} px ({'pallas' if args.pallas else 'jnp'} path) ...")
+
+    futures = []
+    for i in range(args.requests):
+        # Scene flips every 2 requests, resolution every 2*len(scenes):
+        # all combinations occur, and consecutive requests still batch.
+        res = resolutions[(i // (2 * len(scenes))) % len(resolutions)]
+        futures.append(batcher.submit(
+            scenes[(i // 2) % len(scenes)],
+            orbit_camera(2 * np.pi * i / args.requests, res, res)))
+        if batcher.pending >= args.max_batch:   # serve in micro-batches
+            batcher.flush()
+    batcher.flush()
+
+    for i, f in enumerate(futures):
+        r = f.result(timeout=0)
+        print(f"  req {i}: {r.frame.request.scene:>6s} "
+              f"{r.image.shape[0]:>3d}px | batch {r.frame.batch_size}"
+              f"/bucket {r.frame.bucket_size} | queue "
+              f"{r.queue_s*1e3:6.1f} ms + render {r.render_s*1e3:7.1f} ms | "
+              f"work/px {float(r.counters['processed_per_pixel']):6.1f}")
+    print(engine.telemetry.format_snapshot())
+    print(f"({engine.compile_count} compiled executables; modeled FPS is the "
+          f"perf model's FLICKER projection — paper targets real-time >> 60)")
 
 
 if __name__ == "__main__":

@@ -1,22 +1,27 @@
 """FLICKER core: contribution-aware 3D Gaussian Splatting in JAX."""
-from repro.core.gaussians import GaussianScene, Projected, project, random_scene
-from repro.core.camera import Camera, default_camera, orbit_camera
+from repro.core.gaussians import (GaussianScene, Projected, project,
+                                  random_scene, pad_scene)
+from repro.core.camera import (Camera, default_camera, orbit_camera,
+                               stack_cameras)
 from repro.core.culling import TileGrid, aabb_mask, obb_mask
 from repro.core.cat import SamplingMode, minitile_cat_mask, pr_gaussian_weight
 from repro.core.hierarchy import hierarchical_test, baseline_masks
 from repro.core.pipeline import (RenderConfig, render, render_with_stats,
+                                 render_batch_with_stats, frame_counters,
                                  psnr, ssim, FLICKER_CONFIG, VANILLA_CONFIG,
                                  GSCORE_CONFIG)
 from repro.core.precision import (PrecisionScheme, FULL_FP32, FULL_FP16,
                                   FULL_FP8, MIXED)
 
 __all__ = [
-    "GaussianScene", "Projected", "project", "random_scene",
-    "Camera", "default_camera", "orbit_camera",
+    "GaussianScene", "Projected", "project", "random_scene", "pad_scene",
+    "Camera", "default_camera", "orbit_camera", "stack_cameras",
     "TileGrid", "aabb_mask", "obb_mask",
     "SamplingMode", "minitile_cat_mask", "pr_gaussian_weight",
     "hierarchical_test", "baseline_masks",
-    "RenderConfig", "render", "render_with_stats", "psnr", "ssim",
+    "RenderConfig", "render", "render_with_stats",
+    "render_batch_with_stats", "frame_counters",
+    "psnr", "ssim",
     "FLICKER_CONFIG", "VANILLA_CONFIG", "GSCORE_CONFIG",
     "PrecisionScheme", "FULL_FP32", "FULL_FP16", "FULL_FP8", "MIXED",
 ]

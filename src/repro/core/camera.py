@@ -42,6 +42,25 @@ def default_camera(width: int = 128, height: int = 128,
     )
 
 
+def stack_cameras(cameras) -> Camera:
+    """Stack a sequence of same-resolution cameras into one batched Camera
+    pytree (leading frame axis on every array leaf; static fields shared).
+
+    The result is what `core.pipeline.render_batch_with_stats` vmaps over.
+    """
+    cameras = list(cameras)
+    if not cameras:
+        raise ValueError("stack_cameras needs at least one camera")
+    ref = cameras[0]
+    for c in cameras[1:]:
+        if (c.width, c.height, c.near) != (ref.width, ref.height, ref.near):
+            raise ValueError(
+                "cannot stack cameras with mixed static fields: "
+                f"{(c.width, c.height, c.near)} vs "
+                f"{(ref.width, ref.height, ref.near)}")
+    return jax.tree.map(lambda *xs: jnp.stack(xs), *cameras)
+
+
 def orbit_camera(theta: float, width: int = 128, height: int = 128,
                  radius: float = 4.0, center=(0.0, 0.0, 4.0),
                  fov_deg: float = 60.0) -> Camera:

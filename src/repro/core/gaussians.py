@@ -19,6 +19,12 @@ from typing import NamedTuple
 import jax
 import jax.numpy as jnp
 
+# Blend threshold shared by the rasterizer, the kernels, and the projection
+# cull below: alpha < ALPHA_MIN is skipped at blend time, so opacity below it
+# is exactly invisible. Defined here (the lowest-level module) so the cull
+# and the blend gate can never disagree.
+ALPHA_MIN = 1.0 / 255.0
+
 
 @jax.tree_util.register_dataclass
 @dataclasses.dataclass(frozen=True)
@@ -117,6 +123,14 @@ def project(scene: GaussianScene, camera) -> Projected:
     """Preprocessing core Step (1): 3D -> 2D features + frustum cull flags.
 
     `camera` is a core.camera.Camera.
+
+    Culling happens here, in the preprocessing stage: behind-camera,
+    off-screen, and — new with the serving engine — opacity below the 1/255
+    blend threshold (such Gaussians are exactly invisible, so culling them
+    early models an accelerator that drops them before the CTU/sort/fetch
+    stages instead of zeroing their alpha at blend time; scenes whose
+    opacities all exceed 1/255, like every synthetic scene in this repo,
+    see identical images AND identical counters either way).
     """
     means = scene.means
     # World -> camera.
@@ -162,11 +176,15 @@ def project(scene: GaussianScene, camera) -> Projected:
     radius = jnp.ceil(3.0 * sigma_major)
     axis_ratio = sigma_major / jnp.maximum(sigma_minor, 1e-12)
 
-    # Frustum: in front and bbox overlaps image.
+    # Frustum: in front, bbox overlaps image, and opacity can ever clear the
+    # blend threshold (alpha = o * exp(-E) <= o, and the rasterizer skips
+    # alpha < ALPHA_MIN — so o < ALPHA_MIN Gaussians are exactly invisible).
+    # The opacity cull keeps `pad_scene` padding inert in every mask/counter.
     on_screen = (
         (px + radius > 0) & (px - radius < camera.width)
         & (py + radius > 0) & (py - radius < camera.height))
-    in_frustum = in_front & on_screen
+    visible = jax.nn.sigmoid(scene.opacity_logits) >= ALPHA_MIN
+    in_frustum = in_front & on_screen & visible
 
     return Projected(
         mean2d=mean2d,
@@ -186,6 +204,39 @@ def project(scene: GaussianScene, camera) -> Projected:
 def classify_spiky(axis_ratio: jax.Array, threshold: float = 3.0) -> jax.Array:
     """Paper §III-A: Smooth (ratio < 3) vs Spiky (ratio >= 3). True = spiky."""
     return axis_ratio >= threshold
+
+
+def pad_scene(scene: GaussianScene, n_target: int) -> GaussianScene:
+    """Pad a scene to `n_target` Gaussians with inert entries.
+
+    Padding Gaussians carry opacity logit -30 (sigmoid ~ 9e-14 < ALPHA_MIN), so
+    `project` frustum-culls them for every camera: they never enter any
+    tile/sub-tile/mini-tile mask, list, counter, or blend. Rendering a padded
+    scene is bitwise-identical to rendering the original except for the
+    static `n_gaussians` counter. Used by the serving engine to bucket scenes
+    of different sizes onto shared compiled executables.
+    """
+    n = scene.n
+    if n_target < n:
+        raise ValueError(f"n_target {n_target} < scene size {n}")
+    if n_target == n:
+        return scene
+    pad = n_target - n
+
+    def ext(x, fill):
+        shape = (pad,) + x.shape[1:]
+        return jnp.concatenate([x, jnp.full(shape, fill, x.dtype)])
+
+    return GaussianScene(
+        means=ext(scene.means, 0.0),
+        log_scales=ext(scene.log_scales, -10.0),
+        quats=jnp.concatenate(
+            [scene.quats,
+             jnp.tile(jnp.asarray([1.0, 0, 0, 0], scene.quats.dtype),
+                      (pad, 1))]),
+        opacity_logits=ext(scene.opacity_logits, -30.0),
+        colors=ext(scene.colors, 0.0),
+    )
 
 
 def random_scene(key: jax.Array, n: int, *, extent: float = 4.0,

@@ -156,6 +156,34 @@ def _effective_cat_counters(proj, grid, hout, lists, entry_alive, cfg):
 
 
 # ---------------------------------------------------------------------------
+# Camera-batched entry point (serving)
+# ---------------------------------------------------------------------------
+
+def render_batch_with_stats(scene: GaussianScene, cameras, cfg: RenderConfig):
+    """Render a batch of camera poses of one scene in a single vmapped call.
+
+    cameras: a batched `core.camera.Camera` pytree (leading frame axis on
+    every array leaf — build it with `core.camera.stack_cameras`). The static
+    fields (width/height/near) must match `cfg.height`/`cfg.width`.
+
+    Returns (RenderOut with a leading frame axis on every field, counters
+    dict of (B,) arrays — one scalar per frame). Frames are independent, so
+    the result equals `render_with_stats` called per camera; batching only
+    buys SIMD width and compile reuse.
+    """
+    if (cameras.height, cameras.width) != (cfg.height, cfg.width):
+        raise ValueError(
+            f"camera resolution {(cameras.height, cameras.width)} != "
+            f"config {(cfg.height, cfg.width)}")
+    return jax.vmap(lambda cam: render_with_stats(scene, cam, cfg))(cameras)
+
+
+def frame_counters(counters: dict, i: int) -> dict:
+    """Slice frame `i`'s scalars out of a batched counters dict."""
+    return {k: v[i] for k, v in counters.items()}
+
+
+# ---------------------------------------------------------------------------
 # Quality metrics
 # ---------------------------------------------------------------------------
 

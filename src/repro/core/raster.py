@@ -20,10 +20,9 @@ from typing import NamedTuple, Optional
 import jax
 import jax.numpy as jnp
 
-from repro.core.gaussians import Projected
+from repro.core.gaussians import Projected, ALPHA_MIN
 from repro.core.culling import TileGrid
 
-ALPHA_MIN = 1.0 / 255.0
 ALPHA_MAX = 0.99
 T_EPS = 1e-4
 

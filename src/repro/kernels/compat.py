@@ -1,0 +1,12 @@
+"""Version-compat shims for the Pallas TPU API.
+
+`pltpu.TPUCompilerParams` was renamed to `pltpu.CompilerParams` in newer JAX
+releases; kernels import the name from here so they run on both sides of the
+rename.
+"""
+from __future__ import annotations
+
+from jax.experimental.pallas import tpu as pltpu
+
+CompilerParams = getattr(pltpu, "CompilerParams", None) \
+    or getattr(pltpu, "TPUCompilerParams")

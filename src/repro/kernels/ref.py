@@ -6,8 +6,8 @@ import jax.numpy as jnp
 
 from repro.core.precision import PrecisionScheme
 from repro.core.cat import pr_gaussian_weight
+from repro.core.gaussians import ALPHA_MIN
 
-ALPHA_MIN = 1.0 / 255.0
 ALPHA_MAX = 0.99
 
 

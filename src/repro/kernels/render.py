@@ -28,7 +28,9 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-ALPHA_MIN = 1.0 / 255.0
+from repro.core.gaussians import ALPHA_MIN
+from repro.kernels.compat import CompilerParams
+
 ALPHA_MAX = 0.99
 
 K_BLK = 128
@@ -119,7 +121,7 @@ def blend_tiles(pix: jax.Array, feat: jax.Array, colors: jax.Array,
             pltpu.VMEM((p,), jnp.float32),
             pltpu.VMEM((p, 3), jnp.float32),
         ],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=CompilerParams(
             dimension_semantics=("arbitrary", "arbitrary")),
         interpret=interpret,
     )(pix.astype(jnp.float32), feat.astype(jnp.float32),

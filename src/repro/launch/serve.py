@@ -1,11 +1,14 @@
 """Serving driver.
 
---mode render : the paper's workload — batched camera requests rendered by
-                the contribution-aware FLICKER pipeline (frames shard over
-                the data axes; each request is one camera pose).
+--mode render : the paper's workload at request level — a mixed multi-scene
+                stream (≥2 scenes, ≥2 resolutions, varying batch sizes)
+                micro-batched through `repro.serving.RenderEngine`; frames
+                shard over the mesh's data axes, buckets keep the jit cache
+                small, telemetry reports latency percentiles + modeled
+                accelerator FPS.
 --mode lm     : prefill + decode loop for any --arch (reduced config on CPU).
 
-    PYTHONPATH=src python -m repro.launch.serve --mode render --frames 8
+    PYTHONPATH=src python -m repro.launch.serve --mode render --frames 16
     PYTHONPATH=src python -m repro.launch.serve --mode lm \
         --arch qwen1.5-0.5b --reduced --prefill 64 --decode 16
 """
@@ -22,29 +25,49 @@ from repro.launch.mesh import make_local_mesh
 
 
 def serve_render(args) -> int:
-    from repro.core import (random_scene, orbit_camera, render_with_stats,
-                            RenderConfig, SamplingMode, MIXED)
-    scene = random_scene(jax.random.PRNGKey(0), args.gaussians,
-                         scale_range=(-2.9, -2.4), stretch=4.0,
-                         opacity_range=(-1.0, 3.0))
-    cfg = RenderConfig(height=args.res, width=args.res, method="cat",
-                       mode=SamplingMode.SMOOTH_FOCUSED, precision=MIXED,
-                       k_max=args.gaussians, use_pallas=args.pallas)
-    render_fn = jax.jit(lambda s, cam: render_with_stats(s, cam, cfg))
+    from repro.core import (orbit_camera, RenderConfig, SamplingMode, MIXED)
+    from repro.serving import (RenderEngine, MicroBatcher,
+                               register_demo_scenes)
 
-    lat = []
-    for i in range(args.frames):
-        cam = orbit_camera(2 * np.pi * i / args.frames,
-                           args.res, args.res)
+    cfg = RenderConfig(method="cat", mode=SamplingMode.SMOOTH_FOCUSED,
+                       precision=MIXED, use_pallas=args.pallas)
+    engine = RenderEngine(cfg, mesh=make_local_mesh(),
+                          max_batch=args.max_batch)
+    register_demo_scenes(engine, args.gaussians)
+    batcher = MicroBatcher(engine)
+
+    # Mixed workload with request locality (real traffic clusters on hot
+    # scenes): the scene flips every 4 requests and the resolution every
+    # 4*len(scenes), so all scene x resolution combinations occur over the
+    # run while consecutive requests still form multi-frame batches. Wave
+    # sizes vary so several batch buckets are exercised.
+    scenes = engine.scene_names()
+    resolutions = (args.res, max(args.res // 2, 16))
+    wave_sizes = [1, 2, 4, args.max_batch]
+    futures, submitted, w = [], 0, 0
+    while submitted < args.frames:
+        wave = min(wave_sizes[w % len(wave_sizes)], args.frames - submitted)
+        for i in range(wave):
+            j = submitted + i
+            res = resolutions[(j // (4 * len(scenes)))
+                              % len(resolutions)]
+            futures.append(batcher.submit(
+                scenes[(j // 4) % len(scenes)],
+                orbit_camera(2 * np.pi * j / args.frames, res, res)))
+        submitted += wave
         t0 = time.perf_counter()
-        out, counters = jax.block_until_ready(render_fn(scene, cam))
-        lat.append(time.perf_counter() - t0)
-        print(f"frame {i}: {lat[-1]*1e3:7.1f} ms  "
-              f"processed/px={float(counters['processed_per_pixel']):6.1f} "
-              f"alpha_mean={float(out.alpha.mean()):.3f}", flush=True)
-    lat = np.array(lat[1:]) if len(lat) > 1 else np.array(lat)
-    print(f"served {args.frames} frames; median {np.median(lat)*1e3:.1f} ms "
-          f"(compile excluded)")
+        served = batcher.flush()
+        w += 1
+        print(f"wave {w}: {served} requests in "
+              f"{(time.perf_counter() - t0)*1e3:7.1f} ms "
+              f"({engine.compile_count} compiles so far)", flush=True)
+
+    for f in futures:
+        f.result(timeout=0)   # all resolved by flush; raises on failure
+    print(engine.telemetry.format_snapshot())
+    print(f"jit cache: {engine.compile_count} executables for "
+          f"{len(scenes)} scenes x {len(resolutions)} resolutions x "
+          f"waves {wave_sizes}")
     return 0
 
 
@@ -96,9 +119,10 @@ def main(argv=None) -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--mode", default="render", choices=["render", "lm"])
     # render
-    ap.add_argument("--frames", type=int, default=4)
+    ap.add_argument("--frames", type=int, default=16)
     ap.add_argument("--res", type=int, default=128)
     ap.add_argument("--gaussians", type=int, default=4000)
+    ap.add_argument("--max-batch", type=int, default=8)
     ap.add_argument("--pallas", action="store_true")
     # lm
     ap.add_argument("--arch", default="qwen1.5-0.5b")

@@ -1,0 +1,22 @@
+"""Request-level serving layer above `core.pipeline`.
+
+    engine     — RenderEngine: scene registry + bucketed jit cache +
+                 vmapped batch rendering
+    batching   — request queue / micro-batcher with per-request futures
+    sharding   — frame-axis device sharding glue over launch.mesh
+    telemetry  — rolling latency percentiles, throughput, and modeled
+                 accelerator FPS from aggregated FLICKER counters
+"""
+from repro.serving.engine import (RenderEngine, RenderRequest, FrameResult,
+                                  batch_bucket, scene_bucket)
+from repro.serving.batching import MicroBatcher, RequestResult
+from repro.serving.telemetry import Telemetry
+from repro.serving.workloads import register_demo_scenes
+
+__all__ = [
+    "RenderEngine", "RenderRequest", "FrameResult",
+    "batch_bucket", "scene_bucket",
+    "MicroBatcher", "RequestResult",
+    "Telemetry",
+    "register_demo_scenes",
+]

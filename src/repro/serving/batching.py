@@ -1,0 +1,108 @@
+"""Micro-batching for mixed render traffic.
+
+Requests against different scenes/resolutions arrive interleaved; the
+`MicroBatcher` queues them, groups pending requests by (scene, resolution)
+— the two keys that determine a compiled executable — chunks each group to
+`max_batch`, and drives `RenderEngine.render_batch`. Callers get a
+`concurrent.futures.Future` per request, resolved with a `RequestResult`
+carrying the frame and its queue/render latency split.
+
+The batcher is synchronous and single-threaded by design: `flush()` drains
+the queue on the caller's thread (a serving loop calls it once per tick),
+which keeps the JAX dispatch single-threaded and the tests deterministic.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from concurrent.futures import Future
+from typing import Optional
+
+from repro.core import Camera
+from repro.serving.engine import RenderEngine, RenderRequest, FrameResult
+
+
+@dataclasses.dataclass(frozen=True)
+class RequestResult:
+    """What a request's future resolves to."""
+    frame: FrameResult
+    queue_s: float            # submit -> batch dispatch
+    render_s: float           # batch wall-clock (shared across the batch)
+    total_s: float            # submit -> result ready
+
+    @property
+    def image(self):
+        return self.frame.image
+
+    @property
+    def counters(self):
+        return self.frame.counters
+
+
+@dataclasses.dataclass
+class _Pending:
+    request: RenderRequest
+    future: Future
+    t_submit: float
+
+
+class MicroBatcher:
+    """Queue + grouper in front of a `RenderEngine`."""
+
+    def __init__(self, engine: RenderEngine,
+                 max_batch: Optional[int] = None):
+        self.engine = engine
+        self.max_batch = max_batch if max_batch is not None \
+            else engine.max_batch
+        if self.max_batch > engine.max_batch:
+            raise ValueError(f"max_batch {self.max_batch} exceeds the "
+                             f"engine's {engine.max_batch}")
+        self._queue: list[_Pending] = []
+        self._next_id = 0
+
+    def submit(self, scene: str, camera: Camera) -> Future:
+        """Enqueue one request; returns a Future[RequestResult]."""
+        req = RenderRequest(scene=scene, camera=camera,
+                            request_id=self._next_id)
+        self._next_id += 1
+        fut: Future = Future()
+        self._queue.append(_Pending(req, fut, time.perf_counter()))
+        return fut
+
+    @property
+    def pending(self) -> int:
+        return len(self._queue)
+
+    def flush(self) -> int:
+        """Drain the queue: group by (scene, resolution), render each chunk,
+        resolve futures. Returns the number of requests served."""
+        work, self._queue = self._queue, []
+        groups: dict[tuple, list[_Pending]] = {}
+        for p in work:                      # FIFO order within each group
+            key = (p.request.scene,
+                   p.request.camera.height, p.request.camera.width)
+            groups.setdefault(key, []).append(p)
+
+        served = 0
+        for key in groups:
+            chunkable = groups[key]
+            for i in range(0, len(chunkable), self.max_batch):
+                chunk = chunkable[i:i + self.max_batch]
+                t_dispatch = time.perf_counter()
+                try:
+                    frames = self.engine.render_batch(
+                        [p.request for p in chunk])
+                except Exception as exc:    # fail the whole chunk's futures
+                    for p in chunk:
+                        p.future.set_exception(exc)
+                    continue
+                t_done = time.perf_counter()
+                for p, frame in zip(chunk, frames):
+                    p.future.set_result(RequestResult(
+                        frame=frame,
+                        queue_s=t_dispatch - p.t_submit,
+                        render_s=frame.render_s,
+                        total_s=t_done - p.t_submit,
+                    ))
+                served += len(chunk)
+        return served

@@ -1,0 +1,210 @@
+"""RenderEngine: multi-scene, bucketed, batched rendering.
+
+The engine is the request-level layer above `core.pipeline`: it holds a
+registry of named `GaussianScene`s and serves whole batches of camera poses
+per jitted call (one `jax.vmap` over the camera pytree, via
+`core.pipeline.render_batch_with_stats`).
+
+Recompiles are the throughput killer at this layer, so every shape the
+compiler sees is bucketed:
+
+  scene bucket — scenes are padded to the next power-of-two Gaussian count
+                 with inert Gaussians (`core.gaussians.pad_scene`; opacity
+                 below the 1/255 blend threshold, frustum-culled for every
+                 camera), so differently-sized scenes share executables;
+  batch bucket — batches are padded to the next power-of-two frame count by
+                 repeating the last camera, and the padding frames are
+                 sliced off the result.
+
+The jit cache is keyed by (scene bucket, RenderConfig, batch bucket);
+`compile_count` counts cache misses (= traces), which tests assert on.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Optional, Sequence
+
+import jax
+
+from repro.core import (GaussianScene, Camera, pad_scene, stack_cameras,
+                        RenderConfig, FLICKER_CONFIG)
+from repro.core.pipeline import render_batch_with_stats, frame_counters
+from repro.serving import sharding as shd
+from repro.serving.telemetry import Telemetry
+
+
+def _next_pow2(n: int) -> int:
+    return 1 if n <= 1 else 1 << (n - 1).bit_length()
+
+
+def scene_bucket(n: int) -> int:
+    """Gaussian-count bucket a scene is padded to."""
+    return _next_pow2(n)
+
+
+def batch_bucket(n: int, max_batch: int) -> int:
+    """Frame-count bucket a batch is padded to: next power of two, clamped
+    to `max_batch` (so a non-power-of-two cap is itself the top bucket and
+    the padded batch never exceeds it)."""
+    return min(_next_pow2(n), max_batch)
+
+
+@dataclasses.dataclass(frozen=True)
+class RenderRequest:
+    """One camera pose against one registered scene."""
+    scene: str
+    camera: Camera
+    request_id: int = -1
+
+
+@dataclasses.dataclass(frozen=True)
+class FrameResult:
+    """Per-request render output (one frame sliced out of its batch)."""
+    request: RenderRequest
+    image: jax.Array          # (H, W, 3)
+    alpha: jax.Array          # (H, W)
+    counters: dict            # scalar jax arrays for this frame
+    batch_size: int           # real frames in the batch that served this
+    bucket_size: int          # padded frame count the executable ran at
+    render_s: float           # wall-clock of the whole batch
+
+
+@dataclasses.dataclass(frozen=True)
+class _SceneEntry:
+    scene: GaussianScene      # padded to `n_bucket` (replicated if mesh)
+    n_real: int
+    n_bucket: int
+    k_max: int
+
+
+class RenderEngine:
+    """Registry of scenes + bucketed jit cache + batch renderer.
+
+    base_config: template RenderConfig; height/width/k_max are overridden
+        per (request resolution, scene) at render time.
+    mesh: optional jax Mesh — batches shard their frame axis over the mesh's
+        data axes and scenes are replicated (serving/sharding.py).
+    max_batch: upper bound on the padded batch bucket.
+    pad_scenes: bucket scene sizes (power-of-two padding with inert
+        Gaussians). Disable to compile one executable per exact scene size.
+    """
+
+    def __init__(self, base_config: RenderConfig = FLICKER_CONFIG, *,
+                 mesh=None, max_batch: int = 64, pad_scenes: bool = True,
+                 telemetry: Optional[Telemetry] = None):
+        self.base_config = base_config
+        self.mesh = mesh
+        self.max_batch = max_batch
+        self.pad_scenes = pad_scenes
+        self.telemetry = telemetry if telemetry is not None else Telemetry()
+        self._scenes: dict[str, _SceneEntry] = {}
+        self._cache: dict[tuple, callable] = {}
+        self.compile_count = 0
+
+    # -- registry -----------------------------------------------------------
+
+    def register_scene(self, name: str, scene: GaussianScene, *,
+                       k_max: Optional[int] = None) -> _SceneEntry:
+        """Register (and bucket-pad) a scene under `name`.
+
+        k_max: per-tile compacted list capacity for this scene; defaults to
+        the padded Gaussian count (no tile can overflow).
+        """
+        n_real = scene.n
+        n_bucket = scene_bucket(n_real) if self.pad_scenes else n_real
+        padded = pad_scene(scene, n_bucket)
+        if self.mesh is not None:
+            padded = shd.replicate(padded, self.mesh)
+        entry = _SceneEntry(scene=padded, n_real=n_real, n_bucket=n_bucket,
+                            k_max=k_max if k_max is not None else n_bucket)
+        self._scenes[name] = entry
+        return entry
+
+    def scene(self, name: str) -> GaussianScene:
+        return self._scenes[name].scene
+
+    def scene_names(self) -> list[str]:
+        return list(self._scenes)
+
+    # -- jit cache ----------------------------------------------------------
+
+    def config_for(self, name: str, height: int, width: int) -> RenderConfig:
+        entry = self._scenes[name]
+        return dataclasses.replace(self.base_config, height=height,
+                                   width=width, k_max=entry.k_max)
+
+    def _render_fn(self, n_bucket: int, cfg: RenderConfig, bucket: int):
+        key = (n_bucket, cfg, bucket)
+        fn = self._cache.get(key)
+        if fn is None:
+            self.compile_count += 1
+            fn = jax.jit(
+                lambda scene, cams: render_batch_with_stats(scene, cams, cfg))
+            self._cache[key] = fn
+        return fn
+
+    # -- rendering ----------------------------------------------------------
+
+    def render_batch(self, requests: Sequence[RenderRequest]) \
+            -> list[FrameResult]:
+        """Render a homogeneous batch (one scene, one resolution) in a
+        single vmapped+jitted call. Use `serving.batching.MicroBatcher` to
+        group mixed traffic into such batches."""
+        requests = list(requests)
+        if not requests:
+            return []
+        names = {r.scene for r in requests}
+        if len(names) != 1:
+            raise ValueError(f"mixed scenes in one batch: {sorted(names)}")
+        name = requests[0].scene
+        if name not in self._scenes:
+            raise KeyError(f"scene {name!r} not registered "
+                           f"(have {self.scene_names()})")
+        res = {(r.camera.height, r.camera.width) for r in requests}
+        if len(res) != 1:
+            raise ValueError(f"mixed resolutions in one batch: {sorted(res)}")
+        (height, width), = res
+        if len(requests) > self.max_batch:
+            raise ValueError(f"batch of {len(requests)} exceeds max_batch="
+                             f"{self.max_batch}; split it upstream")
+
+        entry = self._scenes[name]
+        cfg = self.config_for(name, height, width)
+        n = len(requests)
+        bucket = batch_bucket(n, self.max_batch)
+
+        cameras = [r.camera for r in requests]
+        cameras += [cameras[-1]] * (bucket - n)   # pad: frames are pure
+        cams = stack_cameras(cameras)             # so extras are discarded
+        if self.mesh is not None:
+            cams = shd.shard_frames(cams, self.mesh)
+
+        fn = self._render_fn(entry.n_bucket, cfg, bucket)
+        t0 = time.perf_counter()
+        out, counters = jax.block_until_ready(fn(entry.scene, cams))
+        dt = time.perf_counter() - t0
+
+        # Drop padding frames, then report the *real* Gaussian count — the
+        # perf model's preprocessing/DRAM terms should not charge for inert
+        # scene-bucket padding.
+        counters = {k: v[:n] for k, v in counters.items()}
+        if "n_gaussians" in counters:
+            counters["n_gaussians"] = jax.numpy.full(
+                (n,), float(entry.n_real), jax.numpy.float32)
+        self.telemetry.record_batch(batch_size=n, bucket_size=bucket,
+                                    latency_s=dt, counters=counters,
+                                    height=height, width=width)
+
+        return [
+            FrameResult(
+                request=r,
+                image=out.image[i],
+                alpha=out.alpha[i],
+                counters=frame_counters(counters, i),
+                batch_size=n,
+                bucket_size=bucket,
+                render_s=dt,
+            )
+            for i, r in enumerate(requests)
+        ]

@@ -1,0 +1,48 @@
+"""Frame-axis device sharding for serving batches.
+
+A render batch is a batched `Camera` pytree with a leading frame axis; the
+engine shards that axis over the mesh's data axes (`"pod"` + `"data"`, per
+`distributed.sharding.dp_axes`) and replicates the scene, so one
+`render_batch` call fans frames out across every local device. On the 1-chip
+local mesh this is an explicit (trivial) placement; on a real slice the same
+code splits the batch.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.distributed.sharding import dp_axes
+
+
+def data_parallel_size(mesh: Mesh) -> int:
+    """Number of ways the frame axis splits on `mesh`."""
+    return math.prod(mesh.shape[a] for a in dp_axes(mesh))
+
+
+def frame_sharding(mesh: Mesh, ndim: int) -> NamedSharding:
+    """NamedSharding splitting axis 0 over the data axes, rest replicated."""
+    return NamedSharding(mesh, P(dp_axes(mesh), *([None] * (ndim - 1))))
+
+
+def shard_frames(batch, mesh: Mesh):
+    """Place every array leaf of a frame-batched pytree with its leading axis
+    sharded over the mesh's data axes. Leaves whose frame axis does not
+    divide evenly are left unsharded (the engine's power-of-two buckets make
+    this the exception, not the rule)."""
+    n_dp = data_parallel_size(mesh)
+
+    def place(x):
+        if x.ndim == 0 or x.shape[0] % n_dp != 0:
+            return replicate(x, mesh)
+        return jax.device_put(x, frame_sharding(mesh, x.ndim))
+
+    return jax.tree.map(place, batch)
+
+
+def replicate(tree, mesh: Mesh):
+    """Replicate a pytree (e.g. the scene) across the whole mesh."""
+    return jax.tree.map(
+        lambda x: jax.device_put(x, NamedSharding(mesh, P())), tree)

@@ -1,0 +1,102 @@
+"""Serving telemetry: rolling latency percentiles, throughput, and the
+modeled-accelerator view of the traffic.
+
+Every batch the engine renders is recorded with its wall-clock latency and
+its per-frame FLICKER counters; `snapshot()` folds the rolling window into
+p50/p95/p99 request latency, host frames/sec, and — through
+`core.perfmodel` — the FPS the FLICKER ASIC would sustain on the same
+per-frame workload (the serving-level analogue of the paper's Fig. 10).
+"""
+from __future__ import annotations
+
+import collections
+import dataclasses
+import time
+
+import numpy as np
+
+from repro.core import perfmodel as pm
+
+
+@dataclasses.dataclass(frozen=True)
+class BatchRecord:
+    t_done: float            # perf_counter timestamp when the batch finished
+    batch_size: int          # real frames (excluding bucket padding)
+    bucket_size: int         # padded/compiled batch size
+    latency_s: float         # wall-clock for the whole batch
+    modeled_fps: float       # mean modeled accelerator FPS over the frames
+    counters: dict           # per-frame counter means (python floats)
+
+
+class Telemetry:
+    """Rolling window over the last `window` batches."""
+
+    def __init__(self, window: int = 256, hw: pm.HwConfig = pm.FLICKER_HW):
+        self.hw = hw
+        self._records: collections.deque[BatchRecord] = \
+            collections.deque(maxlen=window)
+        self.total_frames = 0
+        self.total_batches = 0
+
+    def record_batch(self, *, batch_size: int, bucket_size: int,
+                     latency_s: float, counters: dict,
+                     height: int, width: int) -> BatchRecord:
+        """counters: dict of per-frame (B,) arrays for the real frames."""
+        c = {k: np.asarray(v, np.float64) for k, v in counters.items()}
+        fps = [
+            pm.frame_time_s(
+                pm.Workload.from_counters({k: v[i] for k, v in c.items()},
+                                          height=height, width=width),
+                self.hw)["fps"]
+            for i in range(batch_size)
+        ]
+        rec = BatchRecord(
+            t_done=time.perf_counter(),
+            batch_size=batch_size,
+            bucket_size=bucket_size,
+            latency_s=latency_s,
+            modeled_fps=float(np.mean(fps)) if fps else 0.0,
+            counters={k: float(np.mean(v)) for k, v in c.items()},
+        )
+        self._records.append(rec)
+        self.total_frames += batch_size
+        self.total_batches += 1
+        return rec
+
+    def snapshot(self) -> dict:
+        """Fold the window into a stats dict (all python scalars)."""
+        recs = list(self._records)
+        if not recs:
+            return dict(batches=0, frames=0, p50_ms=0.0, p95_ms=0.0,
+                        p99_ms=0.0, fps=0.0, modeled_fps=0.0,
+                        mean_batch=0.0, counters={})
+        lat_ms = np.array([r.latency_s for r in recs]) * 1e3
+        frames = sum(r.batch_size for r in recs)
+        # Throughput over the same window the percentiles describe: from the
+        # first windowed batch's dispatch to the last one's completion (idle
+        # time between batches counts — that is real serving throughput —
+        # but idle/compile time before the window does not).
+        span = max(recs[-1].t_done - (recs[0].t_done - recs[0].latency_s),
+                   1e-9)
+        keys = recs[0].counters.keys()
+        agg = {k: float(np.mean([r.counters.get(k, 0.0) for r in recs]))
+               for k in keys}
+        return dict(
+            batches=len(recs),
+            frames=frames,
+            p50_ms=float(np.percentile(lat_ms, 50)),
+            p95_ms=float(np.percentile(lat_ms, 95)),
+            p99_ms=float(np.percentile(lat_ms, 99)),
+            fps=frames / span,
+            modeled_fps=float(np.mean([r.modeled_fps for r in recs])),
+            mean_batch=frames / len(recs),
+            counters=agg,
+        )
+
+    def format_snapshot(self) -> str:
+        s = self.snapshot()
+        return (f"{s['frames']} frames / {s['batches']} batches "
+                f"(mean batch {s['mean_batch']:.1f}) | host {s['fps']:.1f} "
+                f"fps | latency p50 {s['p50_ms']:.1f} / p95 {s['p95_ms']:.1f}"
+                f" / p99 {s['p99_ms']:.1f} ms | modeled FLICKER "
+                f"{s['modeled_fps']:.0f} fps")

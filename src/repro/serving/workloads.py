@@ -1,0 +1,31 @@
+"""Shared demo workload: the two-scene registry used by the serve CLI, the
+example, and the serving tests — one definition so they cannot diverge.
+Scene knobs mirror `benchmarks/common.py`'s synthetic stand-ins for the
+paper's captures (screen-space sigma ~2-3 px, ~40% spiky)."""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+
+from repro.core import random_scene
+from repro.serving.engine import RenderEngine
+
+DEMO_SCENE_KW = dict(scale_range=(-2.9, -2.4), stretch=4.0,
+                     opacity_range=(-1.0, 3.0))
+
+
+def register_demo_scenes(engine: RenderEngine, n_gaussians: int, *,
+                         sizes: Optional[dict] = None,
+                         k_max: Optional[int] = None) -> list[str]:
+    """Register the standard mixed workload: 'train' at `n_gaussians`,
+    'truck' at 3/4 of it (override both via `sizes={name: n}`). Returns the
+    registered scene names."""
+    if sizes is None:
+        sizes = {"train": n_gaussians,
+                 "truck": max(n_gaussians * 3 // 4, 16)}
+    for seed, (name, n) in enumerate(sizes.items()):
+        engine.register_scene(
+            name, random_scene(jax.random.PRNGKey(seed), n, **DEMO_SCENE_KW),
+            k_max=k_max)
+    return list(sizes)

@@ -1,0 +1,215 @@
+"""Serving engine: batched == per-frame, bucket padding is inert, the jit
+cache actually caches, batching/futures behave, telemetry is sane."""
+import numpy as np
+import pytest
+
+import jax
+
+from repro.core import (random_scene, orbit_camera, stack_cameras,
+                        render_with_stats, RenderConfig)
+from repro.launch.mesh import make_local_mesh
+from repro.serving import (RenderEngine, RenderRequest, MicroBatcher,
+                           batch_bucket, scene_bucket, register_demo_scenes)
+from repro.serving.workloads import DEMO_SCENE_KW
+
+CFG = RenderConfig(height=32, width=32)
+
+
+def small_engine(**kw):
+    eng = RenderEngine(CFG, max_batch=8, **kw)
+    # 300 and 500 both bucket to 512 — exercised by the cache-sharing test.
+    register_demo_scenes(eng, 0, sizes={"train": 300, "truck": 500})
+    return eng
+
+
+@pytest.fixture(scope="module")
+def engine():
+    return small_engine()
+
+
+def orbit(i, res=32, n=8):
+    return orbit_camera(2 * np.pi * i / n, res, res)
+
+
+# ---------------------------------------------------------------------------
+# buckets
+# ---------------------------------------------------------------------------
+
+def test_buckets():
+    assert [scene_bucket(n) for n in (1, 2, 3, 300, 512)] == \
+        [1, 2, 4, 512, 512]
+    assert batch_bucket(3, max_batch=8) == 4
+    assert batch_bucket(5, max_batch=8) == 8
+    assert batch_bucket(1, max_batch=8) == 1
+
+
+# ---------------------------------------------------------------------------
+# batched render == per-frame render
+# ---------------------------------------------------------------------------
+
+def test_batched_equals_per_frame(engine):
+    """Mixed 2-scene workload: every engine frame matches a direct
+    `render_with_stats` call on the engine's (padded) scene."""
+    for name in ("train", "truck"):
+        reqs = [RenderRequest(name, orbit(i)) for i in range(3)]
+        results = engine.render_batch(reqs)
+        cfg = engine.config_for(name, 32, 32)
+        ref_fn = jax.jit(lambda s, c: render_with_stats(s, c, cfg))
+        for i, r in enumerate(results):
+            out, ctr = ref_fn(engine.scene(name), reqs[i].camera)
+            np.testing.assert_allclose(np.asarray(r.image),
+                                       np.asarray(out.image), atol=1e-5)
+            for k in r.counters:
+                if k == "n_gaussians":   # engine reports the un-padded count
+                    continue
+                np.testing.assert_allclose(np.asarray(r.counters[k]),
+                                           np.asarray(ctr[k]), rtol=1e-5,
+                                           err_msg=k)
+
+
+def test_reported_n_gaussians_is_real_count(engine):
+    r, = engine.render_batch([RenderRequest("train", orbit(0))])
+    assert float(r.counters["n_gaussians"]) == 300.0   # not the 512 bucket
+
+
+# ---------------------------------------------------------------------------
+# padding never changes results
+# ---------------------------------------------------------------------------
+
+def test_batch_bucket_padding_inert(engine):
+    """A 3-request batch runs at bucket 4 (one padding frame); results must
+    match the same requests served one at a time (bucket 1)."""
+    reqs = [RenderRequest("truck", orbit(i)) for i in range(3)]
+    batched = engine.render_batch(reqs)
+    assert all(r.bucket_size == 4 for r in batched)
+    for req, r in zip(reqs, batched):
+        single, = engine.render_batch([req])
+        assert single.bucket_size == 1
+        np.testing.assert_allclose(np.asarray(r.image),
+                                   np.asarray(single.image), atol=1e-6)
+
+
+def test_scene_bucket_padding_inert():
+    """pad_scenes=True (300 -> 512 Gaussians) must not change any image or
+    counter vs the exact-size scene (same k_max)."""
+    a = RenderEngine(CFG, max_batch=8, pad_scenes=True)
+    b = RenderEngine(CFG, max_batch=8, pad_scenes=False)
+    scene = random_scene(jax.random.PRNGKey(2), 300, **DEMO_SCENE_KW)
+    a.register_scene("s", scene, k_max=300)
+    b.register_scene("s", scene, k_max=300)
+    reqs = [RenderRequest("s", orbit(i)) for i in range(2)]
+    ra = a.render_batch(reqs)
+    rb = b.render_batch(reqs)
+    for x, y in zip(ra, rb):
+        np.testing.assert_allclose(np.asarray(x.image), np.asarray(y.image),
+                                   atol=1e-6)
+        for k in x.counters:
+            if k == "n_gaussians":
+                continue
+            np.testing.assert_allclose(np.asarray(x.counters[k]),
+                                       np.asarray(y.counters[k]), rtol=1e-5,
+                                       err_msg=k)
+
+
+# ---------------------------------------------------------------------------
+# jit cache
+# ---------------------------------------------------------------------------
+
+def test_jit_cache_hits_on_repeated_buckets():
+    eng = small_engine()
+    reqs = [RenderRequest("train", orbit(i)) for i in range(3)]
+    eng.render_batch(reqs)
+    assert eng.compile_count == 1
+    # Same (scene bucket, cfg, batch bucket) -> cache hit, even with
+    # different cameras and a different real batch size within the bucket.
+    eng.render_batch([RenderRequest("train", orbit(7)),
+                      RenderRequest("train", orbit(5)),
+                      RenderRequest("train", orbit(3)),
+                      RenderRequest("train", orbit(1))])
+    assert eng.compile_count == 1
+    # truck (500) pads to the same 512 bucket with the same k_max -> shared
+    # executable across scenes.
+    eng.render_batch([RenderRequest("truck", orbit(i)) for i in range(4)])
+    assert eng.compile_count == 1
+    # A new batch bucket compiles once.
+    eng.render_batch([RenderRequest("train", orbit(0))])
+    assert eng.compile_count == 2
+    eng.render_batch([RenderRequest("truck", orbit(1))])
+    assert eng.compile_count == 2
+
+
+# ---------------------------------------------------------------------------
+# batching / futures
+# ---------------------------------------------------------------------------
+
+def test_microbatcher_mixed_workload(engine):
+    mb = MicroBatcher(engine, max_batch=4)
+    futs = [mb.submit("train" if i % 2 == 0 else "truck", orbit(i))
+            for i in range(6)]
+    assert mb.pending == 6
+    assert mb.flush() == 6
+    assert mb.pending == 0
+    for i, f in enumerate(futs):
+        r = f.result(timeout=0)
+        assert r.frame.request.scene == ("train" if i % 2 == 0 else "truck")
+        assert r.frame.batch_size == 3      # grouped by scene
+        assert r.image.shape == (32, 32, 3)
+        assert 0.0 <= r.queue_s <= r.total_s
+        assert r.render_s > 0.0
+
+
+def test_microbatcher_unknown_scene_fails_future(engine):
+    mb = MicroBatcher(engine)
+    fut = mb.submit("nope", orbit(0))
+    mb.flush()
+    with pytest.raises(KeyError):
+        fut.result(timeout=0)
+
+
+def test_engine_rejects_mixed_batches(engine):
+    with pytest.raises(ValueError):
+        engine.render_batch([RenderRequest("train", orbit(0)),
+                             RenderRequest("truck", orbit(1))])
+    with pytest.raises(ValueError):
+        engine.render_batch([RenderRequest("train", orbit(0, res=32)),
+                             RenderRequest("train", orbit(1, res=64))])
+
+
+def test_stack_cameras_rejects_mixed_static():
+    with pytest.raises(ValueError):
+        stack_cameras([orbit(0, res=32), orbit(1, res=64)])
+
+
+# ---------------------------------------------------------------------------
+# sharding (local 1-device mesh) — same results as unmeshed
+# ---------------------------------------------------------------------------
+
+def test_mesh_sharded_engine_matches(engine):
+    meshed = small_engine(mesh=make_local_mesh())
+    reqs = [RenderRequest("train", orbit(i)) for i in range(2)]
+    a = engine.render_batch(reqs)
+    b = meshed.render_batch(reqs)
+    for x, y in zip(a, b):
+        np.testing.assert_allclose(np.asarray(x.image), np.asarray(y.image),
+                                   atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# telemetry
+# ---------------------------------------------------------------------------
+
+def test_telemetry_percentiles_sane():
+    eng = small_engine()
+    mb = MicroBatcher(eng)
+    for i in range(5):
+        mb.submit("train", orbit(i))
+        mb.submit("truck", orbit(i))
+    mb.flush()
+    s = eng.telemetry.snapshot()
+    assert s["frames"] == 10
+    assert s["batches"] == 2
+    assert 0.0 < s["p50_ms"] <= s["p95_ms"] <= s["p99_ms"]
+    assert s["fps"] > 0.0
+    assert s["modeled_fps"] > 0.0
+    assert s["counters"]["processed_per_pixel"] >= 0.0
+    assert "fps" in eng.telemetry.format_snapshot()
