@@ -1,0 +1,192 @@
+"""Fused vs unfused rasterizer: FPS and processed-Gaussians/frame deltas.
+
+Compares the two Pallas blend kernels on identical per-tile operands
+(kernel-vs-kernel, so the delta is exactly the fused skipping logic):
+
+  unfused  kernels.render.blend_tiles        — full K sweep every tile
+  fused    kernels.render.blend_tiles_fused  — in-kernel early termination
+                                               + per-tile adaptive trip count
+
+and the two end-to-end pipelines (`RenderConfig(fused=...)`, jnp CAT mask).
+The default scene has high opacity so tiles saturate early — the regime the
+paper's VRU early termination targets. Reported per backend:
+
+  raster_fps          blend-stage frames/sec (jitted, compile excluded)
+  swept_per_pixel     Gaussian list slots each pixel lane actually swept
+  processed_per_pixel contribution-aware processed count (equal across
+                      backends by construction — parity, not a delta)
+  speedup_raster      fused raster_fps / unfused raster_fps (JSON root)
+
+On CPU both kernels run in interpret mode; the raster-stage speedup is real
+skipped work (`pl.when` guards whole K blocks) but absolute FPS is
+emulation-scale, and skipped blocks still pay the interpreter's per-block
+operand materialization — the measured speedup is therefore well below the
+K-block work reduction (e.g. ~1.4x at 85% fewer blocks on the default
+config). The e2e rows additionally pit the fused kernel against the *jnp*
+parity rasterizer (the pipeline's unfused default), whose XLA-compiled CPU
+code has no interpret overhead to skip, so e2e can dip below 1.0x on CPU —
+raster kernel-vs-kernel is the apples-to-apples number; on a real TPU
+backend both paths compile.
+
+    PYTHONPATH=src python benchmarks/fused_raster.py [--quick] [--out f.json]
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import random_scene, default_camera, project, RenderConfig
+from repro.core.gaussians import GaussianScene
+from repro.core.precision import MIXED
+from repro.core import raster
+from repro.core.hierarchy import hierarchical_test
+from repro.core.pipeline import render_with_stats
+from repro.kernels import ops as kops, render as krender
+
+
+def _time(fn, repeats: int) -> float:
+    jax.block_until_ready(fn())            # compile + warm up
+    t0 = time.perf_counter()
+    for _ in range(repeats):
+        jax.block_until_ready(fn())
+    return (time.perf_counter() - t0) / repeats
+
+
+def make_scene(args) -> GaussianScene:
+    if args.scene == "wall":
+        # Opaque near wall + far population: every tile's transmittance
+        # collapses within the first K block while lists stay long —
+        # exercises the transmittance stop, not just the trip-count bound.
+        n_front = max(args.gaussians // 5, 50)
+        front = random_scene(jax.random.PRNGKey(1), n_front,
+                             scale_range=(-1.0, -0.6), stretch=1.2,
+                             opacity_range=(3.5, 4.5), spiky_frac=0.0)
+        back = random_scene(jax.random.PRNGKey(2), args.gaussians - n_front,
+                            scale_range=(-2.0, -1.6), stretch=1.5,
+                            opacity_range=(0.0, 2.0))
+        back = dataclasses.replace(back,
+                                   means=back.means.at[:, 2].add(5.0))
+        return jax.tree.map(lambda a, b: jnp.concatenate([a, b]),
+                            front, back)
+    return random_scene(jax.random.PRNGKey(0), args.gaussians,
+                        scale_range=(-2.6, -2.1), stretch=3.0,
+                        opacity_range=(args.opacity_lo, args.opacity_hi))
+
+
+def bench(args) -> dict:
+    scene = make_scene(args)
+    cam = default_camera(args.res, args.res)
+    cfg = RenderConfig(height=args.res, width=args.res, method="cat",
+                       precision=MIXED, k_max=args.k_max)
+    grid = cfg.grid()
+
+    # Shared operands: project -> hierarchy -> compacted lists -> gather.
+    proj = project(scene, cam)
+    h = hierarchical_test(proj, grid, cfg.mode, cfg.precision)
+    order = raster.depth_order(proj)
+    lists, valid, _ = raster.compact_tile_lists(h.tile_mask, order, cfg.k_max)
+    operands = kops.gather_tile_features(proj, grid, lists, valid,
+                                         h.minitile_mask)
+    operands = jax.block_until_ready(operands)
+
+    unfused_fn = jax.jit(lambda o: krender.blend_tiles(*o))
+    fused_fn = jax.jit(lambda o: krender.blend_tiles_fused(*o))
+
+    t_unfused = _time(lambda: unfused_fn(operands), args.repeats)
+    t_fused = _time(lambda: fused_fn(operands), args.repeats)
+
+    fb = fused_fn(operands)
+    kproc = float(jnp.sum(fb.kblocks_processed))
+    ktotal = float(grid.num_tiles * fb.kblocks_total)
+
+    # End-to-end pipelines (compile excluded). The unfused comparator is the
+    # parity path the fused kernel is tested against.
+    e2e = {}
+    for name, fused in (("unfused", False), ("fused", True)):
+        c = dataclasses.replace(cfg, fused=fused)
+        fn = jax.jit(lambda s, cm, c=c: render_with_stats(s, cm, c))
+        e2e[name] = dict(t=_time(lambda: fn(scene, cam), args.repeats))
+        _, counters = jax.block_until_ready(fn(scene, cam))
+        e2e[name]["swept_per_pixel"] = float(counters["swept_per_pixel"])
+        e2e[name]["processed_per_pixel"] = float(
+            counters["processed_per_pixel"])
+
+    results = dict(
+        config=dict(gaussians=args.gaussians, res=args.res,
+                    k_max=args.k_max, repeats=args.repeats,
+                    scene=args.scene,
+                    opacity_range=[args.opacity_lo, args.opacity_hi]),
+        raster=dict(
+            unfused=dict(fps=1.0 / t_unfused, ms=1e3 * t_unfused,
+                         swept_per_pixel=float(fb.kblocks_total
+                                               * krender.K_BLK)),
+            fused=dict(fps=1.0 / t_fused, ms=1e3 * t_fused,
+                       swept_per_pixel=kproc * krender.K_BLK
+                       / grid.num_tiles,
+                       kblocks_processed=kproc, kblocks_total=ktotal),
+        ),
+        e2e=dict(
+            unfused=dict(fps=1.0 / e2e["unfused"]["t"],
+                         swept_per_pixel=e2e["unfused"]["swept_per_pixel"],
+                         processed_per_pixel=e2e["unfused"][
+                             "processed_per_pixel"]),
+            fused=dict(fps=1.0 / e2e["fused"]["t"],
+                       swept_per_pixel=e2e["fused"]["swept_per_pixel"],
+                       processed_per_pixel=e2e["fused"][
+                           "processed_per_pixel"]),
+        ),
+        speedup_raster=t_unfused / t_fused,
+        speedup_e2e=e2e["unfused"]["t"] / e2e["fused"]["t"],
+        work_reduction=1.0 - kproc / ktotal,
+    )
+    return results
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--gaussians", type=int, default=3000)
+    ap.add_argument("--res", type=int, default=64)
+    ap.add_argument("--k-max", type=int, default=1024)
+    ap.add_argument("--repeats", type=int, default=6)
+    ap.add_argument("--opacity-lo", type=float, default=1.5)
+    ap.add_argument("--opacity-hi", type=float, default=4.0)
+    ap.add_argument("--scene", choices=("wall", "random"), default="wall",
+                    help="'wall' saturates tiles early (transmittance "
+                         "termination dominates); 'random' is sparser "
+                         "(adaptive trip count dominates)")
+    ap.add_argument("--quick", action="store_true",
+                    help="small scene, 2 repeats (CI smoke)")
+    ap.add_argument("--out", type=str, default=None,
+                    help="write results JSON here (default: print only)")
+    args = ap.parse_args()
+    if args.quick:
+        args.gaussians, args.res, args.k_max, args.repeats = 300, 32, 256, 2
+
+    r = bench(args)
+    print(f"\nfused raster benchmark ({args.gaussians} Gaussians, "
+          f"{args.res}px, k_max={args.k_max})")
+    print(f"{'path':>10s} {'raster fps':>11s} {'e2e fps':>9s} "
+          f"{'swept/px':>9s} {'proc/px':>8s}")
+    for name in ("unfused", "fused"):
+        print(f"{name:>10s} {r['raster'][name]['fps']:>11.2f} "
+              f"{r['e2e'][name]['fps']:>9.2f} "
+              f"{r['e2e'][name]['swept_per_pixel']:>9.1f} "
+              f"{r['e2e'][name]['processed_per_pixel']:>8.1f}")
+    print(f"raster speedup {r['speedup_raster']:.2f}x | e2e speedup "
+          f"{r['speedup_e2e']:.2f}x | K-block work reduction "
+          f"{100 * r['work_reduction']:.0f}%")
+
+    if args.out:
+        with open(args.out, "w") as f:
+            json.dump(r, f, indent=2)
+        print(f"wrote {args.out}")
+    return r
+
+
+if __name__ == "__main__":
+    main()

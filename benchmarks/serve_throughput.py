@@ -9,6 +9,7 @@ is a visible fraction of frame time — the default workload (100 Gaussians,
 is the speedup over batch size 1.
 
     PYTHONPATH=src python benchmarks/serve_throughput.py [--pallas-too]
+                                                         [--fused-too]
 
 Notes: (1) with large scenes/resolutions on CPU the per-frame compute
 (hundreds of ms) swamps dispatch overhead and the curve flattens into
@@ -31,9 +32,8 @@ from repro.core import random_scene, orbit_camera, RenderConfig
 from repro.serving import RenderEngine, RenderRequest
 
 
-def bench_backend(use_pallas: bool, args) -> list[dict]:
-    engine = RenderEngine(RenderConfig(use_pallas=use_pallas),
-                          max_batch=max(args.batches))
+def bench_backend(label: str, cfg: RenderConfig, args) -> list[dict]:
+    engine = RenderEngine(cfg, max_batch=max(args.batches))
     engine.register_scene("bench", random_scene(
         jax.random.PRNGKey(0), args.gaussians, scale_range=(-2.9, -2.4),
         stretch=4.0, opacity_range=(-1.0, 3.0)))
@@ -49,9 +49,13 @@ def bench_backend(use_pallas: bool, args) -> list[dict]:
             engine.render_batch(reqs)
         dt = time.perf_counter() - t0
         fps = bs * args.repeats / dt
-        rows.append(dict(backend="pallas" if use_pallas else "jnp",
-                         batch=bs, fps=fps,
-                         ms_per_frame=1e3 * dt / (bs * args.repeats)))
+        counters = engine.telemetry.snapshot()["counters"]
+        rows.append(dict(backend=label, batch=bs, fps=fps,
+                         ms_per_frame=1e3 * dt / (bs * args.repeats),
+                         proc_px=counters.get("processed_per_pixel",
+                                              float("nan")),
+                         swept_px=counters.get("swept_per_pixel",
+                                               float("nan"))))
     return rows
 
 
@@ -64,23 +68,30 @@ def main():
     ap.add_argument("--pallas-too", action="store_true",
                     help="also run the (slow, interpreted-on-CPU) "
                          "pallas path")
+    ap.add_argument("--fused-too", action="store_true",
+                    help="also run the fused contribution-aware raster "
+                         "path (Pallas blend kernel with in-kernel early "
+                         "termination; interpreted on CPU)")
     args = ap.parse_args()
     # The eff baseline and trend check assume ascending batch sizes.
     args.batches = sorted(set(args.batches))
 
-    rows = bench_backend(False, args)
+    rows = bench_backend("jnp", RenderConfig(), args)
     if args.pallas_too:
-        rows += bench_backend(True, args)
+        rows += bench_backend("pallas", RenderConfig(use_pallas=True), args)
+    if args.fused_too:
+        rows += bench_backend("fused", RenderConfig(fused=True), args)
 
     print(f"\nserve throughput ({args.gaussians} Gaussians, {args.res}px, "
           f"{args.repeats} repeats)")
     print(f"{'backend':>8s} {'batch':>6s} {'frames/s':>10s} "
-          f"{'ms/frame':>9s} {'eff':>6s}")
+          f"{'ms/frame':>9s} {'proc/px':>8s} {'swept/px':>9s} {'eff':>6s}")
     base = {}
     for r in rows:
         base.setdefault(r["backend"], r["fps"])
         print(f"{r['backend']:>8s} {r['batch']:>6d} {r['fps']:>10.2f} "
-              f"{r['ms_per_frame']:>9.1f} "
+              f"{r['ms_per_frame']:>9.1f} {r['proc_px']:>8.1f} "
+              f"{r['swept_px']:>9.1f} "
               f"{r['fps'] / base[r['backend']]:>5.2f}x")
     for backend in {r["backend"] for r in rows}:
         fs = [r["fps"] for r in rows if r["backend"] == backend]

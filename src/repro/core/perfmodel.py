@@ -11,6 +11,16 @@ pipeline (core.hierarchy / core.pipeline counters):
     sort        — Gaussian instances sorted
     dram bytes  — geometric/color feature traffic (clustering-aware)
 
+With the fused raster path (`RenderConfig(fused=True)`) the blend/termination
+counters are *measured by the Pallas kernel that does the work* rather than
+modeled after the fact: `processed_per_pixel` (-> blend_ops below) and
+`entry_alive` (-> the `*_eff` CTU counters) come out of
+`kernels.render.blend_tiles_fused`. The fused-only `swept_per_pixel`
+counter (dense lane sweep after early termination + adaptive trip counts)
+describes the *TPU kernel's* work, not the modeled ASIC's, so it is
+deliberately not a model input — serving telemetry and
+`benchmarks/fused_raster.py` surface it directly.
+
 Machine configurations mirror §V-A: FLICKER = 4 rendering cores × (4×2) VRUs
 (32 VRUs) + 4 CTUs (2 PRs/cycle each) + 4 sorting units + 4 preprocessing
 cores @ 1 GHz, LPDDR4 51.2 GB/s; GSCore = 64 VRUs + OBB, no CTU; the
@@ -113,6 +123,8 @@ class Workload:
     def from_counters(counters: dict, *, height: int, width: int,
                       dram_bytes: float | None = None) -> "Workload":
         c = {k: float(v) for k, v in counters.items()}
+        # blend_ops comes from processed_per_pixel — kernel-measured on the
+        # fused raster path, modeled (same accounting) on the jnp path.
         blend = c.get("processed_per_pixel", 0.0) * height * width
         n = c.get("n_gaussians", 0.0)
         # Prefer termination-aware effective CTU counts when available.

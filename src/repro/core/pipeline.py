@@ -1,13 +1,25 @@
 """End-to-end 3DGS render pipeline (preprocess -> test -> sort -> blend).
 
-`render()` is the public entry point: jit-able, differentiable w.r.t. the
-scene (for training), and configurable across the paper's design space:
+Entry points: `render_batch_with_stats()` renders a batch of camera poses
+in one vmapped call and is what serving traffic goes through
+(`serving.RenderEngine` jits it per shape bucket); `render()` /
+`render_with_stats()` are the single-camera forms — jit-able,
+differentiable w.r.t. the scene (for training), and configurable across
+the paper's design space:
 
     method      'aabb' (vanilla) | 'obb' (GSCore) | 'cat' (FLICKER)
     mode        leader-pixel sampling mode for 'cat'
     precision   CTU precision scheme ('cat' only)
     k_max       per-tile compacted list capacity (the JAX analogue of the
                 paper's FIFO-depth resource knob)
+    use_pallas  route the CAT test through the Pallas PRTU kernel
+    fused       route blending through the fused contribution-aware Pallas
+                kernel: true in-kernel early termination + per-tile adaptive
+                trip count, with work counters measured by the kernel itself
+                (kernels.render.blend_tiles_fused). The default (unfused)
+                path is the differentiable pure-jnp rasterizer that models
+                the same counters — it is the parity fallback the fused path
+                is tested against.
 """
 from __future__ import annotations
 
@@ -39,6 +51,7 @@ class RenderConfig:
     spiky_threshold: float = 3.0
     background: float = 0.0
     use_pallas: bool = False                  # route CAT through the kernel
+    fused: bool = False                       # fused raster path (see above)
 
     def grid(self) -> TileGrid:
         return TileGrid(self.height, self.width, self.tile, self.subtile,
@@ -90,9 +103,18 @@ def render_with_stats(scene: GaussianScene, camera, cfg: RenderConfig):
     order = raster.depth_order(proj)
     lists, valid, overflow = raster.compact_tile_lists(tile_mask, order,
                                                        cfg.k_max)
-    out = raster.render_tiles(proj, grid, lists, valid, mini_mask,
-                              cfg.background, overflow)
     counters = dict(counters)
+    if cfg.fused:
+        from repro.kernels import ops as kops
+        out, fused_counters = kops.render_tiles_fused(
+            proj, grid, lists, valid, mini_mask, cfg.background, overflow)
+        counters.update(fused_counters)
+    else:
+        out = raster.render_tiles(proj, grid, lists, valid, mini_mask,
+                                  cfg.background, overflow)
+        # The unfused sweep always walks the full padded list.
+        counters["swept_per_pixel"] = jnp.asarray(float(lists.shape[1]),
+                                                  jnp.float32)
     counters["processed_per_pixel"] = jnp.mean(out.processed_per_pixel)
     counters["blended_per_pixel"] = jnp.mean(out.blended_per_pixel)
 

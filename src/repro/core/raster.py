@@ -8,10 +8,16 @@ Gaussians that no mini-tile in the tile needs.
 All blending math matches vanilla 3DGS [2]:
     alpha = min(0.99, o * exp(-E)),  skip if alpha < 1/255
     T_i = prod_{j<i} (1 - alpha_j),  c = sum_i T_i c_i alpha_i
-Early termination (T < 1e-4) is modeled by the processed-Gaussian counters
-(the quantity the accelerator's speedup derives from); the image itself is
-computed with the full cumulative product, which differs by < 1e-4 in
-transmittance-weighted contribution and is invisible at 8-bit PSNR.
+In this (pure-jnp, differentiable) path, early termination (T < T_EPS) is
+modeled by the processed-Gaussian counters — the quantities the
+accelerator's speedup derives from — while the image is computed with the
+full cumulative product, which differs by < 1e-4 in transmittance-weighted
+contribution and is invisible at 8-bit PSNR. The serving hot path
+(`RenderConfig(fused=True)` -> `kernels.render.blend_tiles_fused`) performs
+the termination for real inside the Pallas kernel and measures the same
+counters there; `kernels/ops.render_tiles_fused` reassembles its outputs
+into the same `RenderOut` via `untile` below, so both paths are
+interchangeable downstream.
 """
 from __future__ import annotations
 
@@ -68,6 +74,18 @@ def compact_tile_lists(mask: jax.Array, order: jax.Array, k_max: int):
     valid = lists >= 0
     overflow = jnp.any(jnp.sum(mask, axis=1) > k_max)
     return lists, valid, overflow
+
+
+def untile(grid: TileGrid, x: jax.Array) -> jax.Array:
+    """Reassemble per-tile pixel data (T, P, ...) into image space (H, W, ...).
+
+    P must be grid.tile**2 with pixels in row-major order within the tile —
+    the layout `_pixel_offsets` produces and both blend paths preserve.
+    """
+    c = x.shape[2:]
+    x = x.reshape(grid.tiles_y, grid.tiles_x, grid.tile, grid.tile, *c)
+    x = jnp.moveaxis(x, 2, 1)  # (ty, tile, tx, tile, ...)
+    return x.reshape(grid.height, grid.width, *c)
 
 
 def _pixel_offsets(tile: int):
@@ -157,17 +175,10 @@ def render_tiles(proj: Projected, grid: TileGrid,
             tile_origins, lists, valid, g_mean_all, g_conic_all, g_op_all,
             g_col_all, allow_all)
 
-    # Reassemble (T, P, ...) -> (H, W, ...)
-    def untile(x):
-        c = x.shape[2:]
-        x = x.reshape(grid.tiles_y, grid.tiles_x, grid.tile, grid.tile, *c)
-        x = jnp.moveaxis(x, 2, 1)  # (ty, tile, tx, tile, ...)
-        return x.reshape(grid.height, grid.width, *c)
-
     return RenderOut(
-        image=untile(rgb), alpha=untile(acc),
-        processed_per_pixel=untile(processed.astype(jnp.float32)),
-        blended_per_pixel=untile(blended.astype(jnp.float32)),
+        image=untile(grid, rgb), alpha=untile(grid, acc),
+        processed_per_pixel=untile(grid, processed.astype(jnp.float32)),
+        blended_per_pixel=untile(grid, blended.astype(jnp.float32)),
         overflow=jnp.asarray(overflow),
         entry_alive=entry_alive,
     )

@@ -1,4 +1,11 @@
-"""Jit'd wrappers routing the render pipeline through the Pallas kernels."""
+"""Jit'd wrappers routing the render pipeline through the Pallas kernels.
+
+Two blend routes exist on top of the shared operand gather
+(`gather_tile_features`): `blend_tiles_pallas` is the full-sweep kernel and
+`render_tiles_fused` is the contribution-aware kernel with true in-kernel
+early termination; the latter also converts the kernel's measured work
+counters into the pipeline's `RenderOut` + counters-dict convention.
+"""
 from __future__ import annotations
 
 import jax
@@ -9,6 +16,7 @@ from repro.core.culling import TileGrid
 from repro.core.cat import SamplingMode
 from repro.core.precision import PrecisionScheme
 from repro.core import hierarchy as H
+from repro.core import raster
 from repro.kernels import prtu, render as krender
 from repro.kernels import ref as kref
 
@@ -47,7 +55,6 @@ def gather_tile_features(proj: Projected, grid: TileGrid, lists, valid,
 
     Returns (pix (T,P,2), feat (T,K,8), colors (T,K,3), valid_i8 (T,K),
     allow (T,K,P))."""
-    from repro.core import raster
     t_origins = grid.tile_origins().astype(jnp.float32)   # (T, 2)
     poffs = raster._pixel_offsets(grid.tile)              # (P, 2)
     pix = t_origins[:, None, :] + poffs[None, :, :]       # (T, P, 2)
@@ -89,3 +96,53 @@ def blend_tiles_pallas(proj, grid, lists, valid, minitile_mask=None,
 def blend_tiles_reference(proj, grid, lists, valid, minitile_mask=None):
     ops = gather_tile_features(proj, grid, lists, valid, minitile_mask)
     return kref.blend_tiles_ref(*ops)
+
+
+def blend_tiles_fused_pallas(proj, grid, lists, valid, minitile_mask=None,
+                             interpret: bool = True) \
+        -> krender.FusedBlendOut:
+    ops = gather_tile_features(proj, grid, lists, valid, minitile_mask)
+    return krender.blend_tiles_fused(*ops, interpret=interpret)
+
+
+def render_tiles_fused(proj, grid, lists, valid, minitile_mask=None,
+                       background: float = 0.0,
+                       overflow: jax.Array | bool = False,
+                       interpret: bool = True):
+    """Fused-kernel drop-in for `core.raster.render_tiles`.
+
+    Returns (RenderOut, counters dict). The RenderOut fields come from the
+    kernel's own measurements (processed/blended/entry_alive), and the dict
+    adds the sweep-level counters only the fused kernel can report:
+
+      kblocks_processed  — K blocks the kernel actually executed (summed
+                           over tiles; termination + adaptive trip count)
+      kblocks_total      — K blocks a full sweep would execute
+      swept_per_pixel    — Gaussian list slots each pixel lane swept,
+                           averaged over tiles (the unfused path always
+                           sweeps the padded k_max)
+
+    `alpha` is derived as 1 - transmittance — the identity sum(T_excl·a) =
+    1 - prod(1-a) holds telescopically inside the kernel too, so it equals
+    the blended accumulation exactly up to the terminated tail (< T_EPS).
+    """
+    fb = blend_tiles_fused_pallas(proj, grid, lists, valid, minitile_mask,
+                                  interpret=interpret)
+    acc = 1.0 - fb.trans
+    rgb = fb.rgb + background * fb.trans[:, :, None]
+    out = raster.RenderOut(
+        image=raster.untile(grid, rgb),
+        alpha=raster.untile(grid, acc),
+        processed_per_pixel=raster.untile(grid, fb.processed),
+        blended_per_pixel=raster.untile(grid, fb.blended),
+        overflow=jnp.asarray(overflow),
+        entry_alive=fb.entry_alive,
+    )
+    kproc = jnp.sum(fb.kblocks_processed).astype(jnp.float32)
+    ktotal = float(grid.num_tiles * fb.kblocks_total)
+    counters = dict(
+        kblocks_processed=kproc,
+        kblocks_total=jnp.asarray(ktotal, jnp.float32),
+        swept_per_pixel=kproc * krender.K_BLK / grid.num_tiles,
+    )
+    return out, counters

@@ -23,6 +23,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.kernels.compat import CompilerParams
+
 M_BLK = 128   # mini-tiles per block (sublane-friendly)
 G_BLK = 128   # gaussians per block (lane dimension)
 
@@ -150,6 +152,11 @@ def prtu_cat_mask(p_top: jax.Array, p_bot: jax.Array, mu: jax.Array,
         ],
         out_specs=pl.BlockSpec((M_BLK, G_BLK), lambda i, j: (i, j)),
         out_shape=jax.ShapeDtypeStruct((mp, gp), jnp.int8),
+        # Unlike the blend kernels there is no carried state: every
+        # (mini-tile, Gaussian) block is independent, so both grid axes are
+        # parallel and Mosaic may reorder/overlap them freely.
+        compiler_params=CompilerParams(
+            dimension_semantics=("parallel", "parallel")),
         interpret=interpret,
     )(p_top_p, p_bot_p, mu_p, conic_p, lhs_p, spiky_p)
     return out[:m, :g]

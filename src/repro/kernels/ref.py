@@ -7,6 +7,8 @@ import jax.numpy as jnp
 from repro.core.precision import PrecisionScheme
 from repro.core.cat import pr_gaussian_weight
 from repro.core.gaussians import ALPHA_MIN
+from repro.core.raster import T_EPS
+from repro.kernels.render import K_BLK
 
 ALPHA_MAX = 0.99
 
@@ -34,6 +36,63 @@ def prtu_cat_mask_ref(p_top, p_bot, mu, conic, lhs, spiky, *,
     else:
         raise ValueError(mode)
     return out.astype(jnp.int8)
+
+
+def blend_tiles_fused_ref(pix, feat, colors, valid, allow,
+                          k_blk: int = K_BLK, t_eps: float = T_EPS):
+    """Oracle for kernels.render.blend_tiles_fused's measured counters.
+
+    Computes the full (no-termination) sweep, then derives what the fused
+    kernel must report: per-pixel processed/blended counts and per-entry
+    alive flags under the T >= t_eps rule, and the number of K blocks the
+    kernel executes — block j of tile t runs iff j is within the tile's
+    occupied-block bound and some pixel is still above t_eps entering it.
+    (The kernel's carried transmittance equals the full cumulative product
+    at every block it executes, and a skipped tile stays dead, so deriving
+    liveness from the full product is exact.)
+
+    Returns (rgb, trans, processed, blended, entry_alive, kblocks_processed,
+    kblocks_total) shaped like `FusedBlendOut` — rgb/trans are the *full*
+    sweep, which the fused kernel matches to < t_eps.
+    """
+    px = pix[..., 0][:, :, None]                      # (T, P, 1)
+    py = pix[..., 1][:, :, None]
+    mx = feat[..., 0][:, None, :]                     # (T, 1, K)
+    my = feat[..., 1][:, None, :]
+    cxx = feat[..., 2][:, None, :]
+    cxy = feat[..., 3][:, None, :]
+    cyy = feat[..., 4][:, None, :]
+    op = feat[..., 5][:, None, :]
+    dx = px - mx
+    dy = py - my
+    e = 0.5 * (cxx * dx * dx + cyy * dy * dy) + cxy * dx * dy
+    a = jnp.minimum(op * jnp.exp(-e), ALPHA_MAX)      # (T, P, K)
+    lane = (valid[:, None, :] != 0) & (jnp.swapaxes(allow, 1, 2) != 0)
+    a = jnp.where(lane & (a >= ALPHA_MIN), a, 0.0)
+    tcum = jnp.cumprod(1.0 - a, axis=-1)
+    t_excl = jnp.concatenate([jnp.ones_like(tcum[..., :1]),
+                              tcum[..., :-1]], axis=-1)
+    w = t_excl * a
+    rgb = jnp.einsum("tpk,tkc->tpc", w, colors)
+    trans = tcum[..., -1]
+
+    alive = t_excl >= t_eps                           # (T, P, K)
+    processed = jnp.sum((lane & alive).astype(jnp.float32), axis=-1)
+    blended = jnp.sum(((a > 0) & alive).astype(jnp.float32), axis=-1)
+    entry_alive = jnp.any(alive, axis=1) & (valid != 0)   # (T, K)
+
+    k = valid.shape[1]
+    n_blocks = -(-k // k_blk)
+    nvalid = jnp.sum((valid != 0).astype(jnp.int32), axis=1)
+    kb_bound = -(-nvalid // k_blk)                    # (T,)
+    starts = jnp.arange(n_blocks) * k_blk
+    # t_excl at each block's first entry; starts < k always (n_blocks from k).
+    t_enter = t_excl[:, :, starts]                    # (T, P, n_blocks)
+    tile_alive = jnp.any(t_enter >= t_eps, axis=1)    # (T, n_blocks)
+    runs = tile_alive & (jnp.arange(n_blocks)[None, :] < kb_bound[:, None])
+    kblocks_processed = jnp.sum(runs.astype(jnp.int32), axis=1)
+    return (rgb, trans, processed, blended, entry_alive, kblocks_processed,
+            n_blocks)
 
 
 def blend_tiles_ref(pix, feat, colors, valid, allow):

@@ -1,4 +1,4 @@
-"""Pallas tile alpha-blend kernel — the VRU array on TPU.
+"""Pallas tile alpha-blend kernels — the VRU array on TPU.
 
 One grid step blends a (P pixels × K_BLK Gaussians) block of a tile's
 compacted, depth-sorted list. The sequential transmittance dependency runs
@@ -10,6 +10,29 @@ at block granularity, and all pixel lanes blend the same Gaussian in
 lockstep — which is precisely why the CAT compaction upstream matters (no
 masked-out lanes).
 
+Two kernels share that skeleton:
+
+`blend_tiles` (`_blend_kernel`) — the full sweep: every K block of every
+tile is blended; contribution skipping only shows up in the per-pixel CAT
+`allow` mask.
+
+`blend_tiles_fused` (`_fused_blend_kernel`) — the contribution-aware hot
+path. It folds the paper's two in-loop skipping decisions into the kernel:
+
+  * true tile-level early termination: once every pixel lane of the tile
+    has transmittance T < T_EPS, the remaining K blocks of the tile are
+    skipped entirely (`pl.when` on the carried VMEM transmittance) — the
+    VRU-array behavior of "the rendering of the current tile can terminate
+    early" rather than a counter model of it;
+  * per-tile adaptive trip count: a scalar-prefetched (T,) bound (number of
+    occupied K blocks per compacted list) keeps short tiles from sweeping
+    the longest tile's padding.
+
+The fused kernel also *measures* its own work instead of having the
+perf model re-derive it: per-pixel processed/blended counts, per-entry
+`entry_alive` flags (which drive the CTU accounting upstream), and the
+per-tile count of K blocks actually executed all come back as outputs.
+
 Inputs are pre-gathered per-tile feature blocks (the analogue of the feature
 FIFOs in Fig. 6):
     pix    (T, P, 2)  pixel centers
@@ -17,11 +40,13 @@ FIFOs in Fig. 6):
     colors (T, K, 3)
     valid  (T, K)     int8 (list slot occupied)
     allow  (T, K, P)  int8 per-pixel CAT/mini-tile mask
-Output: (T, P, 3) blended RGB + (T, P) final transmittance.
+Output: (T, P, 3) blended RGB + (T, P) final transmittance (+ the measured
+work counters for the fused kernel; see `FusedBlendOut`).
 """
 from __future__ import annotations
 
 import functools
+from typing import NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
@@ -29,6 +54,9 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 from repro.core.gaussians import ALPHA_MIN
+from repro.core.raster import T_EPS  # transmittance floor: all pixel lanes
+#                                      below => tile terminated; shared with
+#                                      the jnp rasterizer's modeled counters
 from repro.kernels.compat import CompilerParams
 
 ALPHA_MAX = 0.99
@@ -128,3 +156,179 @@ def blend_tiles(pix: jax.Array, feat: jax.Array, colors: jax.Array,
       colors.astype(jnp.float32), valid.astype(jnp.int8),
       allow.astype(jnp.int8))
     return rgb, trans
+
+
+# ---------------------------------------------------------------------------
+# Fused contribution-aware kernel (early termination + adaptive trip count)
+# ---------------------------------------------------------------------------
+
+
+class FusedBlendOut(NamedTuple):
+    rgb: jax.Array                # (T, P, 3) blended color
+    trans: jax.Array              # (T, P) transmittance at termination
+    processed: jax.Array          # (T, P) f32 Gaussians touched while alive
+    blended: jax.Array            # (T, P) f32 Gaussians actually blended
+    entry_alive: jax.Array        # (T, K) bool list entry seen pre-termination
+    kblocks_processed: jax.Array  # (T,) i32 K blocks the kernel executed
+    kblocks_total: int            # static: K blocks a full sweep would run
+
+
+def _fused_blend_kernel(kb_ref, pix_ref, feat_ref, col_ref, valid_ref,
+                        allow_ref, rgb_ref, trans_ref, proc_ref, blnd_ref,
+                        alive_ref, kproc_ref, t_scr, acc_scr, pcnt_scr,
+                        bcnt_scr, kp_scr, *, n_kblocks: int):
+    i = pl.program_id(0)
+    k = pl.program_id(1)
+
+    @pl.when(k == 0)
+    def _init():
+        t_scr[...] = jnp.ones_like(t_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+        pcnt_scr[...] = jnp.zeros_like(pcnt_scr)
+        bcnt_scr[...] = jnp.zeros_like(bcnt_scr)
+        kp_scr[0] = 0
+
+    # Skipped blocks (terminated tile or past the tile's occupied bound)
+    # report no live entries; the active branch overwrites this.
+    alive_ref[0] = jnp.zeros_like(alive_ref[0])
+
+    # The fused decision: run this block only while (a) the compacted list
+    # still has entries here and (b) some pixel lane is above the
+    # transmittance floor. Both guards skip the block's whole dataflow.
+    active = (k < kb_ref[i]) & jnp.any(t_scr[...] >= T_EPS)
+
+    @pl.when(active)
+    def _blend():
+        pix = pix_ref[0]                   # (P, 2)
+        feat = feat_ref[0]                 # (K, 8)
+        col = col_ref[0]                   # (K, 3)
+        valid = valid_ref[0]               # (K,)
+        allow = allow_ref[0]               # (K, P)
+
+        px = pix[:, 0][:, None]            # (P, 1)
+        py = pix[:, 1][:, None]
+        mx = feat[:, 0][None, :]           # (1, K)
+        my = feat[:, 1][None, :]
+        cxx = feat[:, 2][None, :]
+        cxy = feat[:, 3][None, :]
+        cyy = feat[:, 4][None, :]
+        op = feat[:, 5][None, :]
+
+        dx = px - mx                       # (P, K)
+        dy = py - my
+        e = 0.5 * (cxx * dx * dx + cyy * dy * dy) + cxy * dx * dy
+        a = jnp.minimum(op * jnp.exp(-e), ALPHA_MAX)
+        lane = (valid[None, :] != 0) & (allow.T != 0)   # (P, K)
+        a = jnp.where(lane & (a >= ALPHA_MIN), a, 0.0)
+
+        cum = jnp.cumprod(1.0 - a, axis=1)
+        t_in = t_scr[...][:, None]         # (P, 1) carried transmittance
+        t_excl = t_in * jnp.concatenate(
+            [jnp.ones_like(cum[:, :1]), cum[:, :-1]], axis=1)
+        w = t_excl * a                     # (P, K)
+        acc_scr[...] += w @ col
+        t_scr[...] *= cum[:, -1]
+
+        # Measured work — same accounting as core.raster.render_tiles, but
+        # produced by the kernel that did the work.
+        alive_px = t_excl >= T_EPS         # (P, K)
+        pcnt_scr[...] += jnp.sum((lane & alive_px).astype(jnp.float32),
+                                 axis=1)
+        bcnt_scr[...] += jnp.sum(((a > 0) & alive_px).astype(jnp.float32),
+                                 axis=1)
+        alive_ref[0] = (jnp.any(alive_px, axis=0)
+                        & (valid != 0)).astype(jnp.int8)
+        kp_scr[0] += 1
+
+    @pl.when(k == n_kblocks - 1)
+    def _out():
+        rgb_ref[0] = acc_scr[...]
+        trans_ref[0] = t_scr[...]
+        proc_ref[0] = pcnt_scr[...]
+        blnd_ref[0] = bcnt_scr[...]
+        kproc_ref[0, 0] = kp_scr[0]
+
+
+def blend_tiles_fused(pix: jax.Array, feat: jax.Array, colors: jax.Array,
+                      valid: jax.Array, allow: jax.Array,
+                      kblock_bound: Optional[jax.Array] = None,
+                      interpret: bool = True) -> FusedBlendOut:
+    """Contribution-aware blend with in-kernel early termination.
+
+    Same operands as `blend_tiles`. `kblock_bound` is the optional (T,) i32
+    count of occupied K blocks per tile (computed from `valid` when None);
+    it is scalar-prefetched so the grid's K loop for tile t runs at most
+    `kblock_bound[t]` live iterations, and the transmittance guard cuts even
+    those short once the tile saturates. Image/transmittance match the full
+    sweep to < T_EPS per channel (every skipped contribution has weight
+    T·a < T_EPS); the work counters match `core.raster.render_tiles`'s
+    accounting exactly.
+    """
+    t, p, _ = pix.shape
+    k = feat.shape[1]
+    kp = -(-k // K_BLK) * K_BLK
+    if kp != k:
+        padk = kp - k
+        feat = jnp.pad(feat, ((0, 0), (0, padk), (0, 0)))
+        colors = jnp.pad(colors, ((0, 0), (0, padk), (0, 0)))
+        valid = jnp.pad(valid, ((0, 0), (0, padk)))
+        allow = jnp.pad(allow, ((0, 0), (0, padk), (0, 0)))
+    n_kblocks = kp // K_BLK
+
+    if kblock_bound is None:
+        # Compacted lists put valid entries first, so the occupied-block
+        # count is ceil(popcount / K_BLK).
+        nvalid = jnp.sum((valid != 0).astype(jnp.int32), axis=1)
+        kblock_bound = -(-nvalid // K_BLK)
+    kblock_bound = kblock_bound.astype(jnp.int32)
+
+    kernel = functools.partial(_fused_blend_kernel, n_kblocks=n_kblocks)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(t, n_kblocks),
+        in_specs=[
+            pl.BlockSpec((1, p, 2), lambda i, j, kb: (i, 0, 0)),
+            pl.BlockSpec((1, K_BLK, 8), lambda i, j, kb: (i, j, 0)),
+            pl.BlockSpec((1, K_BLK, 3), lambda i, j, kb: (i, j, 0)),
+            pl.BlockSpec((1, K_BLK), lambda i, j, kb: (i, j)),
+            pl.BlockSpec((1, K_BLK, p), lambda i, j, kb: (i, j, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, p, 3), lambda i, j, kb: (i, 0, 0)),
+            pl.BlockSpec((1, p), lambda i, j, kb: (i, 0)),
+            pl.BlockSpec((1, p), lambda i, j, kb: (i, 0)),
+            pl.BlockSpec((1, p), lambda i, j, kb: (i, 0)),
+            pl.BlockSpec((1, K_BLK), lambda i, j, kb: (i, j)),
+            pl.BlockSpec((1, 1), lambda i, j, kb: (i, 0)),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((p,), jnp.float32),      # transmittance carry
+            pltpu.VMEM((p, 3), jnp.float32),    # rgb accumulator
+            pltpu.VMEM((p,), jnp.float32),      # processed counter
+            pltpu.VMEM((p,), jnp.float32),      # blended counter
+            pltpu.SMEM((1,), jnp.int32),        # executed-block counter
+        ],
+    )
+    rgb, trans, proc, blnd, alive, kproc = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=[
+            jax.ShapeDtypeStruct((t, p, 3), jnp.float32),
+            jax.ShapeDtypeStruct((t, p), jnp.float32),
+            jax.ShapeDtypeStruct((t, p), jnp.float32),
+            jax.ShapeDtypeStruct((t, p), jnp.float32),
+            jax.ShapeDtypeStruct((t, kp), jnp.int8),
+            jax.ShapeDtypeStruct((t, 1), jnp.int32),
+        ],
+        compiler_params=CompilerParams(
+            dimension_semantics=("arbitrary", "arbitrary")),
+        interpret=interpret,
+    )(kblock_bound, pix.astype(jnp.float32), feat.astype(jnp.float32),
+      colors.astype(jnp.float32), valid.astype(jnp.int8),
+      allow.astype(jnp.int8))
+    return FusedBlendOut(
+        rgb=rgb, trans=trans, processed=proc, blended=blnd,
+        entry_alive=(alive[:, :k] != 0),
+        kblocks_processed=kproc[:, 0],
+        kblocks_total=n_kblocks,
+    )

@@ -16,8 +16,11 @@ compiler sees is bucketed:
                  repeating the last camera, and the padding frames are
                  sliced off the result.
 
-The jit cache is keyed by (scene bucket, RenderConfig, batch bucket);
-`compile_count` counts cache misses (= traces), which tests assert on.
+The jit cache is keyed by (scene bucket, RenderConfig, batch bucket); the
+RenderConfig component carries the raster-path flags (`fused`, `use_pallas`),
+so fused and unfused traffic compile and cache separately instead of
+retracing each other. `compile_count` counts cache misses (= traces), which
+tests assert on.
 """
 from __future__ import annotations
 
@@ -88,11 +91,17 @@ class RenderEngine:
     max_batch: upper bound on the padded batch bucket.
     pad_scenes: bucket scene sizes (power-of-two padding with inert
         Gaussians). Disable to compile one executable per exact scene size.
+    fused: when not None, overrides base_config.fused — serve through the
+        fused contribution-aware raster kernel (True) or the pure-jnp
+        parity path (False). Part of the jit-cache key either way.
     """
 
     def __init__(self, base_config: RenderConfig = FLICKER_CONFIG, *,
                  mesh=None, max_batch: int = 64, pad_scenes: bool = True,
-                 telemetry: Optional[Telemetry] = None):
+                 telemetry: Optional[Telemetry] = None,
+                 fused: Optional[bool] = None):
+        if fused is not None:
+            base_config = dataclasses.replace(base_config, fused=fused)
         self.base_config = base_config
         self.mesh = mesh
         self.max_batch = max_batch

@@ -1,3 +1,5 @@
+import dataclasses
+
 import jax
 import jax.numpy as jnp
 import pytest
@@ -12,6 +14,25 @@ def small_scene():
     return random_scene(jax.random.PRNGKey(0), 800,
                         scale_range=(-2.9, -2.2), stretch=4.0,
                         opacity_range=(-1.5, 3.0), spiky_frac=0.4)
+
+
+@pytest.fixture(scope="session")
+def wall_scene():
+    """Opaque near 'wall' in front of a large far population.
+
+    Every pixel's transmittance collapses below T_EPS within the first
+    ~hundred depth-ordered list entries while the compacted per-tile lists
+    stay several K blocks long — the regime tile-level early termination
+    targets (front-to-back blending makes everything behind the wall dead
+    work)."""
+    front = random_scene(jax.random.PRNGKey(1), 600,
+                         scale_range=(-1.0, -0.6), stretch=1.2,
+                         opacity_range=(3.5, 4.5), spiky_frac=0.0)
+    back = random_scene(jax.random.PRNGKey(2), 2500,
+                        scale_range=(-2.0, -1.6), stretch=1.5,
+                        opacity_range=(0.0, 2.0))
+    back = dataclasses.replace(back, means=back.means.at[:, 2].add(5.0))
+    return jax.tree.map(lambda a, b: jnp.concatenate([a, b]), front, back)
 
 
 @pytest.fixture(scope="session")

@@ -18,8 +18,8 @@ from repro.core.precision import FULL_FP32
 from repro.core.cat import SamplingMode
 
 
-def _cfg(method="aabb", **kw):
-    return RenderConfig(height=64, width=64, method=method, k_max=800,
+def _cfg(method="aabb", k_max=800, **kw):
+    return RenderConfig(height=64, width=64, method=method, k_max=k_max,
                         precision=FULL_FP32, **kw)
 
 
@@ -104,3 +104,40 @@ def test_k_max_overflow_flag(small_scene, cam64):
     out, _ = render_with_stats(small_scene, cam64,
                                dataclasses.replace(_cfg("aabb"), k_max=4))
     assert bool(out.overflow)
+
+
+# ---------------------------------------------------------------------------
+# Early termination: fused kernel vs modeled counters
+# ---------------------------------------------------------------------------
+
+
+def test_early_termination_image_identical_less_work(wall_scene, cam64):
+    """Tiles that saturate opacity early must render the same image with
+    strictly fewer swept Gaussian slots on the fused path."""
+    cfg = _cfg("cat", k_max=768)
+    out_m, c_m = render_with_stats(wall_scene, cam64, cfg)
+    out_k, c_k = render_with_stats(wall_scene, cam64,
+                                   dataclasses.replace(cfg, fused=True))
+    np.testing.assert_allclose(np.asarray(out_k.image),
+                               np.asarray(out_m.image), atol=2e-4)
+    assert float(c_k["swept_per_pixel"]) < float(c_m["swept_per_pixel"])
+    # termination happened inside the occupied bound, not just list padding
+    assert float(c_k["kblocks_processed"]) < float(c_k["kblocks_total"])
+
+
+def test_early_termination_counters_match_model(wall_scene, cam64):
+    """The kernel-measured counters must equal the jnp rasterizer's modeled
+    counters entry for entry (same T >= T_EPS accounting)."""
+    cfg = _cfg("cat", k_max=768)
+    out_m, c_m = render_with_stats(wall_scene, cam64, cfg)
+    out_k, c_k = render_with_stats(wall_scene, cam64,
+                                   dataclasses.replace(cfg, fused=True))
+    np.testing.assert_array_equal(np.asarray(out_k.processed_per_pixel),
+                                  np.asarray(out_m.processed_per_pixel))
+    np.testing.assert_array_equal(np.asarray(out_k.blended_per_pixel),
+                                  np.asarray(out_m.blended_per_pixel))
+    np.testing.assert_array_equal(np.asarray(out_k.entry_alive),
+                                  np.asarray(out_m.entry_alive))
+    for key in ("processed_per_pixel", "blended_per_pixel", "ctu_prs_eff",
+                "vru_pairs_eff", "ctu_stream_len"):
+        assert float(c_k[key]) == pytest.approx(float(c_m[key])), key

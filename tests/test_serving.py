@@ -184,6 +184,27 @@ def test_stack_cameras_rejects_mixed_static():
 # sharding (local 1-device mesh) — same results as unmeshed
 # ---------------------------------------------------------------------------
 
+def test_fused_engine_matches_and_caches_separately(engine):
+    """fused=True serves the same images (within kernel tolerance) through
+    its own jit-cache entries, and its counters carry the kernel-measured
+    swept work."""
+    fused = small_engine(fused=True)
+    assert fused.base_config.fused
+    reqs = [RenderRequest("train", orbit(i)) for i in range(2)]
+    a = engine.render_batch(reqs)
+    b = fused.render_batch(reqs)
+    for x, y in zip(a, b):
+        np.testing.assert_allclose(np.asarray(x.image), np.asarray(y.image),
+                                   atol=2e-4)
+        assert float(y.counters["swept_per_pixel"]) <= \
+            float(x.counters["swept_per_pixel"])
+        assert "kblocks_processed" in y.counters
+    # same bucket shapes, different RenderConfig => separate trace
+    n = fused.compile_count
+    fused.render_batch(reqs)
+    assert fused.compile_count == n
+
+
 def test_mesh_sharded_engine_matches(engine):
     meshed = small_engine(mesh=make_local_mesh())
     reqs = [RenderRequest("train", orbit(i)) for i in range(2)]

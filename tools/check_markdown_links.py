@@ -1,0 +1,67 @@
+#!/usr/bin/env python
+"""Check that intra-repo markdown links resolve to existing files.
+
+Scans every tracked *.md file for inline links/images `[text](target)`,
+skips external (http/https/mailto) targets and pure in-page anchors, strips
+`#fragment` suffixes, and verifies the target exists relative to the linking
+file (or the repo root for absolute-style `/` links). Exits non-zero with a
+list of broken links — CI runs this in the docs job.
+
+    python tools/check_markdown_links.py [root]
+"""
+from __future__ import annotations
+
+import re
+import sys
+from pathlib import Path
+
+# Inline markdown link/image: [text](target) — ignores reference-style and
+# autolinks, which this repo does not use for intra-repo paths.
+LINK_RE = re.compile(r"!?\[[^\]]*\]\(([^)\s]+)(?:\s+\"[^\"]*\")?\)")
+
+SKIP_DIRS = {".git", ".venv", "node_modules", "__pycache__"}
+
+
+def iter_md_files(root: Path):
+    for path in sorted(root.rglob("*.md")):
+        if not any(part in SKIP_DIRS for part in path.parts):
+            yield path
+
+
+def check(root: Path) -> list[str]:
+    errors = []
+    for md in iter_md_files(root):
+        text = md.read_text(encoding="utf-8")
+        for match in LINK_RE.finditer(text):
+            target = match.group(1)
+            if target.startswith(("http://", "https://", "mailto:", "#")):
+                continue
+            path_part = target.split("#", 1)[0]
+            if not path_part:
+                continue
+            if path_part.startswith("/"):
+                resolved = root / path_part.lstrip("/")
+            else:
+                resolved = md.parent / path_part
+            if not resolved.exists():
+                errors.append(f"{md.relative_to(root)}: broken link "
+                              f"-> {target}")
+    return errors
+
+
+def main() -> int:
+    root = Path(sys.argv[1]) if len(sys.argv) > 1 else Path(".")
+    root = root.resolve()
+    errors = check(root)
+    n_files = len(list(iter_md_files(root)))
+    if errors:
+        print(f"{len(errors)} broken intra-repo markdown link(s):")
+        for e in errors:
+            print(f"  {e}")
+        return 1
+    print(f"markdown links OK ({n_files} files scanned)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
