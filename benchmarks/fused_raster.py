@@ -43,8 +43,7 @@ import jax.numpy as jnp
 from repro.core import random_scene, default_camera, project, RenderConfig
 from repro.core.gaussians import GaussianScene
 from repro.core.precision import MIXED
-from repro.core import raster
-from repro.core.hierarchy import hierarchical_test
+from repro.core.hierarchy import stream_hierarchical_test
 from repro.core.pipeline import render_with_stats
 from repro.kernels import ops as kops, render as krender
 
@@ -85,13 +84,13 @@ def bench(args) -> dict:
                        precision=MIXED, k_max=args.k_max)
     grid = cfg.grid()
 
-    # Shared operands: project -> hierarchy -> compacted lists -> gather.
+    # Shared operands: project -> stream hierarchy (Stage-1 + compaction +
+    # entry CAT) -> gather.
     proj = project(scene, cam)
-    h = hierarchical_test(proj, grid, cfg.mode, cfg.precision)
-    order = raster.depth_order(proj)
-    lists, valid, _ = raster.compact_tile_lists(h.tile_mask, order, cfg.k_max)
-    operands = kops.gather_tile_features(proj, grid, lists, valid,
-                                         h.minitile_mask)
+    h = stream_hierarchical_test(proj, grid, cfg.mode, cfg.precision,
+                                 k_max=cfg.k_max)
+    operands = kops.gather_tile_features(proj, grid, h.lists, h.valid,
+                                         h.entry_mini_mask)
     operands = jax.block_until_ready(operands)
 
     unfused_fn = jax.jit(lambda o: krender.blend_tiles(*o))

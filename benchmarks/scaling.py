@@ -1,0 +1,149 @@
+"""Dense-vs-stream dataflow scaling: CAT-stage memory + wall time over
+(N, resolution).
+
+Sweeps N ∈ {4k, 32k, 128k} × resolution ∈ {128², 512², 1024²} and renders
+each point with both dataflows, recording
+
+  mask_bytes   CAT-stage mask footprint (pipeline's `cat_mask_bytes`
+               counter: dense = (S+M)·N bools, stream = T·k_max·(Sp+Mt))
+  wall_s       one jitted end-to-end render (compile excluded)
+  feasible     dense points whose mask footprint exceeds `--dense-budget-gb`
+               are NOT run (feasible=false, with the projected bytes) — at
+               1024²/128k the dense CAT stage alone wants ~13 GB of masks
+               plus same-order intermediates, which is the memory wall the
+               stream refactor removes
+
+and writes BENCH_scaling.json. The stream path has no such cliff: its mask
+memory is resolution-bound (tiles × k_max), so the 1024²/128k point that
+the dense path cannot touch renders normally.
+
+Run:
+    PYTHONPATH=src python benchmarks/scaling.py [--quick] [--out f.json]
+
+--quick restricts to N ≤ 32k and resolution ≤ 512² (CI-sized); the full
+sweep takes a few minutes on CPU, dominated by the 1024² stream blends.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import random_scene, default_camera, project
+from repro.core.culling import TileGrid, aabb_mask
+from repro.core.pipeline import RenderConfig, render_with_stats, \
+    cat_mask_elems
+from repro.core.precision import MIXED
+
+NS = (4096, 32768, 131072)
+RESOLUTIONS = (128, 512, 1024)
+
+
+def make_scene(n: int):
+    # Compact screen footprints (a few px sigma) so per-tile survivor lists
+    # stay k_max-bounded as N grows — the production regime the stream
+    # dataflow targets (many small Gaussians, not few huge ones).
+    return random_scene(jax.random.PRNGKey(n), n,
+                        scale_range=(-3.3, -2.7), stretch=3.0,
+                        opacity_range=(-1.0, 3.0))
+
+
+def k_max_for(scene, res: int) -> int:
+    """Per-tile list capacity (the paper's FIFO-depth knob), measured: the
+    longest Stage-1 survivor list of the frame, rounded up to a K block.
+    Shared by both dataflows, so the comparison stays apples-to-apples and
+    no point overflows."""
+    cam = default_camera(res, res)
+    grid = TileGrid(res, res)
+    proj = project(scene, cam)
+    longest = int(jnp.max(jnp.sum(
+        aabb_mask(proj, grid.tile_origins(), grid.tile), axis=1)))
+    return max(512, -(-longest // 128) * 128)
+
+
+def run_point(scene, n: int, res: int, k_max: int, dataflow: str,
+              repeats: int) -> dict:
+    cfg = RenderConfig(height=res, width=res, method="cat",
+                       precision=MIXED, k_max=k_max, dataflow=dataflow)
+    cam = default_camera(res, res)
+    fn = jax.jit(lambda s: render_with_stats(s, cam, cfg))
+    out, counters = jax.block_until_ready(fn(scene))   # compile + warm
+    t0 = time.perf_counter()
+    for _ in range(repeats):
+        out, counters = jax.block_until_ready(fn(scene))
+    wall = (time.perf_counter() - t0) / repeats
+    return dict(
+        feasible=True,
+        k_max=cfg.k_max,
+        wall_s=wall,
+        mask_bytes=float(counters["cat_mask_bytes"]),
+        overflow=bool(out.overflow),
+        processed_per_pixel=float(counters["processed_per_pixel"]),
+        vru_pairs=float(counters["vru_pairs"]),
+    )
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="N <= 32k, res <= 512 (CI smoke)")
+    ap.add_argument("--repeats", type=int, default=1)
+    ap.add_argument("--dense-budget-gb", type=float, default=4.0,
+                    help="skip (mark infeasible) dense points whose CAT "
+                         "mask footprint alone exceeds this")
+    ap.add_argument("--out", type=str, default="BENCH_scaling.json")
+    args = ap.parse_args()
+
+    ns = tuple(n for n in NS if not (args.quick and n > 32768))
+    ress = tuple(r for r in RESOLUTIONS if not (args.quick and r > 512))
+    budget = args.dense_budget_gb * (1 << 30)
+
+    points = []
+    for n in ns:
+        scene = make_scene(n)
+        for res in ress:
+            grid = RenderConfig(height=res, width=res).grid()
+            km = k_max_for(scene, res)
+            row = dict(n=n, res=res)
+            for dataflow in ("dense", "stream"):
+                est = cat_mask_elems(grid, n, km, dataflow)
+                if dataflow == "dense" and est > budget:
+                    row[dataflow] = dict(feasible=False, k_max=km,
+                                         mask_bytes=float(est),
+                                         reason=f"dense CAT masks alone = "
+                                                f"{est / (1 << 30):.1f} GiB "
+                                                f"> budget")
+                else:
+                    row[dataflow] = run_point(scene, n, res, km, dataflow,
+                                              args.repeats)
+            d, s = row["dense"], row["stream"]
+            row["mask_ratio_dense_over_stream"] = (
+                d["mask_bytes"] / max(s["mask_bytes"], 1.0))
+            points.append(row)
+            d_wall = (f"{d['wall_s']:.2f}s" if d["feasible"]
+                      else "INFEASIBLE")
+            print(f"N={n:>6d} res={res:>4d} k_max={km:>5d} | dense "
+                  f"{d['mask_bytes'] / (1 << 20):>8.1f} MiB {d_wall:>10s}"
+                  f" | stream {s['mask_bytes'] / (1 << 20):>8.1f} MiB "
+                  f"{s['wall_s']:.2f}s | mem ratio "
+                  f"{row['mask_ratio_dense_over_stream']:.1f}x")
+
+    result = dict(
+        config=dict(quick=args.quick, repeats=args.repeats,
+                    dense_budget_gb=args.dense_budget_gb,
+                    note="wall_s is CPU/jnp end-to-end (jit, compile "
+                         "excluded); mask_bytes is the CAT-stage mask "
+                         "footprint the pipeline records (cat_mask_bytes)"),
+        points=points,
+    )
+    with open(args.out, "w") as f:
+        json.dump(result, f, indent=2)
+    print(f"wrote {args.out}")
+    return result
+
+
+if __name__ == "__main__":
+    main()

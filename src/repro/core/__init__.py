@@ -4,8 +4,10 @@ from repro.core.gaussians import (GaussianScene, Projected, project,
 from repro.core.camera import (Camera, default_camera, orbit_camera,
                                stack_cameras)
 from repro.core.culling import TileGrid, aabb_mask, obb_mask
-from repro.core.cat import SamplingMode, minitile_cat_mask, pr_gaussian_weight
-from repro.core.hierarchy import hierarchical_test, baseline_masks
+from repro.core.cat import (SamplingMode, minitile_cat_mask, entry_cat_mask,
+                            pr_gaussian_weight)
+from repro.core.hierarchy import (hierarchical_test, stream_hierarchical_test,
+                                  StreamHierarchyOut, baseline_masks)
 from repro.core.pipeline import (RenderConfig, render, render_with_stats,
                                  render_batch_with_stats, frame_counters,
                                  psnr, ssim, FLICKER_CONFIG, VANILLA_CONFIG,
@@ -17,8 +19,10 @@ __all__ = [
     "GaussianScene", "Projected", "project", "random_scene", "pad_scene",
     "Camera", "default_camera", "orbit_camera", "stack_cameras",
     "TileGrid", "aabb_mask", "obb_mask",
-    "SamplingMode", "minitile_cat_mask", "pr_gaussian_weight",
-    "hierarchical_test", "baseline_masks",
+    "SamplingMode", "minitile_cat_mask", "entry_cat_mask",
+    "pr_gaussian_weight",
+    "hierarchical_test", "stream_hierarchical_test", "StreamHierarchyOut",
+    "baseline_masks",
     "RenderConfig", "render", "render_with_stats",
     "render_batch_with_stats", "frame_counters",
     "psnr", "ssim",

@@ -27,7 +27,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.gaussians import Projected, classify_spiky
-from repro.core.culling import TileGrid
+from repro.core.culling import TileGrid, tile_divisor_chunk, map_tile_chunks
 from repro.core.precision import PrecisionScheme, FULL_FP32
 
 
@@ -165,6 +165,70 @@ def minitile_cat_mask(proj: Projected, grid: TileGrid,
     if mode == SamplingMode.SPIKY_FOCUSED:
         return jnp.where(spiky[None, :], dense_hit, sparse_hit)
     raise ValueError(mode)
+
+
+# ---------------------------------------------------------------------------
+# Entry-indexed CAT (the survivor-stream dataflow)
+# ---------------------------------------------------------------------------
+
+ENTRY_CHUNK_ELEMS = 1 << 26   # bound on T*K*Mt*4 weight elements held live;
+#                               larger problems lax.map over tile chunks.
+
+
+def entry_cat_mask(proj: Projected, grid: TileGrid,
+                   lists: jax.Array, valid: jax.Array,
+                   mode: SamplingMode = SamplingMode.UNIFORM_DENSE,
+                   prec: PrecisionScheme = FULL_FP32,
+                   spiky_threshold: float = 3.0) -> jax.Array:
+    """(T, K, minitiles_per_tile) bool: CAT evaluated only on compacted
+    per-tile list entries — the stream-dataflow counterpart of
+    `minitile_cat_mask`.
+
+    lists/valid: compacted per-tile Gaussian ids (`raster.compact_tile_lists`
+    of the Stage-1 tile mask). Entry (t, k) is tested against the Mt
+    mini-tiles of tile t only; memory is O(T·K·Mt) instead of the dense
+    O(num_minitiles·N). The per-element arithmetic (Alg. 1 via
+    `pr_gaussian_weight`, slack, mode select) is identical to the dense path,
+    so `entry_cat_mask(...)[t, k, m] == minitile_cat_mask(...)[mid, g]` for
+    every valid entry (g = lists[t, k], mid = the global id of tile t's
+    m-th mini-tile) — the property the stream/dense parity tests assert.
+    """
+    t_origins = grid.tile_origins().astype(jnp.float32)        # (T, 2)
+    local = grid.minitile_local_origins().astype(jnp.float32)  # (Mt, 2)
+    m = float(grid.minitile - 1)
+    p_top = t_origins[:, None, :] + (local + jnp.asarray([0.5, 0.5]))
+    p_bot = t_origins[:, None, :] + (local + jnp.asarray([m + 0.5, m + 0.5]))
+
+    idx = lists.clip(0)
+    mu = proj.mean2d[idx]                                      # (T, K, 2)
+    conic = proj.conic[idx]                                    # (T, K, 3)
+    lhs = jnp.log(255.0 * jnp.maximum(proj.opacity, 1e-12))[idx]
+    live = valid & proj.in_frustum[idx]                        # (T, K)
+    spiky = classify_spiky(proj.axis_ratio, spiky_threshold)[idx]
+
+    def eval_chunk(pt, pb, mu_c, conic_c, lhs_c, live_c, spiky_c):
+        E = pr_gaussian_weight(mu_c[:, :, None, :], conic_c[:, :, None, :],
+                               pt[:, None, :, :], pb[:, None, :, :], prec)
+        ok = lhs_c[:, :, None, None] > E * (1.0 - prec.slack)  # (B,K,Mt,4)
+        ok = ok & live_c[:, :, None, None]
+        dense_hit = jnp.any(ok, axis=-1)                       # (B, K, Mt)
+        sparse_hit = ok[..., 0] | ok[..., 3]
+        if mode == SamplingMode.UNIFORM_DENSE:
+            return dense_hit
+        if mode == SamplingMode.UNIFORM_SPARSE:
+            return sparse_hit
+        if mode == SamplingMode.SMOOTH_FOCUSED:
+            return jnp.where(spiky_c[:, :, None], sparse_hit, dense_hit)
+        if mode == SamplingMode.SPIKY_FOCUSED:
+            return jnp.where(spiky_c[:, :, None], dense_hit, sparse_hit)
+        raise ValueError(mode)
+
+    t, k = lists.shape
+    mt = local.shape[0]
+    chunk = tile_divisor_chunk(t, k * mt * 4, ENTRY_CHUNK_ELEMS)
+    return map_tile_chunks(eval_chunk,
+                           (p_top, p_bot, mu, conic, lhs, live, spiky),
+                           t, chunk)
 
 
 def leader_pixel_count(proj: Projected, grid: TileGrid, mode: SamplingMode,

@@ -92,6 +92,81 @@ class TileGrid:
         ty = origins[:, 1] // self.tile
         return ty * self.tiles_x + tx
 
+    # --- tile-local layouts (the survivor-stream dataflow indexes regions
+    # --- *within* their tile: entry masks are (T, K, regions_per_tile)) ---
+    def local_region_origins(self, size: int) -> jax.Array:
+        """(regions_per_tile, 2) pixel-space (x, y) offsets of size×size
+        regions inside one tile, row-major within the tile — the same order
+        `raster._minitile_index_in_tile` assigns to pixels."""
+        ys = jnp.arange(self.tile // size) * size
+        xs = jnp.arange(self.tile // size) * size
+        gy, gx = jnp.meshgrid(ys, xs, indexing="ij")
+        return jnp.stack([gx.reshape(-1), gy.reshape(-1)], axis=-1)
+
+    def minitile_local_origins(self) -> jax.Array:
+        return self.local_region_origins(self.minitile)
+
+    def subtile_local_origins(self) -> jax.Array:
+        return self.local_region_origins(self.subtile)
+
+    def subtile_of_minitile_local(self) -> jax.Array:
+        """(minitiles_per_tile,) tile-local subtile index of each tile-local
+        minitile (both row-major within the tile)."""
+        origins = self.minitile_local_origins()
+        spt_x = self.tile // self.subtile
+        return (origins[:, 1] // self.subtile) * spt_x \
+            + origins[:, 0] // self.subtile
+
+    def global_region_ids(self, size: int) -> jax.Array:
+        """(num_tiles, regions_per_tile) image-global row-major region index
+        of each tile-local region — the bridge between dense (regions, N)
+        masks and per-entry (T, K, regions_per_tile) stream masks."""
+        t_orig = self.tile_origins()                      # (T, 2)
+        local = self.local_region_origins(size)           # (R, 2)
+        gx = (t_orig[:, None, 0] + local[None, :, 0]) // size
+        gy = (t_orig[:, None, 1] + local[None, :, 1]) // size
+        return gy * (self.width // size) + gx
+
+    def global_minitile_ids(self) -> jax.Array:
+        return self.global_region_ids(self.minitile)
+
+    def global_subtile_ids(self) -> jax.Array:
+        return self.global_region_ids(self.subtile)
+
+
+def tile_divisor_chunk(t: int, per_tile_elems: int, limit: int) -> int:
+    """Largest divisor of `t` whose chunk holds <= `limit` elements (min 1).
+
+    Used by the stream dataflow to bound the live working set of per-tile
+    computations (compaction scans, entry CAT weights, blend tensors) —
+    tiles are independent, so anything per-tile can be lax.mapped over tile
+    blocks of this size without changing results.
+    """
+    if t * per_tile_elems <= limit:
+        return t
+    best = 1
+    for d in range(2, t + 1):
+        if t % d == 0 and d * per_tile_elems <= limit:
+            best = d
+    return best
+
+
+def map_tile_chunks(fn, operands, t: int, chunk: int):
+    """Apply `fn` over the tile axis in blocks of `chunk` tiles.
+
+    operands: tuple of arrays with leading dim `t`. When `chunk >= t` this
+    is a plain call of `fn` on the full arrays; otherwise the tile axis is
+    reshaped to (t/chunk, chunk, ...) and `fn` is `lax.map`ped over chunks,
+    bounding live memory to one chunk's intermediates. `fn` must be
+    tile-elementwise (no cross-tile reductions) so both routes agree.
+    """
+    if chunk >= t:
+        return fn(*operands)
+    nb = t // chunk
+    stacked = tuple(x.reshape((nb, chunk) + x.shape[1:]) for x in operands)
+    out = jax.lax.map(lambda xs: fn(*xs), stacked)
+    return jax.tree.map(lambda x: x.reshape((t,) + x.shape[2:]), out)
+
 
 def aabb_mask(proj: Projected, origins: jax.Array, size: int) -> jax.Array:
     """Vanilla-3DGS axis-aligned bounding-box test.

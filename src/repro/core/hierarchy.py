@@ -5,20 +5,34 @@ Stage 1 — sub-tile (8×8) AABB test in the preprocessing core: cheap, culls
 Stage 2 — Mini-Tile CAT in the CTU, only on Gaussians that passed Stage 1,
 producing fine-grained (mini-tile × Gaussian) masks.
 
-The function also returns the workload counters the performance model
-consumes (CTU tests, VRU work, duplicate Gaussian instances per level) —
-these are the quantities behind Fig. 4, Fig. 8 and Fig. 9.
+Two dataflows implement the same hierarchy:
+
+* `stream_hierarchical_test` (the pipeline default) — the paper's Fig. 6
+  queue dataflow: Stage 1 produces per-tile survivor *streams* (compacted
+  depth-ordered `(T, K)` lists) and the CTU tests only entries of those
+  streams, emitting per-entry `(T, K, regions_per_tile)` masks. Memory is
+  O(T·K·16) and CAT FLOPs are spent on survivors only.
+* `hierarchical_test` (the dense parity oracle, `dataflow="dense"`) —
+  materializes the full (num_regions, N) boolean masks at every level;
+  O(regions × N) memory, kept because it is trivially auditable and every
+  stream quantity must match it entry-for-entry.
+
+Both return the workload counters the performance model consumes (CTU
+tests, VRU work, duplicate Gaussian instances per level) — the quantities
+behind Fig. 4, Fig. 8 and Fig. 9 — and the stream counters are asserted
+equal to the dense ones whenever no tile list overflows.
 """
 from __future__ import annotations
 
-from typing import NamedTuple
+from typing import Callable, NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
 
 from repro.core.gaussians import Projected, classify_spiky
 from repro.core.culling import TileGrid, aabb_mask, intersection_mask
-from repro.core.cat import SamplingMode, minitile_cat_mask, leader_pixel_count
+from repro.core.cat import (SamplingMode, minitile_cat_mask, entry_cat_mask,
+                            leader_pixel_count)
 from repro.core.precision import PrecisionScheme, FULL_FP32
 
 
@@ -99,6 +113,132 @@ def hierarchical_test(proj: Projected, grid: TileGrid,
     )
     return HierarchyOut(tile_mask=tile_mask, minitile_mask=mini_mask,
                         subtile_mask=sub_mask, counters=counters)
+
+
+# ---------------------------------------------------------------------------
+# Survivor-stream dataflow (paper Fig. 6: the CTU tests only queued entries)
+# ---------------------------------------------------------------------------
+
+
+class StreamHierarchyOut(NamedTuple):
+    lists: jax.Array            # (T, K) int32 depth-ordered Gaussian ids
+    valid: jax.Array            # (T, K) bool — slot occupied
+    entry_sub_mask: jax.Array   # (T, K, subtiles_per_tile) — Stage-1 result
+    #                             per entry (which of the tile's sub-tiles
+    #                             the entry's AABB hits)
+    entry_mini_mask: jax.Array  # (T, K, minitiles_per_tile) — final CAT mask
+    #                             per entry, Stage-1 gated
+    overflow: jax.Array         # () bool: some tile exceeded k_max
+    counters: dict              # same keys/values as HierarchyOut.counters
+
+
+def entry_subtile_mask(proj: Projected, grid: TileGrid,
+                       lists: jax.Array, valid: jax.Array) -> jax.Array:
+    """(T, K, subtiles_per_tile) bool: Stage-1 sub-tile AABB evaluated only
+    on compacted entries. Equals the dense `aabb_mask` over sub-tiles
+    gathered at (tile's sub-tiles, lists[t, k]) for every valid entry."""
+    t_origins = grid.tile_origins()                      # (T, 2) int
+    local = grid.subtile_local_origins()                 # (Sp, 2) int
+    x0 = (t_origins[:, 0:1] + local[None, :, 0])[:, None, :]   # (T, 1, Sp)
+    y0 = (t_origins[:, 1:2] + local[None, :, 1])[:, None, :]
+    x1 = x0 + grid.subtile
+    y1 = y0 + grid.subtile
+
+    idx = lists.clip(0)
+    mx = proj.mean2d[idx][..., 0][:, :, None]            # (T, K, 1)
+    my = proj.mean2d[idx][..., 1][:, :, None]
+    r = proj.radius[idx][:, :, None]
+    hit = ((mx + r) > x0) & ((mx - r) < x1) \
+        & ((my + r) > y0) & ((my - r) < y1)
+    live = (valid & proj.in_frustum[idx])[:, :, None]
+    return hit & live
+
+
+def stream_hierarchical_test(
+        proj: Projected, grid: TileGrid,
+        mode: SamplingMode = SamplingMode.SMOOTH_FOCUSED,
+        prec: PrecisionScheme = FULL_FP32,
+        spiky_threshold: float = 3.0, *, k_max: int,
+        order: Optional[jax.Array] = None,
+        cat_fn: Optional[Callable] = None) -> StreamHierarchyOut:
+    """Stage-1 AABB -> compact survivor streams -> entry-indexed CAT.
+
+    The stream-first realization of `hierarchical_test`: per-tile
+    depth-ordered lists are built from the Stage-1 tile-level AABB (the
+    union of a tile's sub-tile AABBs *is* its tile AABB, since the sub-tiles
+    partition the tile), then Stage-1 sub-tile bits and the Mini-Tile CAT
+    are evaluated per list entry. Nothing of shape (num_subtiles, N) or
+    (num_minitiles, N) is ever materialized.
+
+    order: optional precomputed `raster.depth_order(proj)`.
+    cat_fn: optional callable (proj, grid, lists, valid) -> (T, K, Mt) bool
+    entry CAT mask (e.g. the Pallas entry-PRTU kernel); defaults to the
+    pure-jnp `cat.entry_cat_mask`.
+
+    Counters carry the same keys and — absent overflow — the same values as
+    the dense path: every dense mask sum is re-expressed as a sum over
+    stream entries (a dense sub-tile/mini-tile hit implies a tile-level AABB
+    hit, so each hit pair owns exactly one list entry).
+    """
+    from repro.core import raster  # late import: raster is mask-agnostic
+
+    tile_mask = aabb_mask(proj, grid.tile_origins(), grid.tile)   # (T, N)
+    if order is None:
+        order = raster.depth_order(proj)
+    lists, valid, overflow = raster.compact_tile_lists(tile_mask, order,
+                                                       k_max)
+    del tile_mask  # transient: O(T·N) peak, never kept past compaction
+
+    entry_sub = entry_subtile_mask(proj, grid, lists, valid)  # (T, K, Sp)
+    if cat_fn is None:
+        cat = entry_cat_mask(proj, grid, lists, valid, mode, prec,
+                             spiky_threshold)
+    else:
+        cat = cat_fn(proj, grid, lists, valid)                # (T, K, Mt)
+    sub_of_mini = grid.subtile_of_minitile_local()            # (Mt,)
+    gate = entry_sub[:, :, sub_of_mini]                       # (T, K, Mt)
+    entry_mini = cat & gate & valid[:, :, None]
+
+    # ---- workload counters (stream-derived, dense-equal) -------------------
+    idx = lists.clip(0)
+    n_frustum = jnp.sum(proj.in_frustum)
+    sub_hits = jnp.sum(entry_sub, axis=-1)                    # (T, K) int
+    n_listed = jnp.sum(valid)
+    ctu_pairs = jnp.sum(sub_hits)
+
+    spiky = classify_spiky(proj.axis_ratio, spiky_threshold)
+    if mode == SamplingMode.UNIFORM_DENSE:
+        prs_per_minitile = jnp.full(proj.depth.shape, 1.0)
+    elif mode == SamplingMode.UNIFORM_SPARSE:
+        prs_per_minitile = jnp.full(proj.depth.shape, 0.5)
+    elif mode == SamplingMode.SMOOTH_FOCUSED:
+        prs_per_minitile = jnp.where(spiky, 0.5, 1.0)
+    else:  # SPIKY_FOCUSED
+        prs_per_minitile = jnp.where(spiky, 1.0, 0.5)
+    mpsub = grid.minitiles_per_subtile
+    ctu_prs = jnp.sum(sub_hits * prs_per_minitile[idx]) * mpsub
+
+    counters = dict(
+        n_gaussians=jnp.asarray(proj.depth.shape[0], jnp.float32),
+        n_frustum=n_frustum.astype(jnp.float32),
+        ctu_pairs=ctu_pairs.astype(jnp.float32),
+        # Without Stage 1 the CTU tests every sub-tile of every stream entry.
+        ctu_pairs_no_stage1=(n_listed
+                             * grid.subtiles_per_tile).astype(jnp.float32),
+        ctu_prs=ctu_prs.astype(jnp.float32),
+        leader_tests_per_pair=leader_pixel_count(proj, grid, mode,
+                                                 spiky_threshold),
+        dup_tile=n_listed.astype(jnp.float32),
+        dup_subtile=ctu_pairs.astype(jnp.float32),
+        dup_minitile=jnp.sum(entry_mini).astype(jnp.float32),
+        vru_pairs=jnp.sum(entry_mini).astype(jnp.float32),
+        vru_pairs_tile_aabb=(n_listed
+                             * grid.minitiles_per_tile).astype(jnp.float32),
+    )
+    return StreamHierarchyOut(lists=lists, valid=valid,
+                              entry_sub_mask=entry_sub,
+                              entry_mini_mask=entry_mini,
+                              overflow=overflow, counters=counters)
 
 
 def baseline_masks(proj: Projected, grid: TileGrid, method: str):

@@ -21,6 +21,14 @@ describes the *TPU kernel's* work, not the modeled ASIC's, so it is
 deliberately not a model input — serving telemetry and
 `benchmarks/fused_raster.py` surface it directly.
 
+The counters are dataflow-agnostic: the stream pipeline (the default,
+`RenderConfig(dataflow="stream")`) reproduces every key the dense oracle
+emits, entry-for-entry, so nothing here depends on which dataflow measured
+the workload. The one stream-specific counter, `cat_mask_bytes` (the
+CAT-stage mask footprint; see `pipeline.cat_mask_elems`), is a *host-memory*
+proxy for the JAX pipeline itself, not an ASIC quantity — `cat_stage_bytes`
+below surfaces it for `benchmarks/scaling.py`.
+
 Machine configurations mirror §V-A: FLICKER = 4 rendering cores × (4×2) VRUs
 (32 VRUs) + 4 CTUs (2 PRs/cycle each) + 4 sorting units + 4 preprocessing
 cores @ 1 GHz, LPDDR4 51.2 GB/s; GSCore = 64 VRUs + OBB, no CTU; the
@@ -141,6 +149,14 @@ class Workload:
             dram_bytes=dram_bytes,
             pixels=float(height * width),
         )
+
+
+def cat_stage_bytes(counters: dict) -> float:
+    """CAT-stage mask footprint (bytes) the pipeline recorded for the frame
+    (`cat_mask_bytes`; 0.0 for baseline methods that emit no CAT mask).
+    Host-side memory proxy of the JAX pipeline — the quantity
+    `benchmarks/scaling.py` compares across dataflows — not an ASIC term."""
+    return float(counters.get("cat_mask_bytes", 0.0))
 
 
 # ---------------------------------------------------------------------------

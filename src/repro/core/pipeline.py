@@ -1,4 +1,5 @@
-"""End-to-end 3DGS render pipeline (preprocess -> test -> sort -> blend).
+"""End-to-end 3DGS render pipeline, staged Preprocess→Stage1→Compact→CTU→
+Blend (paper Fig. 6).
 
 Entry points: `render_batch_with_stats()` renders a batch of camera poses
 in one vmapped call and is what serving traffic goes through
@@ -8,11 +9,24 @@ differentiable w.r.t. the scene (for training), and configurable across
 the paper's design space:
 
     method      'aabb' (vanilla) | 'obb' (GSCore) | 'cat' (FLICKER)
+    dataflow    'stream' (default) — the survivor-stream dataflow: Stage-1
+                tile AABB, per-tile depth-ordered lists compacted
+                immediately, Stage-1 sub-tile bits and Mini-Tile CAT
+                evaluated per list entry ((T, K, 16) masks; memory
+                O(T·k_max·16), CAT FLOPs on survivors only — the paper's
+                queue-fed CTU).
+                'dense' — the parity oracle: materializes the full
+                (num_subtiles, N) / (num_minitiles, N) masks and derives
+                everything from them. O(regions × N) memory; kept because
+                every stream image and workload counter is asserted equal
+                to it entry-for-entry (tests/test_stream.py).
     mode        leader-pixel sampling mode for 'cat'
     precision   CTU precision scheme ('cat' only)
     k_max       per-tile compacted list capacity (the JAX analogue of the
                 paper's FIFO-depth resource knob)
-    use_pallas  route the CAT test through the Pallas PRTU kernel
+    use_pallas  route the CAT test through the Pallas PRTU kernel (the
+                entry-gridded kernel on 'stream', the (M, G)-gridded one
+                on 'dense')
     fused       route blending through the fused contribution-aware Pallas
                 kernel: true in-kernel early termination + per-tile adaptive
                 trip count, with work counters measured by the kernel itself
@@ -20,6 +34,10 @@ the paper's design space:
                 path is the differentiable pure-jnp rasterizer that models
                 the same counters — it is the parity fallback the fused path
                 is tested against.
+
+Stage outputs are explicit: `hierarchy.StreamHierarchyOut` carries the
+compacted stream + per-entry masks + counters between the CTU stage and
+blending, and both blend routes consume it unchanged.
 """
 from __future__ import annotations
 
@@ -45,6 +63,7 @@ class RenderConfig:
     subtile: int = 8
     minitile: int = 4
     method: str = "cat"                       # aabb | obb | cat
+    dataflow: str = "stream"                  # stream | dense ('cat' only)
     mode: SamplingMode = SamplingMode.SMOOTH_FOCUSED
     precision: PrecisionScheme = MIXED
     k_max: int = 1024
@@ -73,66 +92,181 @@ def render_with_stats(scene: GaussianScene, camera, cfg: RenderConfig):
     """Returns (RenderOut, counters dict).
 
     For the CAT pipeline, per-tile lists are built from the *Stage-1*
-    (sub-tile AABB) stream — exactly what flows past the CTU in Fig. 6 — and
-    the CAT mask is applied at blend time. Effective CTU/VRU workload
-    counters honor tile-level early termination: the CTU stops testing a
-    tile's remaining Gaussians once every pixel of the tile is saturated.
+    stream — exactly what flows past the CTU in Fig. 6 — and the CAT mask
+    is applied at blend time. Effective CTU/VRU workload counters honor
+    tile-level early termination: the CTU stops testing a tile's remaining
+    Gaussians once every pixel of the tile is saturated.
     """
     grid = cfg.grid()
-    proj = project(scene, camera)
+    proj = project(scene, camera)                       # Preprocess
 
     if cfg.method == "cat":
-        if cfg.use_pallas:
-            from repro.kernels import ops as kops
-            hout = kops.hierarchical_test_pallas(
-                proj, grid, cfg.mode, cfg.precision, cfg.spiky_threshold)
-        else:
-            hout = H.hierarchical_test(proj, grid, cfg.mode, cfg.precision,
-                                       cfg.spiky_threshold)
-        mini_mask, counters = hout.minitile_mask, hout.counters
-        # The CTU's input stream: Stage-1 survivors per tile.
-        sub_of_tile = grid.tile_of_region(grid.subtile)          # (S,)
-        stage1_tile = jax.ops.segment_sum(
-            hout.subtile_mask.astype(jnp.int32), sub_of_tile,
-            num_segments=grid.num_tiles) > 0                     # (T, N)
-        tile_mask = stage1_tile
-    else:
-        tile_mask, mini_mask, counters = H.baseline_masks(proj, grid,
-                                                          cfg.method)
+        if cfg.dataflow == "stream":
+            return _render_cat_stream(proj, grid, cfg)
+        if cfg.dataflow == "dense":
+            return _render_cat_dense(proj, grid, cfg)
+        raise ValueError(f"unknown dataflow {cfg.dataflow!r} "
+                         "(expected 'stream' or 'dense')")
+    return _render_baseline(proj, grid, cfg)
 
+
+def _render_cat_stream(proj, grid, cfg: RenderConfig):
+    """Stage1 -> Compact -> CTU (entry-indexed) -> Blend, all stream-first.
+
+    Stage boundaries are the explicit intermediates: `StreamHierarchyOut`
+    (lists/valid + per-entry Stage-1/CAT masks + counters) out of the CTU
+    stage, `RenderOut` out of blending. Nothing of shape (regions, N) is
+    kept past list compaction.
+    """
+    order = raster.depth_order(proj)                    # Sort
+    if cfg.use_pallas:
+        from repro.kernels import ops as kops
+        hout = kops.stream_hierarchical_test_pallas(
+            proj, grid, cfg.mode, cfg.precision, cfg.spiky_threshold,
+            k_max=cfg.k_max, order=order)
+    else:
+        hout = H.stream_hierarchical_test(
+            proj, grid, cfg.mode, cfg.precision, cfg.spiky_threshold,
+            k_max=cfg.k_max, order=order)               # Stage1+Compact+CTU
+
+    counters = dict(hout.counters)
+    counters["cat_mask_bytes"] = _cat_mask_bytes(grid, cfg, "stream",
+                                                 proj.depth.shape[0])
+    out = _blend(proj, grid, hout.lists, hout.valid, hout.entry_mini_mask,
+                 hout.overflow, cfg, counters)          # Blend
+    counters.update(_effective_counters_stream(proj, hout, out.entry_alive,
+                                               cfg))
+    return out, counters
+
+
+def _render_cat_dense(proj, grid, cfg: RenderConfig):
+    """The dense parity oracle: full (regions, N) masks at every level.
+
+    Keeps the seed pipeline's dataflow byte-for-byte — dense Stage-1/CAT
+    masks, tile lists from the OR of sub-tile bits, per-entry blend masks
+    gathered from the dense CAT mask — so the stream path has an
+    always-available reference for images *and* counters.
+    """
+    if cfg.use_pallas:
+        from repro.kernels import ops as kops
+        hout = kops.hierarchical_test_pallas(
+            proj, grid, cfg.mode, cfg.precision, cfg.spiky_threshold)
+    else:
+        hout = H.hierarchical_test(proj, grid, cfg.mode, cfg.precision,
+                                   cfg.spiky_threshold)
+    # The CTU's input stream: Stage-1 survivors per tile.
+    sub_of_tile = grid.tile_of_region(grid.subtile)          # (S,)
+    stage1_tile = jax.ops.segment_sum(
+        hout.subtile_mask.astype(jnp.int32), sub_of_tile,
+        num_segments=grid.num_tiles) > 0                     # (T, N)
+
+    order = raster.depth_order(proj)
+    lists, valid, overflow = raster.compact_tile_lists(stage1_tile, order,
+                                                       cfg.k_max)
+    entry_mask = raster.entry_mask_from_dense(grid, hout.minitile_mask,
+                                              lists)
+    counters = dict(hout.counters)
+    counters["cat_mask_bytes"] = _cat_mask_bytes(grid, cfg, "dense",
+                                                 proj.depth.shape[0])
+    out = _blend(proj, grid, lists, valid, entry_mask, overflow, cfg,
+                 counters)
+    counters.update(_effective_cat_counters(
+        proj, grid, hout, lists, out.entry_alive, cfg))
+    return out, counters
+
+
+def _render_baseline(proj, grid, cfg: RenderConfig):
+    """'aabb' (vanilla 3DGS) and 'obb' (GSCore) baselines — dense masks."""
+    tile_mask, mini_mask, counters = H.baseline_masks(proj, grid, cfg.method)
     order = raster.depth_order(proj)
     lists, valid, overflow = raster.compact_tile_lists(tile_mask, order,
                                                        cfg.k_max)
+    entry_mask = (None if mini_mask is None else
+                  raster.entry_mask_from_dense(grid, mini_mask, lists))
     counters = dict(counters)
+    out = _blend(proj, grid, lists, valid, entry_mask, overflow, cfg,
+                 counters)
+    return out, counters
+
+
+def _blend(proj, grid, lists, valid, entry_mask, overflow,
+           cfg: RenderConfig, counters: dict) -> raster.RenderOut:
+    """Shared blend stage; updates `counters` with the sweep statistics."""
     if cfg.fused:
         from repro.kernels import ops as kops
         out, fused_counters = kops.render_tiles_fused(
-            proj, grid, lists, valid, mini_mask, cfg.background, overflow)
+            proj, grid, lists, valid, entry_mask, cfg.background, overflow)
         counters.update(fused_counters)
     else:
-        out = raster.render_tiles(proj, grid, lists, valid, mini_mask,
+        out = raster.render_tiles(proj, grid, lists, valid, entry_mask,
                                   cfg.background, overflow)
         # The unfused sweep always walks the full padded list.
         counters["swept_per_pixel"] = jnp.asarray(float(lists.shape[1]),
                                                   jnp.float32)
     counters["processed_per_pixel"] = jnp.mean(out.processed_per_pixel)
     counters["blended_per_pixel"] = jnp.mean(out.blended_per_pixel)
+    return out
 
-    if cfg.method == "cat":
-        counters.update(_effective_cat_counters(
-            proj, grid, hout, lists, out.entry_alive, cfg))
-    return out, counters
+
+def cat_mask_elems(grid: TileGrid, n: int, k_max: int, dataflow: str) -> int:
+    """Boolean elements the CAT stage materializes (the Stage-1 + CAT mask
+    footprint, 1 byte/element): dense = (S + M)·N, stream = T·K·(Sp + Mt).
+    Static per config — the stream/dense ratio is the memory win
+    `benchmarks/scaling.py` tracks."""
+    if dataflow == "dense":
+        return (grid.num_subtiles + grid.num_minitiles) * n
+    if dataflow == "stream":
+        return grid.num_tiles * k_max * (grid.subtiles_per_tile
+                                         + grid.minitiles_per_tile)
+    raise ValueError(dataflow)
+
+
+def _cat_mask_bytes(grid, cfg: RenderConfig, dataflow: str, n: int) \
+        -> jnp.ndarray:
+    return jnp.asarray(float(cat_mask_elems(grid, n, cfg.k_max, dataflow)),
+                       jnp.float32)
+
+
+def _prs_per_subtile(proj, cfg: RenderConfig) -> jax.Array:
+    """(N,) PRs the CTU evaluates per hit sub-tile: 4 dense / 2 sparse per
+    Fig. 3(b), adaptive modes pick per Gaussian."""
+    from repro.core.gaussians import classify_spiky
+    spiky = classify_spiky(proj.axis_ratio, cfg.spiky_threshold)
+    if cfg.mode == SamplingMode.UNIFORM_DENSE:
+        return jnp.full(spiky.shape, 4.0)
+    if cfg.mode == SamplingMode.UNIFORM_SPARSE:
+        return jnp.full(spiky.shape, 2.0)
+    if cfg.mode == SamplingMode.SMOOTH_FOCUSED:
+        return jnp.where(spiky, 2.0, 4.0)
+    return jnp.where(spiky, 4.0, 2.0)
+
+
+def _effective_counters_stream(proj, hout: H.StreamHierarchyOut,
+                               entry_alive, cfg: RenderConfig) -> dict:
+    """Termination-aware CTU/VRU workload from the stream representation.
+
+    The per-entry masks already are the quantities the dense path has to
+    gather per tile, so the accounting collapses to masked sums: for each
+    list entry processed before its tile terminated, the CTU evaluated one
+    PR batch per hit sub-tile (4 PRs dense, 2 sparse — Fig. 3(b)) and the
+    VRUs blended one mini-tile per CAT-passing mini-tile.
+    """
+    idx = hout.lists.clip(0)                                 # (T, K)
+    live = entry_alive                                       # (T, K)
+    sub_hits = jnp.sum(hout.entry_sub_mask, axis=-1)         # (T, K)
+    mini_hits = jnp.sum(hout.entry_mini_mask, axis=-1)       # (T, K)
+    prs = _prs_per_subtile(proj, cfg)[idx]                   # (T, K)
+    return dict(
+        ctu_pairs_eff=jnp.sum(sub_hits * live).astype(jnp.float32),
+        ctu_prs_eff=jnp.sum(sub_hits * prs * live).astype(jnp.float32),
+        vru_pairs_eff=jnp.sum(mini_hits * live).astype(jnp.float32),
+        ctu_stream_len=jnp.sum(entry_alive).astype(jnp.float32),
+    )
 
 
 def _effective_cat_counters(proj, grid, hout, lists, entry_alive, cfg):
-    """Termination-aware CTU/VRU workload (paper Fig. 6 semantics).
-
-    For each tile-list entry processed before the tile terminated:
-      - the CTU evaluated one PR batch per hit sub-tile (4 PRs dense, 2
-        sparse — Fig. 3(b));
-      - the VRUs blended one mini-tile per CAT-passing mini-tile.
-    """
-    from repro.core.gaussians import classify_spiky
+    """Dense-oracle twin of `_effective_counters_stream` (paper Fig. 6
+    semantics), computed by gathering the dense per-level masks per tile."""
     idx = lists.clip(0)                                          # (T, K)
     live = entry_alive                                           # (T, K)
 
@@ -152,15 +286,7 @@ def _effective_cat_counters(proj, grid, hout, lists, entry_alive, cfg):
         return (jnp.sum(sub_hits * live_row),
                 jnp.sum(mini_hits * live_row))
 
-    spiky = classify_spiky(proj.axis_ratio, cfg.spiky_threshold)
-    if cfg.mode == SamplingMode.UNIFORM_DENSE:
-        prs_per_sub = jnp.full(spiky.shape, 4.0)
-    elif cfg.mode == SamplingMode.UNIFORM_SPARSE:
-        prs_per_sub = jnp.full(spiky.shape, 2.0)
-    elif cfg.mode == SamplingMode.SMOOTH_FOCUSED:
-        prs_per_sub = jnp.where(spiky, 2.0, 4.0)
-    else:
-        prs_per_sub = jnp.where(spiky, 4.0, 2.0)
+    prs_per_sub = _prs_per_subtile(proj, cfg)
 
     def per_tile_prs(sub_t, id_row, live_row):
         sub_hits = jnp.sum(sub_t[:, id_row], axis=0)
@@ -221,12 +347,10 @@ def ssim(img: jax.Array, ref: jax.Array, data_range: float = 1.0,
     c2 = (0.03 * data_range) ** 2
 
     def filt(x):  # (H, W, C) uniform filter via depthwise conv
-        k = jnp.ones((win, win, 1, 1), x.dtype) / (win * win)
         x = jnp.moveaxis(x, -1, 0)[:, None]     # (C, 1, H, W)
         y = jax.lax.conv_general_dilated(
             x, jnp.ones((1, 1, win, win), x.dtype) / (win * win),
             window_strides=(1, 1), padding="VALID")
-        del k
         return jnp.moveaxis(y[:, 0], 0, -1)
 
     mu_x, mu_y = filt(img), filt(ref)

@@ -1,9 +1,14 @@
 """Tile rasterizer: depth sort, per-tile list compaction, alpha blending.
 
-TPU-idiomatic realization of the paper's skipping: intersection/CAT masks are
-*compacted* into dense per-tile Gaussian lists (the analogue of the per-FIFO
-duplication in Fig. 6), so the SIMD blending kernel wastes no lanes on
-Gaussians that no mini-tile in the tile needs.
+TPU-idiomatic realization of the paper's skipping: tile intersection masks
+are *compacted* into dense per-tile Gaussian lists (the analogue of the
+per-FIFO duplication in Fig. 6), so the SIMD blending kernel wastes no
+lanes on Gaussians that no mini-tile in the tile needs. Blending consumes
+the stream dataflow's per-entry (T, K, minitiles_per_tile) CAT masks
+(`StreamHierarchyOut.entry_mini_mask`); dense (num_minitiles, N) masks
+convert via `entry_mask_from_dense`. Per-tile work (compaction scans and
+blend tensors) is lax.mapped over tile chunks past a static size threshold,
+so peak memory stays bounded at production scene sizes.
 
 All blending math matches vanilla 3DGS [2]:
     alpha = min(0.99, o * exp(-E)),  skip if alpha < 1/255
@@ -27,7 +32,8 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.gaussians import Projected, ALPHA_MIN
-from repro.core.culling import TileGrid
+from repro.core.culling import (TileGrid, tile_divisor_chunk,
+                                map_tile_chunks)
 
 ALPHA_MAX = 0.99
 T_EPS = 1e-4
@@ -53,14 +59,14 @@ def depth_order(proj: Projected) -> jax.Array:
     return jnp.argsort(jax.lax.stop_gradient(key))
 
 
-def compact_tile_lists(mask: jax.Array, order: jax.Array, k_max: int):
-    """Build dense per-tile Gaussian lists in depth order.
+COMPACT_CHUNK_ELEMS = 1 << 27   # bound on T*N int32 scan elements held live;
+#                                 larger problems lax.map over tile chunks.
 
-    mask: (T, N) bool over *unsorted* Gaussian ids; order: (N,) depth argsort.
-    Returns (lists (T, K) int32 gaussian ids, valid (T, K) bool, overflow ()).
-    """
-    mask_sorted = mask[:, order]                         # (T, N)
-    pos = jnp.cumsum(mask_sorted, axis=1) - 1            # (T, N)
+
+def _compact_block(mask: jax.Array, order: jax.Array, k_max: int):
+    """Compaction of one block of tiles (the (B, N) working set)."""
+    mask_sorted = mask[:, order]                         # (B, N)
+    pos = jnp.cumsum(mask_sorted, axis=1) - 1            # (B, N)
     take = mask_sorted & (pos < k_max)
     tgt = jnp.where(take, pos, k_max)                    # overflow slot K
 
@@ -74,6 +80,28 @@ def compact_tile_lists(mask: jax.Array, order: jax.Array, k_max: int):
     valid = lists >= 0
     overflow = jnp.any(jnp.sum(mask, axis=1) > k_max)
     return lists, valid, overflow
+
+
+def compact_tile_lists(mask: jax.Array, order: jax.Array, k_max: int):
+    """Build dense per-tile Gaussian lists in depth order.
+
+    mask: (T, N) bool over *unsorted* Gaussian ids; order: (N,) depth argsort.
+    Returns (lists (T, K) int32 gaussian ids, valid (T, K) bool, overflow ()).
+
+    Tiles are independent, so when T*N exceeds `COMPACT_CHUNK_ELEMS` the
+    compaction lax.maps over tile blocks — the (T, N) int32 scan is the
+    last O(tiles × N) working set of the stream pipeline, and chunking keeps
+    its *live* footprint bounded at production scene sizes.
+    """
+    t, n = mask.shape
+    chunk = tile_divisor_chunk(t, n, COMPACT_CHUNK_ELEMS)
+    if chunk >= t:
+        return _compact_block(mask, order, k_max)
+    nb = t // chunk
+    lists, valid, ovf = jax.lax.map(
+        lambda mb: _compact_block(mb, order, k_max),
+        mask.reshape(nb, chunk, n))
+    return (lists.reshape(t, k_max), valid.reshape(t, k_max), jnp.any(ovf))
 
 
 def untile(grid: TileGrid, x: jax.Array) -> jax.Array:
@@ -101,21 +129,39 @@ def _minitile_index_in_tile(grid: TileGrid):
     return ((dy // m) * (t // m) + (dx // m)).reshape(-1)
 
 
+def entry_mask_from_dense(grid: TileGrid, minitile_mask: jax.Array,
+                          lists: jax.Array) -> jax.Array:
+    """Gather a dense (num_minitiles, N) mask at compacted entries.
+
+    Returns (T, K, minitiles_per_tile) bool — the per-entry representation
+    the blend paths consume. Bridge for the dense parity oracle and the
+    OBB baseline, which still materialize dense masks.
+    """
+    mids = grid.global_minitile_ids()                        # (T, Mt)
+    idx = lists.clip(0)
+    return minitile_mask[mids[:, None, :], idx[:, :, None]]  # (T, K, Mt)
+
+
+BLEND_CHUNK_ELEMS = 1 << 26   # bound on T*P*K blend-tensor elements live at
+#                               once; larger problems lax.map tile chunks.
+
+
 def render_tiles(proj: Projected, grid: TileGrid,
                  lists: jax.Array, valid: jax.Array,
-                 minitile_mask: Optional[jax.Array] = None,
+                 entry_mask: Optional[jax.Array] = None,
                  background: float = 0.0,
                  overflow: jax.Array | bool = False) -> RenderOut:
     """Blend per-tile compacted lists into the image.
 
-    minitile_mask: optional (num_minitiles_global, N) CAT mask — pixel p in
-    mini-tile m blends Gaussian g only if minitile_mask[m, g]. None = every
-    listed Gaussian is blended by every pixel of the tile (AABB/OBB behavior).
+    entry_mask: optional (T, K, minitiles_per_tile) per-entry CAT mask —
+    pixel p of tile t blends entry k only if entry_mask[t, k, m(p)] with
+    m(p) the pixel's tile-local mini-tile. None = every listed Gaussian is
+    blended by every pixel of the tile (AABB/OBB behavior). Dense
+    (num_minitiles, N) masks convert via `entry_mask_from_dense`.
     """
     tile_origins = grid.tile_origins().astype(jnp.float32)   # (T, 2)
     poffs = _pixel_offsets(grid.tile)                        # (P, 2)
     mt_in_tile = _minitile_index_in_tile(grid)               # (P,)
-    mtx = grid.width // grid.minitile
 
     # Gather features OUTSIDE the tile vmap (plain fancy indexing — its VJP
     # is a scatter-add over the whole feature table).
@@ -124,17 +170,7 @@ def render_tiles(proj: Projected, grid: TileGrid,
     g_conic_all = proj.conic[idx]
     g_op_all = proj.opacity[idx]
     g_col_all = proj.color[idx]
-    if minitile_mask is not None:
-        ox = (tile_origins[:, 0] // grid.minitile).astype(jnp.int32)
-        oy = (tile_origins[:, 1] // grid.minitile).astype(jnp.int32)
-        rows = oy[:, None] + mt_in_tile[None, :] // (grid.tile // grid.minitile)
-        cols = ox[:, None] + mt_in_tile[None, :] % (grid.tile // grid.minitile)
-        mids = rows * mtx + cols                              # (T, P)
-        allow_all = minitile_mask[mids[:, :, None], idx[:, None, :]]  # (T,P,K)
-    else:
-        allow_all = None
-
-    def one_tile(origin, lst, val, g_mean, g_conic, g_op, g_col, allow_m):
+    def one_tile(origin, lst, val, g_mean, g_conic, g_op, g_col, allow_e):
         pix = origin[None, :] + poffs                        # (P, 2)
         d = pix[:, None, :] - g_mean[None, :, :]             # (P, K, 2)
         E = (0.5 * (g_conic[None, :, 0] * d[..., 0] ** 2
@@ -143,8 +179,10 @@ def render_tiles(proj: Projected, grid: TileGrid,
         a = jnp.minimum(g_op[None, :] * jnp.exp(-E), ALPHA_MAX)  # (P, K)
 
         allow = val[None, :]
-        if allow_m is not None:
-            allow = allow & allow_m
+        if allow_e is not None:
+            # (K, Mt) entry mask -> (P, K) pixel lanes, expanded per tile so
+            # nothing of shape (T, P, K) outlives its chunk.
+            allow = allow & allow_e[:, mt_in_tile].T
         a = jnp.where(allow & (a >= ALPHA_MIN), a, 0.0)
 
         # Exclusive cumulative transmittance.
@@ -164,16 +202,20 @@ def render_tiles(proj: Projected, grid: TileGrid,
         entry_alive = jnp.any(alive, axis=0) & val
         return rgb, acc, processed, blended, entry_alive
 
-    if allow_all is None:
-        vm = jax.vmap(lambda o, l, v, gm, gc, go, gl:
+    t, k = lists.shape
+    p = poffs.shape[0]
+    chunk = tile_divisor_chunk(t, p * k, BLEND_CHUNK_ELEMS)
+    if entry_mask is None:
+        fn = jax.vmap(lambda o, l, v, gm, gc, go, gl:
                       one_tile(o, l, v, gm, gc, go, gl, None))
-        rgb, acc, processed, blended, entry_alive = vm(
-            tile_origins, lists, valid, g_mean_all, g_conic_all, g_op_all,
-            g_col_all)
+        operands = (tile_origins, lists, valid, g_mean_all, g_conic_all,
+                    g_op_all, g_col_all)
     else:
-        rgb, acc, processed, blended, entry_alive = jax.vmap(one_tile)(
-            tile_origins, lists, valid, g_mean_all, g_conic_all, g_op_all,
-            g_col_all, allow_all)
+        fn = jax.vmap(one_tile)
+        operands = (tile_origins, lists, valid, g_mean_all, g_conic_all,
+                    g_op_all, g_col_all, entry_mask)
+    rgb, acc, processed, blended, entry_alive = map_tile_chunks(
+        fn, operands, t, chunk)
 
     return RenderOut(
         image=untile(grid, rgb), alpha=untile(grid, acc),

@@ -49,12 +49,58 @@ def hierarchical_test_pallas(proj: Projected, grid: TileGrid,
                                cat_mask=cat)
 
 
+def entry_cat_mask_pallas(proj: Projected, grid: TileGrid, lists, valid,
+                          mode: SamplingMode, prec: PrecisionScheme,
+                          spiky_threshold: float = 3.0,
+                          interpret: bool = True) -> jax.Array:
+    """(T, K, Mt) bool entry CAT mask via the entry-stream PRTU kernel.
+
+    Drop-in for `core.cat.entry_cat_mask`: per-entry features are gathered
+    at the compacted lists (invalid/padded entries get lhs = -inf so the
+    kernel rejects them), and the kernel grid runs over entries only —
+    the Pallas realization of the paper's queue-fed CTU.
+    """
+    local = grid.minitile_local_origins().astype(jnp.float32)  # (Mt, 2)
+    m = float(grid.minitile - 1)
+    p_top_l = local + jnp.asarray([0.5, 0.5])
+    p_bot_l = local + jnp.asarray([m + 0.5, m + 0.5])
+
+    idx = lists.clip(0)
+    lhs = jnp.log(255.0 * jnp.maximum(proj.opacity, 1e-12))[idx]
+    lhs = jnp.where(valid & proj.in_frustum[idx], lhs, -jnp.inf)
+    spiky = classify_spiky(proj.axis_ratio, spiky_threshold)[idx]
+    mask = prtu.prtu_entry_cat_mask(
+        p_top_l, p_bot_l, grid.tile_origins(), proj.mean2d[idx],
+        proj.conic[idx], lhs, spiky,
+        mode=mode.value, coord_prec=prec.coord, delta_prec=prec.delta,
+        mul_prec=prec.mul, acc_prec=prec.acc, slack=prec.slack,
+        interpret=interpret)
+    return mask != 0
+
+
+def stream_hierarchical_test_pallas(proj: Projected, grid: TileGrid,
+                                    mode: SamplingMode,
+                                    prec: PrecisionScheme,
+                                    spiky_threshold: float = 3.0, *,
+                                    k_max: int, order=None,
+                                    interpret: bool = True) \
+        -> H.StreamHierarchyOut:
+    """`core.hierarchy.stream_hierarchical_test` with the entry CAT routed
+    through the Pallas entry-PRTU kernel."""
+    return H.stream_hierarchical_test(
+        proj, grid, mode, prec, spiky_threshold, k_max=k_max, order=order,
+        cat_fn=lambda p, g, ls, v: entry_cat_mask_pallas(
+            p, g, ls, v, mode, prec, spiky_threshold, interpret))
+
+
 def gather_tile_features(proj: Projected, grid: TileGrid, lists, valid,
-                         minitile_mask=None):
+                         entry_mask=None):
     """Build the kernel operand blocks from compacted per-tile lists.
 
-    Returns (pix (T,P,2), feat (T,K,8), colors (T,K,3), valid_i8 (T,K),
-    allow (T,K,P))."""
+    entry_mask: optional (T, K, Mt) per-entry CAT mask
+    (`StreamHierarchyOut.entry_mini_mask`; dense masks convert via
+    `raster.entry_mask_from_dense`). Returns (pix (T,P,2), feat (T,K,8),
+    colors (T,K,3), valid_i8 (T,K), allow (T,K,Mt))."""
     t_origins = grid.tile_origins().astype(jnp.float32)   # (T, 2)
     poffs = raster._pixel_offsets(grid.tile)              # (P, 2)
     pix = t_origins[:, None, :] + poffs[None, :, :]       # (T, P, 2)
@@ -68,44 +114,33 @@ def gather_tile_features(proj: Projected, grid: TileGrid, lists, valid,
     ], axis=-1)
     colors = proj.color[idx]
 
-    p = pix.shape[1]
-    if minitile_mask is None:
-        allow = jnp.ones(lists.shape + (p,), jnp.int8)
+    if entry_mask is None:
+        allow = jnp.ones(lists.shape + (grid.minitiles_per_tile,), jnp.int8)
     else:
-        mt_in_tile = raster._minitile_index_in_tile(grid)  # (P,)
-        mtx = grid.width // grid.minitile
-        ox = (t_origins[:, 0] // grid.minitile).astype(jnp.int32)  # (T,)
-        oy = (t_origins[:, 1] // grid.minitile).astype(jnp.int32)
-        rows = oy[:, None] + mt_in_tile[None, :] // (grid.tile // grid.minitile)
-        cols = ox[:, None] + mt_in_tile[None, :] % (grid.tile // grid.minitile)
-        mids = rows * mtx + cols                          # (T, P)
-        # allow[t, k, p] = minitile_mask[mids[t, p], lists[t, k]]
-        allow = jax.vmap(
-            lambda mid_row, lst: minitile_mask[mid_row][:, lst].T
-        )(mids, idx).astype(jnp.int8)
+        allow = entry_mask.astype(jnp.int8)
     valid_i8 = valid.astype(jnp.int8)
     return pix, feat, colors, valid_i8, allow
 
 
-def blend_tiles_pallas(proj, grid, lists, valid, minitile_mask=None,
+def blend_tiles_pallas(proj, grid, lists, valid, entry_mask=None,
                        interpret: bool = True):
-    ops = gather_tile_features(proj, grid, lists, valid, minitile_mask)
+    ops = gather_tile_features(proj, grid, lists, valid, entry_mask)
     return krender.blend_tiles(*ops, interpret=interpret)
 
 
-def blend_tiles_reference(proj, grid, lists, valid, minitile_mask=None):
-    ops = gather_tile_features(proj, grid, lists, valid, minitile_mask)
+def blend_tiles_reference(proj, grid, lists, valid, entry_mask=None):
+    ops = gather_tile_features(proj, grid, lists, valid, entry_mask)
     return kref.blend_tiles_ref(*ops)
 
 
-def blend_tiles_fused_pallas(proj, grid, lists, valid, minitile_mask=None,
+def blend_tiles_fused_pallas(proj, grid, lists, valid, entry_mask=None,
                              interpret: bool = True) \
         -> krender.FusedBlendOut:
-    ops = gather_tile_features(proj, grid, lists, valid, minitile_mask)
+    ops = gather_tile_features(proj, grid, lists, valid, entry_mask)
     return krender.blend_tiles_fused(*ops, interpret=interpret)
 
 
-def render_tiles_fused(proj, grid, lists, valid, minitile_mask=None,
+def render_tiles_fused(proj, grid, lists, valid, entry_mask=None,
                        background: float = 0.0,
                        overflow: jax.Array | bool = False,
                        interpret: bool = True):
@@ -126,7 +161,7 @@ def render_tiles_fused(proj, grid, lists, valid, minitile_mask=None,
     1 - prod(1-a) holds telescopically inside the kernel too, so it equals
     the blended accumulation exactly up to the terminated tail (< T_EPS).
     """
-    fb = blend_tiles_fused_pallas(proj, grid, lists, valid, minitile_mask,
+    fb = blend_tiles_fused_pallas(proj, grid, lists, valid, entry_mask,
                                   interpret=interpret)
     acc = 1.0 - fb.trans
     rgb = fb.rgb + background * fb.trans[:, :, None]

@@ -1,19 +1,27 @@
-"""Pallas PRTU kernel — the Mini-Tile CAT engine (paper §IV-C) on TPU.
+"""Pallas PRTU kernels — the Mini-Tile CAT engine (paper §IV-C) on TPU.
 
-The ASIC's CTU tests 2 pixel-rectangles (8 leader pixels) per cycle. The TPU
-adaptation blocks the (mini-tile × Gaussian) test matrix into VMEM tiles and
-evaluates Alg. 1 with the VPU: per (M_BLK, G_BLK) block we form the four
-separable terms s{top,bot}×{x,y} once (line 2–3 sharing) and the four cross
-terms, exactly the PR term-sharing of Alg. 1 — the arithmetic per corner is
-half of a naive per-leader evaluation, which is where the paper's ~2× CAT
-FLOP saving shows up on the VPU as well.
+The ASIC's CTU tests 2 pixel-rectangles (8 leader pixels) per cycle. Two TPU
+adaptations of Alg. 1 live here, both forming the four separable terms
+s{top,bot}×{x,y} once (line 2–3 sharing) and the four cross terms — the
+arithmetic per corner is half of a naive per-leader evaluation, which is
+where the paper's ~2× CAT FLOP saving shows up on the VPU as well:
+
+* `prtu_entry_cat_mask` — the survivor-stream kernel (the pipeline
+  default): the grid runs over compacted per-tile list *entries* (T tiles ×
+  K/KE_BLK entry blocks), and each block tests KE_BLK entries against the
+  Mt mini-tiles of their own tile. This is the paper's Fig. 6 dataflow —
+  the CTU only ever sees Gaussians sitting in a tile's queue — and its
+  output is the per-entry (T, K, Mt) mask the blend kernels consume.
+* `prtu_cat_mask` — the dense-oracle kernel: blocks the full (mini-tile ×
+  Gaussian) matrix into (M_BLK, G_BLK) VMEM tiles; O(M·G) output, kept for
+  the `dataflow="dense"` parity path.
 
 Mixed precision: Δ in fp16, quadratic accumulation in fp8 (float8_e4m3fn),
 matching the CTU datapath; the comparison against ln(255·o) is fp32.
 
-Block shapes: (M_BLK mini-tiles × G_BLK Gaussians), both multiples of 8/128
-to line up with TPU VREG lanes; all operands use explicit BlockSpecs into
-VMEM. Output is an int8 mask (M, G) (bool stored as i8 for clean tiling).
+Block shapes are multiples of 8/128 to line up with TPU VREG lanes; all
+operands use explicit BlockSpecs into VMEM. Outputs are int8 masks (bool
+stored as i8 for clean tiling).
 """
 from __future__ import annotations
 
@@ -37,31 +45,17 @@ def _quant(x, kind: str):
     return x
 
 
-def _prtu_kernel(ptop_ref, pbot_ref, mu_ref, conic_ref, lhs_ref, spiky_ref,
-                 mask_ref, *, mode: str, coord_prec: str, delta_prec: str,
-                 mul_prec: str, acc_prec: str, slack: float):
-    """One (M_BLK, G_BLK) block of the CAT test matrix.
+def _alg1_hits(ptx, pty, pbx, pby, mu_x, mu_y, cxx, cxy, cyy, lhs, spiky,
+               *, mode: str, delta_prec: str, mul_prec: str, acc_prec: str,
+               slack: float):
+    """Alg. 1 body shared by the dense and the entry-stream PRTU kernels.
 
-    ptop/pbot: (M_BLK, 2) — main-diagonal leader coords of each mini-tile PR.
-    mu: (G_BLK, 2), conic: (G_BLK, 3), lhs: (G_BLK,) = ln(255·o) (shared term,
-    computed once outside, as in the CTU), spiky: (G_BLK,) int8.
-    mask: (M_BLK, G_BLK) int8 out.
+    All operands are already broadcast-compatible and coord-quantized; the
+    result mask has their broadcast shape. ptx/pty/pbx/pby are the PR's
+    main-diagonal leader coordinates, lhs = ln(255·o), spiky is boolean.
     """
-    qc = functools.partial(_quant, kind=coord_prec)
-    mu_x = qc(mu_ref[:, 0][None, :])     # (1, G)
-    mu_y = qc(mu_ref[:, 1][None, :])
-    cxx = qc(conic_ref[:, 0][None, :])
-    cxy = qc(conic_ref[:, 1][None, :])
-    cyy = qc(conic_ref[:, 2][None, :])
-    lhs = lhs_ref[:][None, :]            # (1, G)
-
-    ptx = qc(ptop_ref[:, 0][:, None])    # (M, 1)
-    pty = qc(ptop_ref[:, 1][:, None])
-    pbx = qc(pbot_ref[:, 0][:, None])
-    pby = qc(pbot_ref[:, 1][:, None])
-
     # Alg. 1 line 1: subtract at coord precision, convert to delta precision
-    dtx = _quant(ptx - mu_x, delta_prec)  # (M, G)
+    dtx = _quant(ptx - mu_x, delta_prec)
     dty = _quant(pty - mu_y, delta_prec)
     dbx = _quant(pbx - mu_x, delta_prec)
     dby = _quant(pby - mu_y, delta_prec)
@@ -93,17 +87,41 @@ def _prtu_kernel(ptop_ref, pbot_ref, mu_ref, conic_ref, lhs_ref, spiky_ref,
     sparse = hit0 | hit3                 # main diagonal only
 
     if mode == "uniform_dense":
-        out = dense
-    elif mode == "uniform_sparse":
-        out = sparse
-    else:
-        spiky = spiky_ref[:][None, :] != 0
-        if mode == "smooth_focused":
-            out = jnp.where(spiky, sparse, dense)
-        elif mode == "spiky_focused":
-            out = jnp.where(spiky, dense, sparse)
-        else:
-            raise ValueError(mode)
+        return dense
+    if mode == "uniform_sparse":
+        return sparse
+    if mode == "smooth_focused":
+        return jnp.where(spiky, sparse, dense)
+    if mode == "spiky_focused":
+        return jnp.where(spiky, dense, sparse)
+    raise ValueError(mode)
+
+
+def _prtu_kernel(ptop_ref, pbot_ref, mu_ref, conic_ref, lhs_ref, spiky_ref,
+                 mask_ref, *, mode: str, coord_prec: str, delta_prec: str,
+                 mul_prec: str, acc_prec: str, slack: float):
+    """One (M_BLK, G_BLK) block of the CAT test matrix.
+
+    ptop/pbot: (M_BLK, 2) — main-diagonal leader coords of each mini-tile PR.
+    mu: (G_BLK, 2), conic: (G_BLK, 3), lhs: (G_BLK,) = ln(255·o) (shared term,
+    computed once outside, as in the CTU), spiky: (G_BLK,) int8.
+    mask: (M_BLK, G_BLK) int8 out.
+    """
+    qc = functools.partial(_quant, kind=coord_prec)
+    out = _alg1_hits(
+        ptx=qc(ptop_ref[:, 0][:, None]),         # (M, 1)
+        pty=qc(ptop_ref[:, 1][:, None]),
+        pbx=qc(pbot_ref[:, 0][:, None]),
+        pby=qc(pbot_ref[:, 1][:, None]),
+        mu_x=qc(mu_ref[:, 0][None, :]),          # (1, G)
+        mu_y=qc(mu_ref[:, 1][None, :]),
+        cxx=qc(conic_ref[:, 0][None, :]),
+        cxy=qc(conic_ref[:, 1][None, :]),
+        cyy=qc(conic_ref[:, 2][None, :]),
+        lhs=lhs_ref[:][None, :],
+        spiky=spiky_ref[:][None, :] != 0,
+        mode=mode, delta_prec=delta_prec, mul_prec=mul_prec,
+        acc_prec=acc_prec, slack=slack)
     mask_ref[...] = out.astype(jnp.int8)
 
 
@@ -160,3 +178,101 @@ def prtu_cat_mask(p_top: jax.Array, p_bot: jax.Array, mu: jax.Array,
         interpret=interpret,
     )(p_top_p, p_bot_p, mu_p, conic_p, lhs_p, spiky_p)
     return out[:m, :g]
+
+
+# ---------------------------------------------------------------------------
+# Entry-stream PRTU kernel (grid over compacted per-tile list entries)
+# ---------------------------------------------------------------------------
+
+KE_BLK = 128  # stream entries per block (lane dimension)
+
+
+def _prtu_entry_kernel(ptop_ref, pbot_ref, orig_ref, mu_ref, conic_ref,
+                       lhs_ref, spiky_ref, mask_ref, *, mode: str,
+                       coord_prec: str, delta_prec: str, mul_prec: str,
+                       acc_prec: str, slack: float):
+    """One (1 tile, KE_BLK entries) block of the survivor-stream CAT test.
+
+    ptop/pbot: (Mt, 2) tile-LOCAL main-diagonal leader coords of the tile's
+    mini-tile PRs (shared by every tile); orig: (1, 2) this tile's pixel
+    origin. mu: (1, KE, 2), conic: (1, KE, 3), lhs: (1, KE) = ln(255·o)
+    with -inf on invalid/padded entries, spiky: (1, KE) int8.
+    mask: (1, KE, Mt) int8 out — entry k of this tile vs mini-tile m.
+    """
+    qc = functools.partial(_quant, kind=coord_prec)
+    ox = orig_ref[0, 0]
+    oy = orig_ref[0, 1]
+    out = _alg1_hits(
+        ptx=qc(ox + ptop_ref[:, 0][None, :]),    # (1, Mt)
+        pty=qc(oy + ptop_ref[:, 1][None, :]),
+        pbx=qc(ox + pbot_ref[:, 0][None, :]),
+        pby=qc(oy + pbot_ref[:, 1][None, :]),
+        mu_x=qc(mu_ref[0, :, 0][:, None]),       # (KE, 1)
+        mu_y=qc(mu_ref[0, :, 1][:, None]),
+        cxx=qc(conic_ref[0, :, 0][:, None]),
+        cxy=qc(conic_ref[0, :, 1][:, None]),
+        cyy=qc(conic_ref[0, :, 2][:, None]),
+        lhs=lhs_ref[0][:, None],                 # (KE, 1)
+        spiky=spiky_ref[0][:, None] != 0,
+        mode=mode, delta_prec=delta_prec, mul_prec=mul_prec,
+        acc_prec=acc_prec, slack=slack)
+    mask_ref[0] = out.astype(jnp.int8)           # (KE, Mt)
+
+
+def prtu_entry_cat_mask(p_top_local: jax.Array, p_bot_local: jax.Array,
+                        tile_origins: jax.Array, mu: jax.Array,
+                        conic: jax.Array, lhs: jax.Array, spiky: jax.Array,
+                        *, mode: str = "smooth_focused",
+                        coord_prec: str = "fp16", delta_prec: str = "fp8",
+                        mul_prec: str = "fp8", acc_prec: str = "fp16",
+                        slack: float = 0.0,
+                        interpret: bool = True) -> jax.Array:
+    """(T, K, Mt) int8 CAT mask over compacted list entries.
+
+    p_top_local/p_bot_local: (Mt, 2) tile-local leader coords; tile_origins:
+    (T, 2); mu/conic/lhs/spiky: per-entry features gathered at the compacted
+    lists, shapes (T, K, 2)/(T, K, 3)/(T, K)/(T, K). Invalid entries must
+    carry lhs = -inf (they then never pass). K is padded to a KE_BLK
+    multiple internally; callers get the unpadded slice back.
+    """
+    t, k = lhs.shape
+    mt = p_top_local.shape[0]
+    kpad = -(-k // KE_BLK) * KE_BLK
+
+    def padk(x):
+        w = [(0, 0)] * x.ndim
+        w[1] = (0, kpad - k)
+        return jnp.pad(x, w)
+
+    mu_p = padk(mu.astype(jnp.float32))
+    conic_p = padk(conic.astype(jnp.float32))
+    lhs_p = jnp.pad(lhs.astype(jnp.float32), ((0, 0), (0, kpad - k)),
+                    constant_values=-jnp.inf)
+    spiky_p = padk(spiky.astype(jnp.int8))
+
+    kernel = functools.partial(_prtu_entry_kernel, mode=mode,
+                               coord_prec=coord_prec, delta_prec=delta_prec,
+                               mul_prec=mul_prec, acc_prec=acc_prec,
+                               slack=slack)
+    out = pl.pallas_call(
+        kernel,
+        grid=(t, kpad // KE_BLK),
+        in_specs=[
+            pl.BlockSpec((mt, 2), lambda i, j: (0, 0)),
+            pl.BlockSpec((mt, 2), lambda i, j: (0, 0)),
+            pl.BlockSpec((1, 2), lambda i, j: (i, 0)),
+            pl.BlockSpec((1, KE_BLK, 2), lambda i, j: (i, j, 0)),
+            pl.BlockSpec((1, KE_BLK, 3), lambda i, j: (i, j, 0)),
+            pl.BlockSpec((1, KE_BLK), lambda i, j: (i, j)),
+            pl.BlockSpec((1, KE_BLK), lambda i, j: (i, j)),
+        ],
+        out_specs=pl.BlockSpec((1, KE_BLK, mt), lambda i, j: (i, j, 0)),
+        out_shape=jax.ShapeDtypeStruct((t, kpad, mt), jnp.int8),
+        # Every (tile, entry-block) is independent — no carried state, both
+        # grid axes parallel, same as the dense PRTU kernel.
+        compiler_params=CompilerParams(
+            dimension_semantics=("parallel", "parallel")),
+        interpret=interpret,
+    )(p_top_local.astype(jnp.float32), p_bot_local.astype(jnp.float32),
+      tile_origins.astype(jnp.float32), mu_p, conic_p, lhs_p, spiky_p)
+    return out[:, :k, :]

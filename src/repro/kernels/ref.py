@@ -8,9 +8,18 @@ from repro.core.precision import PrecisionScheme
 from repro.core.cat import pr_gaussian_weight
 from repro.core.gaussians import ALPHA_MIN
 from repro.core.raster import T_EPS
-from repro.kernels.render import K_BLK
+from repro.kernels.render import K_BLK, pixel_minitile_index
 
 ALPHA_MAX = 0.99
+
+
+def _allow_pixels(allow, p: int):
+    """(T, K, Mt) i8 per-entry mask -> (T, P, K) bool per-pixel lanes.
+
+    Oracle-side counterpart of the kernels' in-VMEM one-hot expansion
+    (`render._expand_allow`), sharing its pixel→mini-tile derivation."""
+    mt_in_tile = pixel_minitile_index(p, allow.shape[2])       # (P,)
+    return allow[:, :, mt_in_tile].swapaxes(1, 2) != 0         # (T, P, K)
 
 
 def prtu_cat_mask_ref(p_top, p_bot, mu, conic, lhs, spiky, *,
@@ -67,7 +76,7 @@ def blend_tiles_fused_ref(pix, feat, colors, valid, allow,
     dy = py - my
     e = 0.5 * (cxx * dx * dx + cyy * dy * dy) + cxy * dx * dy
     a = jnp.minimum(op * jnp.exp(-e), ALPHA_MAX)      # (T, P, K)
-    lane = (valid[:, None, :] != 0) & (jnp.swapaxes(allow, 1, 2) != 0)
+    lane = (valid[:, None, :] != 0) & _allow_pixels(allow, pix.shape[1])
     a = jnp.where(lane & (a >= ALPHA_MIN), a, 0.0)
     tcum = jnp.cumprod(1.0 - a, axis=-1)
     t_excl = jnp.concatenate([jnp.ones_like(tcum[..., :1]),
@@ -110,7 +119,7 @@ def blend_tiles_ref(pix, feat, colors, valid, allow):
     e = 0.5 * (cxx * dx * dx + cyy * dy * dy) + cxy * dx * dy
     a = jnp.minimum(op * jnp.exp(-e), ALPHA_MAX)      # (T, P, K)
     ok = ((valid[:, None, :] != 0)
-          & (jnp.swapaxes(allow, 1, 2) != 0) & (a >= ALPHA_MIN))
+          & _allow_pixels(allow, pix.shape[1]) & (a >= ALPHA_MIN))
     a = jnp.where(ok, a, 0.0)
     tcum = jnp.cumprod(1.0 - a, axis=-1)
     t_excl = jnp.concatenate([jnp.ones_like(tcum[..., :1]),

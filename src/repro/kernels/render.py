@@ -35,13 +35,19 @@ per-tile count of K blocks actually executed all come back as outputs.
 
 Inputs are pre-gathered per-tile feature blocks (the analogue of the feature
 FIFOs in Fig. 6):
-    pix    (T, P, 2)  pixel centers
-    feat   (T, K, 8)  = [mean_x, mean_y, cxx, cxy, cyy, opacity, 0, 0]
+    pix    (T, P, 2)   pixel centers
+    feat   (T, K, 8)   = [mean_x, mean_y, cxx, cxy, cyy, opacity, 0, 0]
     colors (T, K, 3)
-    valid  (T, K)     int8 (list slot occupied)
-    allow  (T, K, P)  int8 per-pixel CAT/mini-tile mask
-Output: (T, P, 3) blended RGB + (T, P) final transmittance (+ the measured
-work counters for the fused kernel; see `FusedBlendOut`).
+    valid  (T, K)      int8 (list slot occupied)
+    allow  (T, K, Mt)  int8 per-ENTRY CAT mask over the tile's Mt mini-tiles
+                       (the survivor-stream representation — 16× smaller
+                       than a per-pixel mask; `StreamHierarchyOut
+                       .entry_mini_mask`)
+The kernels expand the per-entry mask to pixel lanes in VMEM with a one-hot
+(P, Mt) pixel→mini-tile matmul (static per grid; matmul rather than gather
+so the expansion lowers to the MXU instead of an unsupported dynamic
+gather). Output: (T, P, 3) blended RGB + (T, P) final transmittance (+ the
+measured work counters for the fused kernel; see `FusedBlendOut`).
 """
 from __future__ import annotations
 
@@ -64,8 +70,17 @@ ALPHA_MAX = 0.99
 K_BLK = 128
 
 
+def _expand_allow(allow, mtmap):
+    """(K, Mt) i8 per-entry mask -> (P, K) bool pixel-lane mask.
+
+    mtmap: (P, Mt) f32 one-hot pixel→mini-tile map. Each row has exactly one
+    1, so the matmul reproduces the gather exactly (values stay 0/1)."""
+    return (mtmap @ allow.astype(jnp.float32).T) > 0.5
+
+
 def _blend_kernel(pix_ref, feat_ref, col_ref, valid_ref, allow_ref,
-                  rgb_ref, trans_ref, t_scr, acc_scr, *, n_kblocks: int):
+                  mtmap_ref, rgb_ref, trans_ref, t_scr, acc_scr,
+                  *, n_kblocks: int):
     k = pl.program_id(1)
 
     @pl.when(k == 0)
@@ -77,7 +92,7 @@ def _blend_kernel(pix_ref, feat_ref, col_ref, valid_ref, allow_ref,
     feat = feat_ref[0]                     # (K, 8)
     col = col_ref[0]                       # (K, 3)
     valid = valid_ref[0]                   # (K,)
-    allow = allow_ref[0]                   # (K, P)
+    allow = allow_ref[0]                   # (K, Mt) per-entry mask
 
     px = pix[:, 0][:, None]                # (P, 1)
     py = pix[:, 1][:, None]
@@ -92,7 +107,8 @@ def _blend_kernel(pix_ref, feat_ref, col_ref, valid_ref, allow_ref,
     dy = py - my
     e = 0.5 * (cxx * dx * dx + cyy * dy * dy) + cxy * dx * dy
     a = jnp.minimum(op * jnp.exp(-e), ALPHA_MAX)
-    ok = (valid[None, :] != 0) & (allow.T != 0) & (a >= ALPHA_MIN)
+    allow_pk = _expand_allow(allow, mtmap_ref[...])          # (P, K)
+    ok = (valid[None, :] != 0) & allow_pk & (a >= ALPHA_MIN)
     a = jnp.where(ok, a, 0.0)              # (P, K)
 
     # Sequential front-to-back blend within the block via cumprod.
@@ -110,13 +126,35 @@ def _blend_kernel(pix_ref, feat_ref, col_ref, valid_ref, allow_ref,
         trans_ref[0] = t_scr[...]
 
 
+def pixel_minitile_index(p: int, mt: int) -> jnp.ndarray:
+    """(P,) tile-local mini-tile index of each tile pixel (row-major).
+
+    Shape-only derivation of `raster._minitile_index_in_tile` for kernel
+    wrappers/oracles that see operands but no TileGrid: tile = √P and
+    minitile = tile/√Mt — both perfect squares by TileGrid's invariants."""
+    tile = int(round(p ** 0.5))
+    mtx = int(round(mt ** 0.5))
+    m = tile // mtx
+    dy, dx = jnp.meshgrid(jnp.arange(tile), jnp.arange(tile), indexing="ij")
+    return ((dy // m) * mtx + (dx // m)).reshape(-1)
+
+
+def _pixel_minitile_onehot(p: int, mt: int) -> jnp.ndarray:
+    """(P, Mt) f32 one-hot form of `pixel_minitile_index` (kernel operand)."""
+    mt_in_tile = pixel_minitile_index(p, mt)
+    return (mt_in_tile[:, None] == jnp.arange(mt)[None, :]).astype(
+        jnp.float32)
+
+
 def blend_tiles(pix: jax.Array, feat: jax.Array, colors: jax.Array,
                 valid: jax.Array, allow: jax.Array,
                 interpret: bool = True):
     """pix: (T, P, 2); feat: (T, K, 8); colors: (T, K, 3); valid: (T, K) i8;
-    allow: (T, K, P) i8. Returns (rgb (T, P, 3), transmittance (T, P))."""
+    allow: (T, K, Mt) i8 per-entry mask over the tile's mini-tiles.
+    Returns (rgb (T, P, 3), transmittance (T, P))."""
     t, p, _ = pix.shape
     k = feat.shape[1]
+    mt = allow.shape[2]
     kp = -(-k // K_BLK) * K_BLK
     if kp != k:
         padk = kp - k
@@ -125,6 +163,7 @@ def blend_tiles(pix: jax.Array, feat: jax.Array, colors: jax.Array,
         valid = jnp.pad(valid, ((0, 0), (0, padk)))
         allow = jnp.pad(allow, ((0, 0), (0, padk), (0, 0)))
     n_kblocks = kp // K_BLK
+    mtmap = _pixel_minitile_onehot(p, mt)
 
     kernel = functools.partial(_blend_kernel, n_kblocks=n_kblocks)
     rgb, trans = pl.pallas_call(
@@ -135,7 +174,8 @@ def blend_tiles(pix: jax.Array, feat: jax.Array, colors: jax.Array,
             pl.BlockSpec((1, K_BLK, 8), lambda i, j: (i, j, 0)),
             pl.BlockSpec((1, K_BLK, 3), lambda i, j: (i, j, 0)),
             pl.BlockSpec((1, K_BLK), lambda i, j: (i, j)),
-            pl.BlockSpec((1, K_BLK, p), lambda i, j: (i, j, 0)),
+            pl.BlockSpec((1, K_BLK, mt), lambda i, j: (i, j, 0)),
+            pl.BlockSpec((p, mt), lambda i, j: (0, 0)),
         ],
         out_specs=[
             pl.BlockSpec((1, p, 3), lambda i, j: (i, 0, 0)),
@@ -154,7 +194,7 @@ def blend_tiles(pix: jax.Array, feat: jax.Array, colors: jax.Array,
         interpret=interpret,
     )(pix.astype(jnp.float32), feat.astype(jnp.float32),
       colors.astype(jnp.float32), valid.astype(jnp.int8),
-      allow.astype(jnp.int8))
+      allow.astype(jnp.int8), mtmap)
     return rgb, trans
 
 
@@ -174,9 +214,9 @@ class FusedBlendOut(NamedTuple):
 
 
 def _fused_blend_kernel(kb_ref, pix_ref, feat_ref, col_ref, valid_ref,
-                        allow_ref, rgb_ref, trans_ref, proc_ref, blnd_ref,
-                        alive_ref, kproc_ref, t_scr, acc_scr, pcnt_scr,
-                        bcnt_scr, kp_scr, *, n_kblocks: int):
+                        allow_ref, mtmap_ref, rgb_ref, trans_ref, proc_ref,
+                        blnd_ref, alive_ref, kproc_ref, t_scr, acc_scr,
+                        pcnt_scr, bcnt_scr, kp_scr, *, n_kblocks: int):
     i = pl.program_id(0)
     k = pl.program_id(1)
 
@@ -203,7 +243,7 @@ def _fused_blend_kernel(kb_ref, pix_ref, feat_ref, col_ref, valid_ref,
         feat = feat_ref[0]                 # (K, 8)
         col = col_ref[0]                   # (K, 3)
         valid = valid_ref[0]               # (K,)
-        allow = allow_ref[0]               # (K, P)
+        allow = allow_ref[0]               # (K, Mt) per-entry mask
 
         px = pix[:, 0][:, None]            # (P, 1)
         py = pix[:, 1][:, None]
@@ -218,7 +258,8 @@ def _fused_blend_kernel(kb_ref, pix_ref, feat_ref, col_ref, valid_ref,
         dy = py - my
         e = 0.5 * (cxx * dx * dx + cyy * dy * dy) + cxy * dx * dy
         a = jnp.minimum(op * jnp.exp(-e), ALPHA_MAX)
-        lane = (valid[None, :] != 0) & (allow.T != 0)   # (P, K)
+        allow_pk = _expand_allow(allow, mtmap_ref[...])
+        lane = (valid[None, :] != 0) & allow_pk         # (P, K)
         a = jnp.where(lane & (a >= ALPHA_MIN), a, 0.0)
 
         cum = jnp.cumprod(1.0 - a, axis=1)
@@ -266,6 +307,7 @@ def blend_tiles_fused(pix: jax.Array, feat: jax.Array, colors: jax.Array,
     """
     t, p, _ = pix.shape
     k = feat.shape[1]
+    mt = allow.shape[2]
     kp = -(-k // K_BLK) * K_BLK
     if kp != k:
         padk = kp - k
@@ -274,6 +316,7 @@ def blend_tiles_fused(pix: jax.Array, feat: jax.Array, colors: jax.Array,
         valid = jnp.pad(valid, ((0, 0), (0, padk)))
         allow = jnp.pad(allow, ((0, 0), (0, padk), (0, 0)))
     n_kblocks = kp // K_BLK
+    mtmap = _pixel_minitile_onehot(p, mt)
 
     if kblock_bound is None:
         # Compacted lists put valid entries first, so the occupied-block
@@ -291,7 +334,8 @@ def blend_tiles_fused(pix: jax.Array, feat: jax.Array, colors: jax.Array,
             pl.BlockSpec((1, K_BLK, 8), lambda i, j, kb: (i, j, 0)),
             pl.BlockSpec((1, K_BLK, 3), lambda i, j, kb: (i, j, 0)),
             pl.BlockSpec((1, K_BLK), lambda i, j, kb: (i, j)),
-            pl.BlockSpec((1, K_BLK, p), lambda i, j, kb: (i, j, 0)),
+            pl.BlockSpec((1, K_BLK, mt), lambda i, j, kb: (i, j, 0)),
+            pl.BlockSpec((p, mt), lambda i, j, kb: (0, 0)),
         ],
         out_specs=[
             pl.BlockSpec((1, p, 3), lambda i, j, kb: (i, 0, 0)),
@@ -325,7 +369,7 @@ def blend_tiles_fused(pix: jax.Array, feat: jax.Array, colors: jax.Array,
         interpret=interpret,
     )(kblock_bound, pix.astype(jnp.float32), feat.astype(jnp.float32),
       colors.astype(jnp.float32), valid.astype(jnp.int8),
-      allow.astype(jnp.int8))
+      allow.astype(jnp.int8), mtmap)
     return FusedBlendOut(
         rgb=rgb, trans=trans, processed=proc, blended=blnd,
         entry_alive=(alive[:, :k] != 0),

@@ -94,14 +94,21 @@ class RenderEngine:
     fused: when not None, overrides base_config.fused — serve through the
         fused contribution-aware raster kernel (True) or the pure-jnp
         parity path (False). Part of the jit-cache key either way.
+    dataflow: when not None, overrides base_config.dataflow — 'stream'
+        (the default survivor-stream pipeline; O(tiles·k_max) CAT memory,
+        the only path that fits production scene sizes) or 'dense' (the
+        O(regions×N) parity oracle). Part of the jit-cache key either way.
     """
 
     def __init__(self, base_config: RenderConfig = FLICKER_CONFIG, *,
                  mesh=None, max_batch: int = 64, pad_scenes: bool = True,
                  telemetry: Optional[Telemetry] = None,
-                 fused: Optional[bool] = None):
+                 fused: Optional[bool] = None,
+                 dataflow: Optional[str] = None):
         if fused is not None:
             base_config = dataclasses.replace(base_config, fused=fused)
+        if dataflow is not None:
+            base_config = dataclasses.replace(base_config, dataflow=dataflow)
         self.base_config = base_config
         self.mesh = mesh
         self.max_batch = max_batch

@@ -10,7 +10,7 @@ from repro.core.culling import TileGrid
 from repro.core.cat import SamplingMode, minitile_cat_mask
 from repro.core.precision import FULL_FP32, FULL_FP16, FULL_FP8, MIXED
 from repro.core import raster
-from repro.core.hierarchy import hierarchical_test
+from repro.core.hierarchy import stream_hierarchical_test
 from repro.kernels import ops as kops
 from repro.kernels import prtu, ref as kref, render as krender
 
@@ -65,13 +65,11 @@ def test_blend_kernel_matches_oracle(n, k_max):
     cam = default_camera(64, 64)
     proj = project(scene, cam)
     grid = TileGrid(64, 64)
-    h = hierarchical_test(proj, grid)
-    order = raster.depth_order(proj)
-    lists, valid, _ = raster.compact_tile_lists(h.tile_mask, order, k_max)
-    rgb_k, t_k = kops.blend_tiles_pallas(proj, grid, lists, valid,
-                                         h.minitile_mask)
-    rgb_r, t_r = kops.blend_tiles_reference(proj, grid, lists, valid,
-                                            h.minitile_mask)
+    h = stream_hierarchical_test(proj, grid, k_max=k_max)
+    rgb_k, t_k = kops.blend_tiles_pallas(proj, grid, h.lists, h.valid,
+                                         h.entry_mini_mask)
+    rgb_r, t_r = kops.blend_tiles_reference(proj, grid, h.lists, h.valid,
+                                            h.entry_mini_mask)
     np.testing.assert_allclose(np.asarray(rgb_k), np.asarray(rgb_r),
                                atol=2e-4)
     np.testing.assert_allclose(np.asarray(t_k), np.asarray(t_r), atol=2e-4)
@@ -99,10 +97,8 @@ def test_pallas_pipeline_matches_jnp_pipeline():
 
 def _compacted(scene, cam, grid, k_max):
     proj = project(scene, cam)
-    h = hierarchical_test(proj, grid)
-    order = raster.depth_order(proj)
-    lists, valid, _ = raster.compact_tile_lists(h.tile_mask, order, k_max)
-    return proj, h, lists, valid
+    h = stream_hierarchical_test(proj, grid, k_max=k_max)
+    return proj, h, h.lists, h.valid
 
 
 @pytest.mark.parametrize("n,k_max", [(300, 128), (900, 384)])
@@ -115,9 +111,9 @@ def test_fused_kernel_matches_oracle(n, k_max):
     grid = TileGrid(64, 64)
     proj, h, lists, valid = _compacted(scene, cam, grid, k_max)
     ops = kops.gather_tile_features(proj, grid, lists, valid,
-                                    h.minitile_mask)
+                                    h.entry_mini_mask)
     fb = kops.blend_tiles_fused_pallas(proj, grid, lists, valid,
-                                       h.minitile_mask)
+                                       h.entry_mini_mask)
     rgb_r, t_r, proc_r, bl_r, ea_r, kp_r, nb_r = \
         kref.blend_tiles_fused_ref(*ops)
     np.testing.assert_allclose(np.asarray(fb.rgb), np.asarray(rgb_r),
@@ -142,7 +138,7 @@ def test_fused_adaptive_trip_count_skips_short_lists():
     grid = TileGrid(64, 64)
     proj, h, lists, valid = _compacted(scene, cam, grid, 512)
     fb = kops.blend_tiles_fused_pallas(proj, grid, lists, valid,
-                                       h.minitile_mask)
+                                       h.entry_mini_mask)
     total = grid.num_tiles * fb.kblocks_total
     executed = int(np.sum(np.asarray(fb.kblocks_processed)))
     assert executed < total
@@ -160,9 +156,9 @@ def test_fused_early_termination_on_saturating_scene(wall_scene):
     grid = TileGrid(64, 64)
     proj, h, lists, valid = _compacted(wall_scene, cam, grid, 768)
     rgb_full, t_full = kops.blend_tiles_pallas(proj, grid, lists, valid,
-                                               h.minitile_mask)
+                                               h.entry_mini_mask)
     fb = kops.blend_tiles_fused_pallas(proj, grid, lists, valid,
-                                       h.minitile_mask)
+                                       h.entry_mini_mask)
     np.testing.assert_allclose(np.asarray(fb.rgb), np.asarray(rgb_full),
                                atol=2e-4)
     nvalid = np.asarray(valid).sum(axis=1)

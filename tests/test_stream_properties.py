@@ -1,0 +1,22 @@
+"""Hypothesis property: stream CAT masks == dense CAT masks gathered at the
+compacted indices, across all 4 sampling modes × {FULL_FP32, MIXED}.
+
+Skipped (whole module) when hypothesis is absent — same convention as
+test_cat.py; tests/test_stream.py covers the same property with fixed seeds
+so the parity is exercised even without hypothesis.
+"""
+import pytest
+hypothesis = pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st
+
+from repro.core.cat import SamplingMode
+from repro.core.precision import FULL_FP32, MIXED
+from test_stream import check_entry_cat_equals_dense_gathered
+
+
+@pytest.mark.parametrize("prec", [FULL_FP32, MIXED], ids=["fp32", "mixed"])
+@pytest.mark.parametrize("mode", list(SamplingMode))
+@settings(deadline=None, max_examples=6)
+@given(seed=st.integers(0, 2**31 - 1), n=st.integers(50, 400))
+def test_entry_cat_equals_dense_cat_gathered_property(mode, prec, seed, n):
+    check_entry_cat_equals_dense_gathered(mode, prec, seed, n)
