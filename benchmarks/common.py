@@ -14,10 +14,11 @@ import time
 import jax
 import jax.numpy as jnp
 
-from repro.core.gaussians import random_scene, project
+from repro.core.gaussians import random_scene
 from repro.core.camera import default_camera
 from repro.core.culling import TileGrid
-from repro.core.pipeline import RenderConfig, render_with_stats
+from repro.core.pipeline import RenderConfig
+from repro.core.renderer import as_plan
 from repro.core import perfmodel as pm
 
 IMG = 128          # benchmark image side
@@ -77,8 +78,11 @@ def grid():
 
 
 def run_cfg(scene, cfg: RenderConfig):
-    """jit + execute one render; returns (RenderOut, counters, seconds)."""
-    fn = jax.jit(lambda s: render_with_stats(s, camera(), cfg))
+    """jit + execute one render; returns (RenderOut, counters, seconds).
+    cfg: legacy RenderConfig, Renderer, or RenderPlan (normalized via
+    `as_plan`)."""
+    plan = as_plan(cfg)
+    fn = jax.jit(lambda s: plan.render_with_stats(s, camera()))
     out, counters = jax.block_until_ready(fn(scene))   # compile + run
     t0 = time.perf_counter()
     out, counters = jax.block_until_ready(fn(scene))

@@ -2,7 +2,6 @@
 duplicate-Gaussian counts across tile sizes."""
 from __future__ import annotations
 
-import dataclasses
 import time
 
 import jax.numpy as jnp

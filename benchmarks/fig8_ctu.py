@@ -13,7 +13,7 @@ from __future__ import annotations
 import time
 
 from repro.core.cat import SamplingMode
-from repro.core.precision import MIXED, FULL_FP32
+from repro.core.precision import MIXED
 from repro.core import perfmodel as pm
 from benchmarks import common as C
 

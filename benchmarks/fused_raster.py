@@ -7,7 +7,7 @@ Compares the two Pallas blend kernels on identical per-tile operands
   fused    kernels.render.blend_tiles_fused  — in-kernel early termination
                                                + per-tile adaptive trip count
 
-and the two end-to-end pipelines (`RenderConfig(fused=...)`, jnp CAT mask).
+and the two end-to-end pipelines (`RasterConfig(fused=...)`, jnp CAT mask).
 The default scene has high opacity so tiles saturate early — the regime the
 paper's VRU early termination targets. Reported per backend:
 
@@ -40,11 +40,11 @@ import time
 import jax
 import jax.numpy as jnp
 
-from repro.core import random_scene, default_camera, project, RenderConfig
+from repro.core import (random_scene, default_camera, project, GridConfig,
+                        TestConfig, StreamConfig, RasterConfig, RenderPlan)
 from repro.core.gaussians import GaussianScene
 from repro.core.precision import MIXED
 from repro.core.hierarchy import stream_hierarchical_test
-from repro.core.pipeline import render_with_stats
 from repro.kernels import ops as kops, render as krender
 
 
@@ -80,15 +80,16 @@ def make_scene(args) -> GaussianScene:
 def bench(args) -> dict:
     scene = make_scene(args)
     cam = default_camera(args.res, args.res)
-    cfg = RenderConfig(height=args.res, width=args.res, method="cat",
-                       precision=MIXED, k_max=args.k_max)
-    grid = cfg.grid()
+    plan = RenderPlan(grid=GridConfig(height=args.res, width=args.res),
+                      test=TestConfig(method="cat", precision=MIXED),
+                      stream=StreamConfig(k_max=args.k_max))
+    grid = plan.grid.make()
 
     # Shared operands: project -> stream hierarchy (Stage-1 + compaction +
     # entry CAT) -> gather.
     proj = project(scene, cam)
-    h = stream_hierarchical_test(proj, grid, cfg.mode, cfg.precision,
-                                 k_max=cfg.k_max)
+    h = stream_hierarchical_test(proj, grid, plan.test.mode,
+                                 plan.test.precision, k_max=args.k_max)
     operands = kops.gather_tile_features(proj, grid, h.lists, h.valid,
                                          h.entry_mini_mask)
     operands = jax.block_until_ready(operands)
@@ -107,8 +108,8 @@ def bench(args) -> dict:
     # parity path the fused kernel is tested against.
     e2e = {}
     for name, fused in (("unfused", False), ("fused", True)):
-        c = dataclasses.replace(cfg, fused=fused)
-        fn = jax.jit(lambda s, cm, c=c: render_with_stats(s, cm, c))
+        p = dataclasses.replace(plan, raster=RasterConfig(fused=fused))
+        fn = jax.jit(lambda s, cm, p=p: p.render_with_stats(s, cm))
         e2e[name] = dict(t=_time(lambda: fn(scene, cam), args.repeats))
         _, counters = jax.block_until_ready(fn(scene, cam))
         e2e[name]["swept_per_pixel"] = float(counters["swept_per_pixel"])

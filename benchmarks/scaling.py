@@ -30,12 +30,10 @@ import json
 import time
 
 import jax
-import jax.numpy as jnp
 
-from repro.core import random_scene, default_camera, project
-from repro.core.culling import TileGrid, aabb_mask
-from repro.core.pipeline import RenderConfig, render_with_stats, \
-    cat_mask_elems
+from repro.core import (random_scene, default_camera, GridConfig, TestConfig,
+                        StreamConfig, RenderPlan, cat_mask_elems,
+                        measure_k_max)
 from repro.core.precision import MIXED
 
 NS = (4096, 32768, 131072)
@@ -52,24 +50,26 @@ def make_scene(n: int):
 
 
 def k_max_for(scene, res: int) -> int:
-    """Per-tile list capacity (the paper's FIFO-depth knob), measured: the
-    longest Stage-1 survivor list of the frame, rounded up to a K block.
-    Shared by both dataflows, so the comparison stays apples-to-apples and
-    no point overflows."""
-    cam = default_camera(res, res)
-    grid = TileGrid(res, res)
-    proj = project(scene, cam)
-    longest = int(jnp.max(jnp.sum(
-        aabb_mask(proj, grid.tile_origins(), grid.tile), axis=1)))
-    return max(512, -(-longest // 128) * 128)
+    """Per-tile list capacity (the paper's FIFO-depth knob), measured with
+    the same probe machinery `serving.RenderEngine.register_scene`'s
+    `probe_cameras=` uses: the longest Stage-1 survivor list over the probe
+    set, pow2-bucketed (`core.renderer.measure_k_max`). Shared by both
+    dataflows, so the comparison stays apples-to-apples and no point
+    overflows."""
+    return measure_k_max(scene, [default_camera(res, res)], cap=scene.n)
+
+
+def plan_for(res: int, k_max: int, dataflow: str) -> RenderPlan:
+    return RenderPlan(grid=GridConfig(height=res, width=res),
+                      test=TestConfig(method="cat", precision=MIXED),
+                      stream=StreamConfig(k_max=k_max), dataflow=dataflow)
 
 
 def run_point(scene, n: int, res: int, k_max: int, dataflow: str,
               repeats: int) -> dict:
-    cfg = RenderConfig(height=res, width=res, method="cat",
-                       precision=MIXED, k_max=k_max, dataflow=dataflow)
+    plan = plan_for(res, k_max, dataflow)
     cam = default_camera(res, res)
-    fn = jax.jit(lambda s: render_with_stats(s, cam, cfg))
+    fn = jax.jit(lambda s: plan.render_with_stats(s, cam))
     out, counters = jax.block_until_ready(fn(scene))   # compile + warm
     t0 = time.perf_counter()
     for _ in range(repeats):
@@ -77,7 +77,7 @@ def run_point(scene, n: int, res: int, k_max: int, dataflow: str,
     wall = (time.perf_counter() - t0) / repeats
     return dict(
         feasible=True,
-        k_max=cfg.k_max,
+        k_max=k_max,
         wall_s=wall,
         mask_bytes=float(counters["cat_mask_bytes"]),
         overflow=bool(out.overflow),
@@ -105,7 +105,7 @@ def main():
     for n in ns:
         scene = make_scene(n)
         for res in ress:
-            grid = RenderConfig(height=res, width=res).grid()
+            grid = GridConfig(height=res, width=res).make()
             km = k_max_for(scene, res)
             row = dict(n=n, res=res)
             for dataflow in ("dense", "stream"):

@@ -28,12 +28,13 @@ import time
 import numpy as np
 import jax
 
-from repro.core import random_scene, orbit_camera, RenderConfig
+from repro.core import (random_scene, orbit_camera, Renderer, TestConfig,
+                        RasterConfig)
 from repro.serving import RenderEngine, RenderRequest
 
 
-def bench_backend(label: str, cfg: RenderConfig, args) -> list[dict]:
-    engine = RenderEngine(cfg, max_batch=max(args.batches))
+def bench_backend(label: str, renderer: Renderer, args) -> list[dict]:
+    engine = RenderEngine(renderer, max_batch=max(args.batches))
     engine.register_scene("bench", random_scene(
         jax.random.PRNGKey(0), args.gaussians, scale_range=(-2.9, -2.4),
         stretch=4.0, opacity_range=(-1.0, 3.0)))
@@ -76,11 +77,13 @@ def main():
     # The eff baseline and trend check assume ascending batch sizes.
     args.batches = sorted(set(args.batches))
 
-    rows = bench_backend("jnp", RenderConfig(), args)
+    rows = bench_backend("jnp", Renderer(), args)
     if args.pallas_too:
-        rows += bench_backend("pallas", RenderConfig(use_pallas=True), args)
+        rows += bench_backend(
+            "pallas", Renderer(test=TestConfig(backend="pallas")), args)
     if args.fused_too:
-        rows += bench_backend("fused", RenderConfig(fused=True), args)
+        rows += bench_backend(
+            "fused", Renderer(raster=RasterConfig(fused=True)), args)
 
     print(f"\nserve throughput ({args.gaussians} Gaussians, {args.res}px, "
           f"{args.repeats} repeats)")

@@ -19,7 +19,8 @@ import jax.numpy as jnp
 from repro.core.gaussians import random_scene
 from repro.core.camera import default_camera
 from repro.core.culling import TileGrid
-from repro.core.pipeline import RenderConfig, render, psnr, ssim
+from repro.core.pipeline import RenderConfig, psnr, ssim
+from repro.core.renderer import as_plan
 from repro.core.training import fit, TrainConfig
 from repro.core.pruning import contribution_scores, prune
 from repro.core.cat import SamplingMode
@@ -71,19 +72,19 @@ def run(emit=C.emit):
         scene, cam, gt, cfg = fit_scene(seed)
         grid = TileGrid(FIT_IMG, FIT_IMG)
 
-        base = render(scene, cam, cfg).image
+        base = as_plan(cfg).render(scene, cam).image
         scores = contribution_scores(scene, [cam], grid, k_max=FIT_N)
         pscene, _ = prune(scene, scores, keep_frac=0.6)
-        prun = render(pscene, cam, cfg).image
+        prun = as_plan(cfg).render(pscene, cam).image
         import dataclasses
         ours_cfg = dataclasses.replace(cfg, method="cat",
                                        mode=SamplingMode.SMOOTH_FOCUSED,
                                        precision=MIXED)
-        ours = render(pscene, cam, ours_cfg).image
+        ours = as_plan(ours_cfg).render(pscene, cam).image
         # paper-faithful CTU (no conservative threshold slack)
         pf_cfg = dataclasses.replace(
             ours_cfg, precision=dataclasses.replace(MIXED, slack=0.0))
-        ours_pf = render(pscene, cam, pf_cfg).image
+        ours_pf = as_plan(pf_cfg).render(pscene, cam).image
         rows[ds] = dict(
             base=(float(psnr(base, gt)), float(ssim(base, gt))),
             prun=(float(psnr(prun, gt)), float(ssim(prun, gt))),

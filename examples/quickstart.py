@@ -4,10 +4,12 @@ contribution-aware pipeline — on quality, per-pixel work, and modeled FPS,
 then show the fused raster path doing the same work with a fraction of the
 lane sweep.
 
-Uses the post-serving-PR API throughout: scenes are registered once on a
-`RenderEngine`, camera poses arrive as `RenderRequest`s, and whole batches
-render in one vmapped+jitted call (`core.pipeline.render_batch_with_stats`
-under the hood).
+Uses the staged `Renderer` API throughout: each design is a `Renderer`
+assembled from per-stage configs (`TestConfig` for the hierarchical test,
+`RasterConfig` for the blend backend), scenes are registered once on a
+`RenderEngine` with a camera probe set that *measures* their k_max
+(`probe_cameras=`), and whole batches render in one vmapped+jitted call
+(`RenderPlan.render_batch_with_stats` under the hood).
 
     PYTHONPATH=src python examples/quickstart.py [--fast]
 """
@@ -17,7 +19,8 @@ import jax
 import numpy as np
 
 from repro.core import (random_scene, orbit_camera, project, TileGrid,
-                        RenderConfig, SamplingMode, psnr, MIXED, FULL_FP32)
+                        Renderer, TestConfig, RasterConfig, SamplingMode,
+                        psnr, MIXED, FULL_FP32)
 from repro.core import perfmodel as pm
 from repro.core.raster import render_reference
 from repro.serving import RenderEngine, RenderRequest
@@ -42,27 +45,41 @@ def main():
            for cam in cameras]
 
     configs = {
-        "vanilla-aabb": RenderConfig(method="aabb", precision=FULL_FP32),
-        "gscore-obb": RenderConfig(method="obb", precision=FULL_FP32),
-        "flicker-cat": RenderConfig(method="cat",
-                                    mode=SamplingMode.SMOOTH_FOCUSED,
-                                    precision=MIXED),
-        "flicker-fused": RenderConfig(method="cat",
-                                      mode=SamplingMode.SMOOTH_FOCUSED,
-                                      precision=MIXED, fused=True),
+        "vanilla-aabb": Renderer(test=TestConfig(method="aabb",
+                                                 precision=FULL_FP32)),
+        "gscore-obb": Renderer(test=TestConfig(method="obb",
+                                               precision=FULL_FP32)),
+        "flicker-cat": Renderer(test=TestConfig(
+            method="cat", mode=SamplingMode.SMOOTH_FOCUSED, precision=MIXED)),
+        "flicker-fused": Renderer(test=TestConfig(
+            method="cat", mode=SamplingMode.SMOOTH_FOCUSED, precision=MIXED),
+            raster=RasterConfig(fused=True)),
     }
     print(f"\n{'config':14s} {'PSNR':>7s} {'work/px':>8s} {'swept/px':>9s} "
           f"{'model-FPS':>10s}")
-    for name, cfg in configs.items():
-        engine = RenderEngine(cfg, max_batch=4)
-        engine.register_scene("demo", scene, k_max=n)
+    k_max = None
+    for name, renderer in configs.items():
+        engine = RenderEngine(renderer, max_batch=4)
+        if k_max is None:
+            # probe-driven k_max: measured once from the Stage-1 survivor
+            # histogram over the cameras we are about to serve (the
+            # measurement depends only on scene + grid, so the other
+            # configs reuse it).
+            entry = engine.register_scene("demo", scene,
+                                          probe_cameras=cameras)
+            k_max = entry.k_max
+            print(f"(probe-measured k_max = {entry.k_max} "
+                  f"vs scene bucket {entry.n_bucket})")
+        else:
+            entry = engine.register_scene("demo", scene, k_max=k_max)
         results = engine.render_batch(
             [RenderRequest("demo", cam) for cam in cameras])
         quality = float(np.mean([float(psnr(r.image, gt))
                                  for r, gt in zip(results, gts)]))
         counters = {k: float(v) for k, v in results[0].counters.items()}
-        hw = pm.FLICKER_HW if cfg.method == "cat" else \
-            (pm.GSCORE_HW if cfg.method == "obb" else pm.FLICKER_NO_CTU)
+        method = renderer.plan.test.method
+        hw = pm.FLICKER_HW if method == "cat" else \
+            (pm.GSCORE_HW if method == "obb" else pm.FLICKER_NO_CTU)
         w = pm.Workload.from_counters(counters, height=res, width=res)
         fps = pm.frame_time_s(w, hw)["fps"]
         swept = counters.get("swept_per_pixel", float("nan"))

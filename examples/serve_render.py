@@ -9,7 +9,7 @@ import argparse
 
 import numpy as np
 
-from repro.core import orbit_camera, RenderConfig
+from repro.core import orbit_camera, Renderer, TestConfig
 from repro.serving import RenderEngine, MicroBatcher, register_demo_scenes
 
 
@@ -22,13 +22,19 @@ def main():
     ap.add_argument("--pallas", action="store_true")
     args = ap.parse_args()
 
-    engine = RenderEngine(RenderConfig(use_pallas=args.pallas),
-                          max_batch=args.max_batch)
-    register_demo_scenes(engine, args.gaussians)
+    renderer = Renderer(test=TestConfig(
+        backend="pallas" if args.pallas else "jnp"))
+    engine = RenderEngine(renderer, max_batch=args.max_batch)
+    scenes_res = (args.res, max(args.res // 2, 16))
+    # Probe-driven k_max: measure each scene's Stage-1 survivor bound over
+    # a few poses at both served resolutions (pow2-bucketed).
+    probes = [orbit_camera(t, r, r)
+              for r in scenes_res for t in (0.0, 2.1, 4.2)]
+    register_demo_scenes(engine, args.gaussians, probe_cameras=probes)
     batcher = MicroBatcher(engine)
 
     scenes = engine.scene_names()
-    resolutions = (args.res, max(args.res // 2, 16))
+    resolutions = scenes_res
     print(f"serving {args.requests} requests over {len(scenes)} scenes x "
           f"{resolutions} px ({'pallas' if args.pallas else 'jnp'} path) ...")
 

@@ -7,11 +7,19 @@ from repro.core.culling import TileGrid, aabb_mask, obb_mask
 from repro.core.cat import (SamplingMode, minitile_cat_mask, entry_cat_mask,
                             pr_gaussian_weight)
 from repro.core.hierarchy import (hierarchical_test, stream_hierarchical_test,
-                                  StreamHierarchyOut, baseline_masks)
+                                  stream_entry_test, StreamHierarchyOut,
+                                  baseline_masks)
+from repro.core.renderer import (Renderer, RenderPlan, GridConfig,
+                                 TestConfig, StreamConfig, RasterConfig,
+                                 OverflowPolicy, StreamOverflowWarning,
+                                 StreamOverflowError, ProjectedScene,
+                                 TileStream, StageSpec, measure_k_max,
+                                 cat_mask_elems, frame_counters, as_plan)
 from repro.core.pipeline import (RenderConfig, render, render_with_stats,
-                                 render_batch_with_stats, frame_counters,
-                                 psnr, ssim, FLICKER_CONFIG, VANILLA_CONFIG,
+                                 render_batch_with_stats,
+                                 FLICKER_CONFIG, VANILLA_CONFIG,
                                  GSCORE_CONFIG)
+from repro.core.metrics import psnr, ssim
 from repro.core.precision import (PrecisionScheme, FULL_FP32, FULL_FP16,
                                   FULL_FP8, MIXED)
 
@@ -21,10 +29,14 @@ __all__ = [
     "TileGrid", "aabb_mask", "obb_mask",
     "SamplingMode", "minitile_cat_mask", "entry_cat_mask",
     "pr_gaussian_weight",
-    "hierarchical_test", "stream_hierarchical_test", "StreamHierarchyOut",
-    "baseline_masks",
+    "hierarchical_test", "stream_hierarchical_test", "stream_entry_test",
+    "StreamHierarchyOut", "baseline_masks",
+    "Renderer", "RenderPlan", "GridConfig", "TestConfig", "StreamConfig",
+    "RasterConfig", "OverflowPolicy", "StreamOverflowWarning",
+    "StreamOverflowError", "ProjectedScene", "TileStream", "StageSpec",
+    "measure_k_max", "cat_mask_elems", "frame_counters", "as_plan",
     "RenderConfig", "render", "render_with_stats",
-    "render_batch_with_stats", "frame_counters",
+    "render_batch_with_stats",
     "psnr", "ssim",
     "FLICKER_CONFIG", "VANILLA_CONFIG", "GSCORE_CONFIG",
     "PrecisionScheme", "FULL_FP32", "FULL_FP16", "FULL_FP8", "MIXED",

@@ -46,7 +46,7 @@ def stack_cameras(cameras) -> Camera:
     """Stack a sequence of same-resolution cameras into one batched Camera
     pytree (leading frame axis on every array leaf; static fields shared).
 
-    The result is what `core.pipeline.render_batch_with_stats` vmaps over.
+    The result is what `RenderPlan.render_batch_with_stats` vmaps over.
     """
     cameras = list(cameras)
     if not cameras:

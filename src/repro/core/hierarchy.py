@@ -167,18 +167,14 @@ def stream_hierarchical_test(
     depth-ordered lists are built from the Stage-1 tile-level AABB (the
     union of a tile's sub-tile AABBs *is* its tile AABB, since the sub-tiles
     partition the tile), then Stage-1 sub-tile bits and the Mini-Tile CAT
-    are evaluated per list entry. Nothing of shape (num_subtiles, N) or
-    (num_minitiles, N) is ever materialized.
+    are evaluated per list entry (`stream_entry_test`, which the staged
+    `renderer.RenderPlan` also calls directly as its CTU stage). Nothing of
+    shape (num_subtiles, N) or (num_minitiles, N) is ever materialized.
 
     order: optional precomputed `raster.depth_order(proj)`.
     cat_fn: optional callable (proj, grid, lists, valid) -> (T, K, Mt) bool
     entry CAT mask (e.g. the Pallas entry-PRTU kernel); defaults to the
     pure-jnp `cat.entry_cat_mask`.
-
-    Counters carry the same keys and — absent overflow — the same values as
-    the dense path: every dense mask sum is re-expressed as a sum over
-    stream entries (a dense sub-tile/mini-tile hit implies a tile-level AABB
-    hit, so each hit pair owns exactly one list entry).
     """
     from repro.core import raster  # late import: raster is mask-agnostic
 
@@ -188,7 +184,28 @@ def stream_hierarchical_test(
     lists, valid, overflow = raster.compact_tile_lists(tile_mask, order,
                                                        k_max)
     del tile_mask  # transient: O(T·N) peak, never kept past compaction
+    return stream_entry_test(proj, grid, lists, valid, overflow, mode, prec,
+                             spiky_threshold, cat_fn=cat_fn)
 
+
+def stream_entry_test(
+        proj: Projected, grid: TileGrid,
+        lists: jax.Array, valid: jax.Array, overflow: jax.Array,
+        mode: SamplingMode = SamplingMode.SMOOTH_FOCUSED,
+        prec: PrecisionScheme = FULL_FP32,
+        spiky_threshold: float = 3.0, *,
+        cat_fn: Optional[Callable] = None) -> StreamHierarchyOut:
+    """The CTU stage proper: per-entry hierarchy masks on a compacted stream.
+
+    Takes the already-built survivor streams (from `raster.compact_tile_lists`
+    over the Stage-1 tile mask) and evaluates Stage-1 sub-tile bits and the
+    Mini-Tile CAT per list entry.
+
+    Counters carry the same keys and — absent overflow — the same values as
+    the dense path: every dense mask sum is re-expressed as a sum over
+    stream entries (a dense sub-tile/mini-tile hit implies a tile-level AABB
+    hit, so each hit pair owns exactly one list entry).
+    """
     entry_sub = entry_subtile_mask(proj, grid, lists, valid)  # (T, K, Sp)
     if cat_fn is None:
         cat = entry_cat_mask(proj, grid, lists, valid, mode, prec,

@@ -1,0 +1,32 @@
+"""Image quality metrics (PSNR / SSIM) used by training and benchmarks."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def psnr(img: jax.Array, ref: jax.Array, data_range: float = 1.0) -> jax.Array:
+    mse = jnp.mean((img - ref) ** 2)
+    return 10.0 * jnp.log10(data_range ** 2 / jnp.maximum(mse, 1e-12))
+
+
+def ssim(img: jax.Array, ref: jax.Array, data_range: float = 1.0,
+         win: int = 7) -> jax.Array:
+    """Mean SSIM with a uniform window (channels averaged)."""
+    c1 = (0.01 * data_range) ** 2
+    c2 = (0.03 * data_range) ** 2
+
+    def filt(x):  # (H, W, C) uniform filter via depthwise conv
+        x = jnp.moveaxis(x, -1, 0)[:, None]     # (C, 1, H, W)
+        y = jax.lax.conv_general_dilated(
+            x, jnp.ones((1, 1, win, win), x.dtype) / (win * win),
+            window_strides=(1, 1), padding="VALID")
+        return jnp.moveaxis(y[:, 0], 0, -1)
+
+    mu_x, mu_y = filt(img), filt(ref)
+    sxx = filt(img * img) - mu_x ** 2
+    syy = filt(ref * ref) - mu_y ** 2
+    sxy = filt(img * ref) - mu_x * mu_y
+    num = (2 * mu_x * mu_y + c1) * (2 * sxy + c2)
+    den = (mu_x ** 2 + mu_y ** 2 + c1) * (sxx + syy + c2)
+    return jnp.mean(num / den)

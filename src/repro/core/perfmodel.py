@@ -11,7 +11,7 @@ pipeline (core.hierarchy / core.pipeline counters):
     sort        — Gaussian instances sorted
     dram bytes  — geometric/color feature traffic (clustering-aware)
 
-With the fused raster path (`RenderConfig(fused=True)`) the blend/termination
+With the fused raster path (`RasterConfig(fused=True)`) the blend/termination
 counters are *measured by the Pallas kernel that does the work* rather than
 modeled after the fact: `processed_per_pixel` (-> blend_ops below) and
 `entry_alive` (-> the `*_eff` CTU counters) come out of
@@ -22,10 +22,10 @@ deliberately not a model input — serving telemetry and
 `benchmarks/fused_raster.py` surface it directly.
 
 The counters are dataflow-agnostic: the stream pipeline (the default,
-`RenderConfig(dataflow="stream")`) reproduces every key the dense oracle
+`RenderPlan(dataflow="stream")`) reproduces every key the dense oracle
 emits, entry-for-entry, so nothing here depends on which dataflow measured
 the workload. The one stream-specific counter, `cat_mask_bytes` (the
-CAT-stage mask footprint; see `pipeline.cat_mask_elems`), is a *host-memory*
+CAT-stage mask footprint; see `renderer.cat_mask_elems`), is a *host-memory*
 proxy for the JAX pipeline itself, not an ASIC quantity — `cat_stage_bytes`
 below surfaces it for `benchmarks/scaling.py`.
 
@@ -39,8 +39,6 @@ constants of the model*, the workload numbers are measured.
 from __future__ import annotations
 
 import dataclasses
-
-import numpy as np
 
 # ---------------------------------------------------------------------------
 # Hardware configurations

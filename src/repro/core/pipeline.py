@@ -1,62 +1,56 @@
-"""End-to-end 3DGS render pipeline, staged Preprocess→Stage1→Compact→CTU→
-Blend (paper Fig. 6).
+"""Legacy flat-config entry points for the staged render pipeline.
 
-Entry points: `render_batch_with_stats()` renders a batch of camera poses
-in one vmapped call and is what serving traffic goes through
-(`serving.RenderEngine` jits it per shape bucket); `render()` /
-`render_with_stats()` are the single-camera forms — jit-able,
-differentiable w.r.t. the scene (for training), and configurable across
-the paper's design space:
+The render API lives in `core.renderer`: structured per-stage configs
+(`GridConfig` / `TestConfig` / `StreamConfig` / `RasterConfig`) assembled by
+a `Renderer` facade into a `RenderPlan` of stage callables
+(Preprocess → Stage 1 + Compact → CTU → Blend, paper Fig. 6).
 
-    method      'aabb' (vanilla) | 'obb' (GSCore) | 'cat' (FLICKER)
-    dataflow    'stream' (default) — the survivor-stream dataflow: Stage-1
-                tile AABB, per-tile depth-ordered lists compacted
-                immediately, Stage-1 sub-tile bits and Mini-Tile CAT
-                evaluated per list entry ((T, K, 16) masks; memory
-                O(T·k_max·16), CAT FLOPs on survivors only — the paper's
-                queue-fed CTU).
-                'dense' — the parity oracle: materializes the full
-                (num_subtiles, N) / (num_minitiles, N) masks and derives
-                everything from them. O(regions × N) memory; kept because
-                every stream image and workload counter is asserted equal
-                to it entry-for-entry (tests/test_stream.py).
-    mode        leader-pixel sampling mode for 'cat'
-    precision   CTU precision scheme ('cat' only)
-    k_max       per-tile compacted list capacity (the JAX analogue of the
-                paper's FIFO-depth resource knob)
-    use_pallas  route the CAT test through the Pallas PRTU kernel (the
-                entry-gridded kernel on 'stream', the (M, G)-gridded one
-                on 'dense')
-    fused       route blending through the fused contribution-aware Pallas
-                kernel: true in-kernel early termination + per-tile adaptive
-                trip count, with work counters measured by the kernel itself
-                (kernels.render.blend_tiles_fused). The default (unfused)
-                path is the differentiable pure-jnp rasterizer that models
-                the same counters — it is the parity fallback the fused path
-                is tested against.
+This module keeps the original flat surface alive as thin shims:
 
-Stage outputs are explicit: `hierarchy.StreamHierarchyOut` carries the
-compacted stream + per-entry masks + counters between the CTU stage and
-blending, and both blend routes consume it unchanged.
+* `RenderConfig` — the flat dataclass of orthogonal knobs. Still constructible
+  everywhere a config is accepted; `to_plan()` / `to_renderer()` map it onto
+  the structured configs (`use_pallas` → `TestConfig.backend="pallas"`,
+  `fused` → `RasterConfig.fused`, `dataflow` → `RenderPlan.dataflow`).
+* `render` / `render_with_stats` / `render_batch_with_stats` — deprecated
+  module-level entry points. They emit `DeprecationWarning` and delegate to
+  the equivalent plan, bit-matching it on every image and workload counter
+  (asserted across the whole {method × dataflow × backend × fused} grid in
+  tests/test_renderer.py).
+
+Prefer::
+
+    from repro.core import Renderer, TestConfig, RasterConfig
+    r = Renderer(test=TestConfig(method="cat"), raster=RasterConfig(fused=True))
+    out, counters = r.render_with_stats(scene, camera)
+
+Quality metrics (`psnr`, `ssim`) moved to `core.metrics` and are re-exported
+here for compatibility.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional
+import warnings
 
-import jax
-import jax.numpy as jnp
-
-from repro.core.gaussians import GaussianScene, project
+from repro.core.gaussians import GaussianScene
 from repro.core.culling import TileGrid
 from repro.core.cat import SamplingMode
-from repro.core import hierarchy as H
 from repro.core import raster
 from repro.core.precision import PrecisionScheme, FULL_FP32, MIXED
+from repro.core.renderer import (Renderer, RenderPlan, GridConfig,
+                                 TestConfig, StreamConfig, RasterConfig,
+                                 cat_mask_elems, frame_counters)
+from repro.core.metrics import psnr, ssim
+
+__all__ = [
+    "RenderConfig", "FLICKER_CONFIG", "VANILLA_CONFIG", "GSCORE_CONFIG",
+    "render", "render_with_stats", "render_batch_with_stats",
+    "cat_mask_elems", "frame_counters", "psnr", "ssim",
+]
 
 
 @dataclasses.dataclass(frozen=True)
 class RenderConfig:
+    """Legacy flat render config (see module docstring for the new API)."""
     height: int = 128
     width: int = 128
     tile: int = 16
@@ -69,12 +63,45 @@ class RenderConfig:
     k_max: int = 1024
     spiky_threshold: float = 3.0
     background: float = 0.0
-    use_pallas: bool = False                  # route CAT through the kernel
-    fused: bool = False                       # fused raster path (see above)
+    use_pallas: bool = False                  # -> TestConfig.backend="pallas"
+    fused: bool = False                       # -> RasterConfig.fused
 
     def grid(self) -> TileGrid:
         return TileGrid(self.height, self.width, self.tile, self.subtile,
                         self.minitile)
+
+    def to_plan(self) -> RenderPlan:
+        """The equivalent staged `RenderPlan` (the supported migration)."""
+        return RenderPlan(
+            grid=GridConfig(self.height, self.width, self.tile,
+                            self.subtile, self.minitile),
+            test=TestConfig(method=self.method, mode=self.mode,
+                            precision=self.precision,
+                            spiky_threshold=self.spiky_threshold,
+                            backend="pallas" if self.use_pallas else "jnp"),
+            stream=StreamConfig(k_max=self.k_max),
+            raster=RasterConfig(background=self.background,
+                                fused=self.fused),
+            dataflow=self.dataflow)
+
+    def to_renderer(self) -> Renderer:
+        return Renderer.from_plan(self.to_plan())
+
+    @classmethod
+    def from_plan(cls, plan: RenderPlan) -> "RenderConfig":
+        """Inverse of `to_plan` (lossy only in the overflow policy, which the
+        flat config never had — legacy behavior is CLAMP)."""
+        return cls(
+            height=plan.grid.height, width=plan.grid.width,
+            tile=plan.grid.tile, subtile=plan.grid.subtile,
+            minitile=plan.grid.minitile,
+            method=plan.test.method, dataflow=plan.dataflow,
+            mode=plan.test.mode, precision=plan.test.precision,
+            k_max=plan.stream.k_max,
+            spiky_threshold=plan.test.spiky_threshold,
+            background=plan.raster.background,
+            use_pallas=plan.test.backend == "pallas",
+            fused=plan.raster.fused)
 
 
 FLICKER_CONFIG = RenderConfig(method="cat", mode=SamplingMode.SMOOTH_FOCUSED,
@@ -83,280 +110,28 @@ VANILLA_CONFIG = RenderConfig(method="aabb", precision=FULL_FP32)
 GSCORE_CONFIG = RenderConfig(method="obb", precision=FULL_FP32)
 
 
+def _warn_deprecated(name: str):
+    warnings.warn(
+        f"core.pipeline.{name} is deprecated; build a core.Renderer "
+        f"(or RenderConfig.to_renderer()) and call its {name} method "
+        f"instead", DeprecationWarning, stacklevel=3)
+
+
 def render(scene: GaussianScene, camera, cfg: RenderConfig) -> raster.RenderOut:
-    out, _ = render_with_stats(scene, camera, cfg)
-    return out
+    """Deprecated: use `Renderer.render` (see module docstring)."""
+    _warn_deprecated("render")
+    return cfg.to_plan().render(scene, camera)
 
 
 def render_with_stats(scene: GaussianScene, camera, cfg: RenderConfig):
-    """Returns (RenderOut, counters dict).
+    """Deprecated: use `Renderer.render_with_stats`. Returns (RenderOut,
+    counters dict), bit-identical to the equivalent `cfg.to_plan()`."""
+    _warn_deprecated("render_with_stats")
+    return cfg.to_plan().render_with_stats(scene, camera)
 
-    For the CAT pipeline, per-tile lists are built from the *Stage-1*
-    stream — exactly what flows past the CTU in Fig. 6 — and the CAT mask
-    is applied at blend time. Effective CTU/VRU workload counters honor
-    tile-level early termination: the CTU stops testing a tile's remaining
-    Gaussians once every pixel of the tile is saturated.
-    """
-    grid = cfg.grid()
-    proj = project(scene, camera)                       # Preprocess
-
-    if cfg.method == "cat":
-        if cfg.dataflow == "stream":
-            return _render_cat_stream(proj, grid, cfg)
-        if cfg.dataflow == "dense":
-            return _render_cat_dense(proj, grid, cfg)
-        raise ValueError(f"unknown dataflow {cfg.dataflow!r} "
-                         "(expected 'stream' or 'dense')")
-    return _render_baseline(proj, grid, cfg)
-
-
-def _render_cat_stream(proj, grid, cfg: RenderConfig):
-    """Stage1 -> Compact -> CTU (entry-indexed) -> Blend, all stream-first.
-
-    Stage boundaries are the explicit intermediates: `StreamHierarchyOut`
-    (lists/valid + per-entry Stage-1/CAT masks + counters) out of the CTU
-    stage, `RenderOut` out of blending. Nothing of shape (regions, N) is
-    kept past list compaction.
-    """
-    order = raster.depth_order(proj)                    # Sort
-    if cfg.use_pallas:
-        from repro.kernels import ops as kops
-        hout = kops.stream_hierarchical_test_pallas(
-            proj, grid, cfg.mode, cfg.precision, cfg.spiky_threshold,
-            k_max=cfg.k_max, order=order)
-    else:
-        hout = H.stream_hierarchical_test(
-            proj, grid, cfg.mode, cfg.precision, cfg.spiky_threshold,
-            k_max=cfg.k_max, order=order)               # Stage1+Compact+CTU
-
-    counters = dict(hout.counters)
-    counters["cat_mask_bytes"] = _cat_mask_bytes(grid, cfg, "stream",
-                                                 proj.depth.shape[0])
-    out = _blend(proj, grid, hout.lists, hout.valid, hout.entry_mini_mask,
-                 hout.overflow, cfg, counters)          # Blend
-    counters.update(_effective_counters_stream(proj, hout, out.entry_alive,
-                                               cfg))
-    return out, counters
-
-
-def _render_cat_dense(proj, grid, cfg: RenderConfig):
-    """The dense parity oracle: full (regions, N) masks at every level.
-
-    Keeps the seed pipeline's dataflow byte-for-byte — dense Stage-1/CAT
-    masks, tile lists from the OR of sub-tile bits, per-entry blend masks
-    gathered from the dense CAT mask — so the stream path has an
-    always-available reference for images *and* counters.
-    """
-    if cfg.use_pallas:
-        from repro.kernels import ops as kops
-        hout = kops.hierarchical_test_pallas(
-            proj, grid, cfg.mode, cfg.precision, cfg.spiky_threshold)
-    else:
-        hout = H.hierarchical_test(proj, grid, cfg.mode, cfg.precision,
-                                   cfg.spiky_threshold)
-    # The CTU's input stream: Stage-1 survivors per tile.
-    sub_of_tile = grid.tile_of_region(grid.subtile)          # (S,)
-    stage1_tile = jax.ops.segment_sum(
-        hout.subtile_mask.astype(jnp.int32), sub_of_tile,
-        num_segments=grid.num_tiles) > 0                     # (T, N)
-
-    order = raster.depth_order(proj)
-    lists, valid, overflow = raster.compact_tile_lists(stage1_tile, order,
-                                                       cfg.k_max)
-    entry_mask = raster.entry_mask_from_dense(grid, hout.minitile_mask,
-                                              lists)
-    counters = dict(hout.counters)
-    counters["cat_mask_bytes"] = _cat_mask_bytes(grid, cfg, "dense",
-                                                 proj.depth.shape[0])
-    out = _blend(proj, grid, lists, valid, entry_mask, overflow, cfg,
-                 counters)
-    counters.update(_effective_cat_counters(
-        proj, grid, hout, lists, out.entry_alive, cfg))
-    return out, counters
-
-
-def _render_baseline(proj, grid, cfg: RenderConfig):
-    """'aabb' (vanilla 3DGS) and 'obb' (GSCore) baselines — dense masks."""
-    tile_mask, mini_mask, counters = H.baseline_masks(proj, grid, cfg.method)
-    order = raster.depth_order(proj)
-    lists, valid, overflow = raster.compact_tile_lists(tile_mask, order,
-                                                       cfg.k_max)
-    entry_mask = (None if mini_mask is None else
-                  raster.entry_mask_from_dense(grid, mini_mask, lists))
-    counters = dict(counters)
-    out = _blend(proj, grid, lists, valid, entry_mask, overflow, cfg,
-                 counters)
-    return out, counters
-
-
-def _blend(proj, grid, lists, valid, entry_mask, overflow,
-           cfg: RenderConfig, counters: dict) -> raster.RenderOut:
-    """Shared blend stage; updates `counters` with the sweep statistics."""
-    if cfg.fused:
-        from repro.kernels import ops as kops
-        out, fused_counters = kops.render_tiles_fused(
-            proj, grid, lists, valid, entry_mask, cfg.background, overflow)
-        counters.update(fused_counters)
-    else:
-        out = raster.render_tiles(proj, grid, lists, valid, entry_mask,
-                                  cfg.background, overflow)
-        # The unfused sweep always walks the full padded list.
-        counters["swept_per_pixel"] = jnp.asarray(float(lists.shape[1]),
-                                                  jnp.float32)
-    counters["processed_per_pixel"] = jnp.mean(out.processed_per_pixel)
-    counters["blended_per_pixel"] = jnp.mean(out.blended_per_pixel)
-    return out
-
-
-def cat_mask_elems(grid: TileGrid, n: int, k_max: int, dataflow: str) -> int:
-    """Boolean elements the CAT stage materializes (the Stage-1 + CAT mask
-    footprint, 1 byte/element): dense = (S + M)·N, stream = T·K·(Sp + Mt).
-    Static per config — the stream/dense ratio is the memory win
-    `benchmarks/scaling.py` tracks."""
-    if dataflow == "dense":
-        return (grid.num_subtiles + grid.num_minitiles) * n
-    if dataflow == "stream":
-        return grid.num_tiles * k_max * (grid.subtiles_per_tile
-                                         + grid.minitiles_per_tile)
-    raise ValueError(dataflow)
-
-
-def _cat_mask_bytes(grid, cfg: RenderConfig, dataflow: str, n: int) \
-        -> jnp.ndarray:
-    return jnp.asarray(float(cat_mask_elems(grid, n, cfg.k_max, dataflow)),
-                       jnp.float32)
-
-
-def _prs_per_subtile(proj, cfg: RenderConfig) -> jax.Array:
-    """(N,) PRs the CTU evaluates per hit sub-tile: 4 dense / 2 sparse per
-    Fig. 3(b), adaptive modes pick per Gaussian."""
-    from repro.core.gaussians import classify_spiky
-    spiky = classify_spiky(proj.axis_ratio, cfg.spiky_threshold)
-    if cfg.mode == SamplingMode.UNIFORM_DENSE:
-        return jnp.full(spiky.shape, 4.0)
-    if cfg.mode == SamplingMode.UNIFORM_SPARSE:
-        return jnp.full(spiky.shape, 2.0)
-    if cfg.mode == SamplingMode.SMOOTH_FOCUSED:
-        return jnp.where(spiky, 2.0, 4.0)
-    return jnp.where(spiky, 4.0, 2.0)
-
-
-def _effective_counters_stream(proj, hout: H.StreamHierarchyOut,
-                               entry_alive, cfg: RenderConfig) -> dict:
-    """Termination-aware CTU/VRU workload from the stream representation.
-
-    The per-entry masks already are the quantities the dense path has to
-    gather per tile, so the accounting collapses to masked sums: for each
-    list entry processed before its tile terminated, the CTU evaluated one
-    PR batch per hit sub-tile (4 PRs dense, 2 sparse — Fig. 3(b)) and the
-    VRUs blended one mini-tile per CAT-passing mini-tile.
-    """
-    idx = hout.lists.clip(0)                                 # (T, K)
-    live = entry_alive                                       # (T, K)
-    sub_hits = jnp.sum(hout.entry_sub_mask, axis=-1)         # (T, K)
-    mini_hits = jnp.sum(hout.entry_mini_mask, axis=-1)       # (T, K)
-    prs = _prs_per_subtile(proj, cfg)[idx]                   # (T, K)
-    return dict(
-        ctu_pairs_eff=jnp.sum(sub_hits * live).astype(jnp.float32),
-        ctu_prs_eff=jnp.sum(sub_hits * prs * live).astype(jnp.float32),
-        vru_pairs_eff=jnp.sum(mini_hits * live).astype(jnp.float32),
-        ctu_stream_len=jnp.sum(entry_alive).astype(jnp.float32),
-    )
-
-
-def _effective_cat_counters(proj, grid, hout, lists, entry_alive, cfg):
-    """Dense-oracle twin of `_effective_counters_stream` (paper Fig. 6
-    semantics), computed by gathering the dense per-level masks per tile."""
-    idx = lists.clip(0)                                          # (T, K)
-    live = entry_alive                                           # (T, K)
-
-    # Per-tile grouped masks: (T, subtiles_per_tile, N) etc.
-    sub_of_tile = grid.tile_of_region(grid.subtile)
-    mini_of_tile = grid.tile_of_region(grid.minitile)
-    s_sort = jnp.argsort(sub_of_tile)
-    m_sort = jnp.argsort(mini_of_tile)
-    sub_by_tile = hout.subtile_mask[s_sort].reshape(
-        grid.num_tiles, grid.subtiles_per_tile, -1)
-    mini_by_tile = hout.minitile_mask[m_sort].reshape(
-        grid.num_tiles, grid.minitiles_per_tile, -1)
-
-    def per_tile(sub_t, mini_t, id_row, live_row):
-        sub_hits = jnp.sum(sub_t[:, id_row], axis=0)             # (K,)
-        mini_hits = jnp.sum(mini_t[:, id_row], axis=0)           # (K,)
-        return (jnp.sum(sub_hits * live_row),
-                jnp.sum(mini_hits * live_row))
-
-    prs_per_sub = _prs_per_subtile(proj, cfg)
-
-    def per_tile_prs(sub_t, id_row, live_row):
-        sub_hits = jnp.sum(sub_t[:, id_row], axis=0)
-        return jnp.sum(sub_hits * prs_per_sub[id_row] * live_row)
-
-    sub_eff, mini_eff = jax.vmap(per_tile)(sub_by_tile, mini_by_tile,
-                                           idx, live)
-    prs_eff = jax.vmap(per_tile_prs)(sub_by_tile, idx, live)
-    return dict(
-        ctu_pairs_eff=jnp.sum(sub_eff).astype(jnp.float32),
-        ctu_prs_eff=jnp.sum(prs_eff).astype(jnp.float32),
-        vru_pairs_eff=jnp.sum(mini_eff).astype(jnp.float32),
-        ctu_stream_len=jnp.sum(entry_alive).astype(jnp.float32),
-    )
-
-
-# ---------------------------------------------------------------------------
-# Camera-batched entry point (serving)
-# ---------------------------------------------------------------------------
 
 def render_batch_with_stats(scene: GaussianScene, cameras, cfg: RenderConfig):
-    """Render a batch of camera poses of one scene in a single vmapped call.
-
-    cameras: a batched `core.camera.Camera` pytree (leading frame axis on
-    every array leaf — build it with `core.camera.stack_cameras`). The static
-    fields (width/height/near) must match `cfg.height`/`cfg.width`.
-
-    Returns (RenderOut with a leading frame axis on every field, counters
-    dict of (B,) arrays — one scalar per frame). Frames are independent, so
-    the result equals `render_with_stats` called per camera; batching only
-    buys SIMD width and compile reuse.
-    """
-    if (cameras.height, cameras.width) != (cfg.height, cfg.width):
-        raise ValueError(
-            f"camera resolution {(cameras.height, cameras.width)} != "
-            f"config {(cfg.height, cfg.width)}")
-    return jax.vmap(lambda cam: render_with_stats(scene, cam, cfg))(cameras)
-
-
-def frame_counters(counters: dict, i: int) -> dict:
-    """Slice frame `i`'s scalars out of a batched counters dict."""
-    return {k: v[i] for k, v in counters.items()}
-
-
-# ---------------------------------------------------------------------------
-# Quality metrics
-# ---------------------------------------------------------------------------
-
-def psnr(img: jax.Array, ref: jax.Array, data_range: float = 1.0) -> jax.Array:
-    mse = jnp.mean((img - ref) ** 2)
-    return 10.0 * jnp.log10(data_range ** 2 / jnp.maximum(mse, 1e-12))
-
-
-def ssim(img: jax.Array, ref: jax.Array, data_range: float = 1.0,
-         win: int = 7) -> jax.Array:
-    """Mean SSIM with a uniform window (channels averaged)."""
-    c1 = (0.01 * data_range) ** 2
-    c2 = (0.03 * data_range) ** 2
-
-    def filt(x):  # (H, W, C) uniform filter via depthwise conv
-        x = jnp.moveaxis(x, -1, 0)[:, None]     # (C, 1, H, W)
-        y = jax.lax.conv_general_dilated(
-            x, jnp.ones((1, 1, win, win), x.dtype) / (win * win),
-            window_strides=(1, 1), padding="VALID")
-        return jnp.moveaxis(y[:, 0], 0, -1)
-
-    mu_x, mu_y = filt(img), filt(ref)
-    sxx = filt(img * img) - mu_x ** 2
-    syy = filt(ref * ref) - mu_y ** 2
-    sxy = filt(img * ref) - mu_x * mu_y
-    num = (2 * mu_x * mu_y + c1) * (2 * sxy + c2)
-    den = (mu_x ** 2 + mu_y ** 2 + c1) * (sxx + syy + c2)
-    return jnp.mean(num / den)
+    """Deprecated: use `Renderer.render_batch_with_stats` (one vmapped call
+    over a stacked camera pytree; see `core.camera.stack_cameras`)."""
+    _warn_deprecated("render_batch_with_stats")
+    return cfg.to_plan().render_batch_with_stats(scene, cameras)

@@ -18,11 +18,11 @@ modeled by the processed-Gaussian counters — the quantities the
 accelerator's speedup derives from — while the image is computed with the
 full cumulative product, which differs by < 1e-4 in transmittance-weighted
 contribution and is invisible at 8-bit PSNR. The serving hot path
-(`RenderConfig(fused=True)` -> `kernels.render.blend_tiles_fused`) performs
+(`RasterConfig(fused=True)` -> `kernels.render.blend_tiles_fused`) performs
 the termination for real inside the Pallas kernel and measures the same
 counters there; `kernels/ops.render_tiles_fused` reassembles its outputs
-into the same `RenderOut` via `untile` below, so both paths are
-interchangeable downstream.
+into the same `RenderOut` via `untile` below, so both blend backends of
+`renderer.RenderPlan` are interchangeable downstream.
 """
 from __future__ import annotations
 

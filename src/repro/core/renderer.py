@@ -1,0 +1,626 @@
+"""Composable staged render API: structured configs, `RenderPlan`, `Renderer`.
+
+The paper's pipeline is explicitly staged (Fig. 6):
+
+    Preprocess -> Stage 1 -> Compact -> CTU -> Blend
+
+and this module makes those stage boundaries *the API*. Instead of one flat
+config of orthogonal booleans routed through if-chains, the design space is
+four structured sub-configs — one per resource the stages consume — plus a
+dataflow selector:
+
+    GridConfig    image tiling hierarchy (height/width/tile/subtile/minitile)
+    TestConfig    hierarchical-test stage: method (aabb|obb|cat), leader-pixel
+                  sampling mode, CTU precision scheme, spiky threshold, and
+                  the stage backend ("jnp" | "pallas" — the PRTU CTU kernel)
+    StreamConfig  survivor-stream resources: k_max (per-tile compacted list
+                  capacity, the paper's FIFO-depth knob) and the
+                  OverflowPolicy applied when a tile list exceeds it
+    RasterConfig  blend stage: background color and the raster backend
+                  (fused=True routes through the fused contribution-aware
+                  Pallas kernel with true in-kernel early termination)
+
+`RenderPlan` assembles them into an executable plan of stage callables with
+dataclass I/O contracts:
+
+    preprocess(scene, camera)      -> ProjectedScene
+    stage1_compact(ProjectedScene) -> TileStream
+    ctu(ProjectedScene, TileStream)-> StreamHierarchyOut
+    blend(ProjectedScene, ...)     -> RenderOut (+ blend counters)
+
+The plan is a frozen dataclass of frozen sub-configs: hashable and
+value-equal, so it doubles as the jit-cache key in `serving.RenderEngine`.
+`Renderer` is the user-facing facade over a plan.
+
+The legacy flat `core.pipeline.RenderConfig` and its module-level
+`render`/`render_with_stats`/`render_batch_with_stats` entry points remain as
+deprecation shims that build the equivalent plan (`RenderConfig.to_plan`),
+bit-matching this API on every image and workload counter.
+"""
+from __future__ import annotations
+
+import dataclasses
+import enum
+import warnings
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.gaussians import GaussianScene, Projected, project, \
+    classify_spiky
+from repro.core.culling import TileGrid, aabb_mask
+from repro.core.cat import SamplingMode
+from repro.core import hierarchy as H
+from repro.core import raster
+from repro.core.precision import PrecisionScheme, MIXED
+
+BACKENDS = ("jnp", "pallas")
+
+
+def next_pow2(n: int) -> int:
+    """Smallest power of two >= n (1 for n <= 1)."""
+    return 1 if n <= 1 else 1 << (n - 1).bit_length()
+
+
+# ---------------------------------------------------------------------------
+# Structured per-stage configs
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class GridConfig:
+    """Image tiling hierarchy (the Preprocess/Stage-1 spatial layout)."""
+    height: int = 128
+    width: int = 128
+    tile: int = 16
+    subtile: int = 8
+    minitile: int = 4
+
+    def make(self) -> TileGrid:
+        return TileGrid(self.height, self.width, self.tile, self.subtile,
+                        self.minitile)
+
+    def with_resolution(self, height: int, width: int) -> "GridConfig":
+        return dataclasses.replace(self, height=height, width=width)
+
+
+@dataclasses.dataclass(frozen=True)
+class TestConfig:
+    """Hierarchical-test stage (Stage-1 AABB + Mini-Tile CAT in the CTU)."""
+    __test__ = False          # "Test" prefix: keep pytest collection away
+    method: str = "cat"                       # aabb | obb | cat
+    mode: SamplingMode = SamplingMode.SMOOTH_FOCUSED
+    precision: PrecisionScheme = MIXED
+    spiky_threshold: float = 3.0
+    backend: str = "jnp"                      # jnp | pallas (PRTU kernel)
+
+    def __post_init__(self):
+        if self.method not in ("aabb", "obb", "cat"):
+            raise ValueError(f"unknown method {self.method!r} "
+                             "(expected 'aabb', 'obb' or 'cat')")
+        if self.backend not in BACKENDS:
+            raise ValueError(f"unknown test backend {self.backend!r} "
+                             f"(expected one of {BACKENDS})")
+
+
+class OverflowPolicy(enum.Enum):
+    """What to do when a tile's Stage-1 survivor list exceeds `k_max`.
+
+    The in-graph behavior is always CLAMP (the compaction drops entries past
+    k_max — jit-compiled code cannot branch on a traced overflow bit); WARN
+    and RAISE are enforced wherever the overflow flag becomes concrete: in
+    eager `Renderer` calls and, for serving traffic, per frame in
+    `serving.RenderEngine.render_batch` (which also counts `overflow_frames`
+    in telemetry).
+    """
+    CLAMP = "clamp"
+    WARN = "warn"
+    RAISE = "raise"
+
+
+class StreamOverflowWarning(RuntimeWarning):
+    """A frame's Stage-1 tile list overflowed k_max and was clamped."""
+
+
+class StreamOverflowError(RuntimeError):
+    """A frame's Stage-1 tile list overflowed k_max under OverflowPolicy.RAISE."""
+
+
+@dataclasses.dataclass(frozen=True)
+class StreamConfig:
+    """Survivor-stream resources (Compact stage)."""
+    k_max: int = 1024                         # per-tile list capacity
+    overflow: OverflowPolicy = OverflowPolicy.CLAMP
+
+    def __post_init__(self):
+        if not isinstance(self.overflow, OverflowPolicy):
+            object.__setattr__(self, "overflow",
+                               OverflowPolicy(self.overflow))
+
+
+@dataclasses.dataclass(frozen=True)
+class RasterConfig:
+    """Blend stage (VRU array)."""
+    background: float = 0.0
+    fused: bool = False                       # fused contribution-aware kernel
+
+    @property
+    def backend(self) -> str:
+        """The blend backend: the fused path is the Pallas raster kernel."""
+        return "pallas" if self.fused else "jnp"
+
+
+# ---------------------------------------------------------------------------
+# Stage I/O contracts
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class ProjectedScene:
+    """Preprocess-stage output: screen-space Gaussians + the tile grid."""
+    proj: Projected
+    grid: TileGrid
+
+
+@dataclasses.dataclass(frozen=True)
+class TileStream:
+    """Stage-1 + Compact output: per-tile depth-ordered survivor streams.
+
+    `dense` carries the full-mask `HierarchyOut` on the dense parity
+    dataflow (the oracle computes every mask up front); `baseline_mini` and
+    `counters` carry the non-CAT baselines' mini-tile mask / workload
+    counters. All three are None on the stream dataflow, where nothing of
+    shape (regions, N) survives past compaction.
+    """
+    lists: jax.Array                          # (T, K) int32 gaussian ids
+    valid: jax.Array                          # (T, K) bool
+    overflow: jax.Array                       # () bool
+    dense: Optional[H.HierarchyOut] = None
+    baseline_mini: Optional[jax.Array] = None
+    counters: Optional[dict] = None
+
+
+@dataclasses.dataclass(frozen=True)
+class StageSpec:
+    """Introspection record for one plan stage."""
+    name: str
+    backend: str
+    description: str
+
+
+# ---------------------------------------------------------------------------
+# RenderPlan: the assembled stage pipeline
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class RenderPlan:
+    """An executable, hashable composition of the render stages.
+
+    dataflow selects how the hierarchy materializes between Stage 1 and the
+    CTU: "stream" (default — compact first, CTU on survivors only,
+    O(T·k_max·16) masks) or "dense" (the O(regions×N) parity oracle).
+    Plans are value-equal frozen dataclasses, so a plan is directly usable
+    as a jit-cache key (`serving.RenderEngine` does exactly that).
+    """
+    grid: GridConfig = GridConfig()
+    test: TestConfig = TestConfig()
+    stream: StreamConfig = StreamConfig()
+    raster: RasterConfig = RasterConfig()
+    dataflow: str = "stream"                  # stream | dense
+
+    def __post_init__(self):
+        if self.dataflow not in ("stream", "dense"):
+            raise ValueError(f"unknown dataflow {self.dataflow!r} "
+                             "(expected 'stream' or 'dense')")
+
+    # -- stage callables ----------------------------------------------------
+
+    def preprocess(self, scene: GaussianScene, camera) -> ProjectedScene:
+        """Projection + 3σ screen-space footprints (preprocessing core)."""
+        return ProjectedScene(proj=project(scene, camera),
+                              grid=self.grid.make())
+
+    def stage1_compact(self, ps: ProjectedScene) -> TileStream:
+        """Stage-1 test + depth sort + per-tile list compaction.
+
+        stream: tile-level AABB only (== OR of the tile's sub-tile AABBs) —
+        the transient (T, N) mask is dropped right after compaction.
+        dense:  the full dense hierarchy runs here (the oracle needs every
+        mask anyway) and the tile lists derive from its sub-tile bits.
+        baselines: `hierarchy.baseline_masks` for the method.
+        """
+        proj, grid = ps.proj, ps.grid
+        k_max = self.stream.k_max
+        if self.test.method != "cat":
+            tile_mask, mini_mask, counters = H.baseline_masks(
+                proj, grid, self.test.method)
+            order = raster.depth_order(proj)
+            lists, valid, overflow = raster.compact_tile_lists(
+                tile_mask, order, k_max)
+            return TileStream(lists, valid, overflow,
+                              baseline_mini=mini_mask, counters=counters)
+        if self.dataflow == "dense":
+            if self.test.backend == "pallas":
+                from repro.kernels import ops as kops
+                hout = kops.hierarchical_test_pallas(
+                    proj, grid, self.test.mode, self.test.precision,
+                    self.test.spiky_threshold)
+            else:
+                hout = H.hierarchical_test(
+                    proj, grid, self.test.mode, self.test.precision,
+                    self.test.spiky_threshold)
+            # The CTU's input stream: Stage-1 survivors per tile.
+            sub_of_tile = grid.tile_of_region(grid.subtile)          # (S,)
+            stage1_tile = jax.ops.segment_sum(
+                hout.subtile_mask.astype(jnp.int32), sub_of_tile,
+                num_segments=grid.num_tiles) > 0                     # (T, N)
+            order = raster.depth_order(proj)
+            lists, valid, overflow = raster.compact_tile_lists(
+                stage1_tile, order, k_max)
+            return TileStream(lists, valid, overflow, dense=hout)
+        # stream
+        order = raster.depth_order(proj)
+        tile_mask = aabb_mask(proj, grid.tile_origins(), grid.tile)  # (T, N)
+        lists, valid, overflow = raster.compact_tile_lists(tile_mask, order,
+                                                           k_max)
+        return TileStream(lists, valid, overflow)
+
+    def ctu(self, ps: ProjectedScene, ts: TileStream) -> H.StreamHierarchyOut:
+        """Per-entry hierarchical testing (the queue-fed CTU of Fig. 6).
+
+        stream: Stage-1 sub-tile bits + Mini-Tile CAT evaluated on list
+        entries only (`hierarchy.stream_entry_test`; the Pallas backend
+        routes the CAT through the entry-gridded PRTU kernel).
+        dense/baselines: the masks already exist — gather them at the
+        compacted entries (`raster.entry_mask_from_dense`).
+        """
+        proj, grid = ps.proj, ps.grid
+        if self.test.method != "cat":
+            entry = (None if ts.baseline_mini is None else
+                     raster.entry_mask_from_dense(grid, ts.baseline_mini,
+                                                  ts.lists))
+            return H.StreamHierarchyOut(
+                lists=ts.lists, valid=ts.valid, entry_sub_mask=None,
+                entry_mini_mask=entry, overflow=ts.overflow,
+                counters=ts.counters)
+        if self.dataflow == "dense":
+            entry = raster.entry_mask_from_dense(grid, ts.dense.minitile_mask,
+                                                 ts.lists)
+            return H.StreamHierarchyOut(
+                lists=ts.lists, valid=ts.valid, entry_sub_mask=None,
+                entry_mini_mask=entry, overflow=ts.overflow,
+                counters=ts.dense.counters)
+        if self.test.backend == "pallas":
+            from repro.kernels import ops as kops
+            cat_fn = kops.entry_cat_fn(self.test.mode, self.test.precision,
+                                       self.test.spiky_threshold)
+        else:
+            cat_fn = None
+        return H.stream_entry_test(
+            proj, grid, ts.lists, ts.valid, ts.overflow, self.test.mode,
+            self.test.precision, self.test.spiky_threshold, cat_fn=cat_fn)
+
+    def blend(self, ps: ProjectedScene, hout: H.StreamHierarchyOut):
+        """Blend stage: (RenderOut, blend counters dict).
+
+        fused=False: the pure-jnp differentiable rasterizer (early
+        termination modeled by counters); fused=True: the Pallas kernel with
+        true in-kernel termination and kernel-measured counters.
+        """
+        proj, grid = ps.proj, ps.grid
+        counters: dict = {}
+        if self.raster.fused:
+            from repro.kernels import ops as kops
+            out, fused_counters = kops.render_tiles_fused(
+                proj, grid, hout.lists, hout.valid, hout.entry_mini_mask,
+                self.raster.background, hout.overflow)
+            counters.update(fused_counters)
+        else:
+            out = raster.render_tiles(proj, grid, hout.lists, hout.valid,
+                                      hout.entry_mini_mask,
+                                      self.raster.background, hout.overflow)
+            # The unfused sweep always walks the full padded list.
+            counters["swept_per_pixel"] = jnp.asarray(
+                float(hout.lists.shape[1]), jnp.float32)
+        counters["processed_per_pixel"] = jnp.mean(out.processed_per_pixel)
+        counters["blended_per_pixel"] = jnp.mean(out.blended_per_pixel)
+        return out, counters
+
+    # -- composition --------------------------------------------------------
+
+    def render_with_stats(self, scene: GaussianScene, camera):
+        """Run the full plan: returns (RenderOut, counters dict)."""
+        ps = self.preprocess(scene, camera)
+        ts = self.stage1_compact(ps)
+        hout = self.ctu(ps, ts)
+        counters = dict(hout.counters)
+        if self.test.method == "cat":
+            counters["cat_mask_bytes"] = jnp.asarray(
+                float(cat_mask_elems(ps.grid, ps.proj.depth.shape[0],
+                                     self.stream.k_max, self.dataflow)),
+                jnp.float32)
+        out, blend_counters = self.blend(ps, hout)
+        counters.update(blend_counters)
+        if self.test.method == "cat":
+            counters.update(self._effective_counters(ps, ts, hout,
+                                                     out.entry_alive))
+        enforce_overflow_policy(out.overflow, self.stream.overflow,
+                                k_max=self.stream.k_max)
+        return out, counters
+
+    def render(self, scene: GaussianScene, camera) -> raster.RenderOut:
+        out, _ = self.render_with_stats(scene, camera)
+        return out
+
+    def render_batch_with_stats(self, scene: GaussianScene, cameras):
+        """Render a batch of camera poses of one scene in one vmapped call.
+
+        cameras: a batched `core.camera.Camera` pytree (leading frame axis on
+        every array leaf — build it with `core.camera.stack_cameras`); its
+        static height/width must match the plan's grid. Frames are
+        independent, so the result equals `render_with_stats` per camera;
+        batching buys SIMD width and compile reuse. Returns (RenderOut with a
+        leading frame axis, counters dict of (B,) arrays).
+        """
+        if (cameras.height, cameras.width) != (self.grid.height,
+                                               self.grid.width):
+            raise ValueError(
+                f"camera resolution {(cameras.height, cameras.width)} != "
+                f"plan grid {(self.grid.height, self.grid.width)}")
+        out, counters = jax.vmap(
+            lambda cam: self.render_with_stats(scene, cam))(cameras)
+        enforce_overflow_policy(jnp.any(out.overflow), self.stream.overflow,
+                                k_max=self.stream.k_max)
+        return out, counters
+
+    # -- introspection ------------------------------------------------------
+
+    def stages(self) -> tuple[StageSpec, ...]:
+        """The plan's stage sequence (name, backend, one-line description)."""
+        test_be = self.test.backend if self.test.method == "cat" else "jnp"
+        ctu_desc = {
+            "cat": f"mini-tile CAT on {self.dataflow} entries",
+            "obb": "sub-tile OBB gathered at entries",
+            "aabb": "no fine test (whole tile list blends)",
+        }[self.test.method]
+        return (
+            StageSpec("preprocess", "jnp", "projection + 3σ footprints"),
+            StageSpec("stage1_compact", "jnp",
+                      f"Stage-1 {self.test.method} + depth sort + "
+                      f"k_max={self.stream.k_max} compaction "
+                      f"({self.stream.overflow.value} on overflow)"),
+            StageSpec("ctu", test_be, ctu_desc),
+            StageSpec("blend", self.raster.backend,
+                      "fused in-kernel early termination" if self.raster.fused
+                      else "pure-jnp differentiable sweep"),
+        )
+
+    # -- effective (termination-aware) counters -----------------------------
+
+    def _prs_per_subtile(self, proj: Projected) -> jax.Array:
+        """(N,) PRs the CTU evaluates per hit sub-tile: 4 dense / 2 sparse
+        per Fig. 3(b), adaptive modes pick per Gaussian."""
+        spiky = classify_spiky(proj.axis_ratio, self.test.spiky_threshold)
+        if self.test.mode == SamplingMode.UNIFORM_DENSE:
+            return jnp.full(spiky.shape, 4.0)
+        if self.test.mode == SamplingMode.UNIFORM_SPARSE:
+            return jnp.full(spiky.shape, 2.0)
+        if self.test.mode == SamplingMode.SMOOTH_FOCUSED:
+            return jnp.where(spiky, 2.0, 4.0)
+        return jnp.where(spiky, 4.0, 2.0)
+
+    def _effective_counters(self, ps: ProjectedScene, ts: TileStream,
+                            hout: H.StreamHierarchyOut, entry_alive) -> dict:
+        """Termination-aware CTU/VRU workload (paper Fig. 6 semantics).
+
+        For each list entry processed before its tile terminated, the CTU
+        evaluated one PR batch per hit sub-tile (4 PRs dense, 2 sparse) and
+        the VRUs blended one mini-tile per CAT-passing mini-tile. On the
+        stream dataflow the per-entry masks already are those quantities; on
+        the dense oracle they are gathered per tile from the full masks.
+        """
+        proj, grid = ps.proj, ps.grid
+        idx = hout.lists.clip(0)                                 # (T, K)
+        live = entry_alive                                       # (T, K)
+        prs_per_sub = self._prs_per_subtile(proj)
+
+        if self.dataflow == "stream":
+            sub_hits = jnp.sum(hout.entry_sub_mask, axis=-1)     # (T, K)
+            mini_hits = jnp.sum(hout.entry_mini_mask, axis=-1)   # (T, K)
+            prs = prs_per_sub[idx]                               # (T, K)
+            return dict(
+                ctu_pairs_eff=jnp.sum(sub_hits * live).astype(jnp.float32),
+                ctu_prs_eff=jnp.sum(sub_hits * prs * live)
+                .astype(jnp.float32),
+                vru_pairs_eff=jnp.sum(mini_hits * live).astype(jnp.float32),
+                ctu_stream_len=jnp.sum(entry_alive).astype(jnp.float32),
+            )
+
+        # Dense oracle: per-tile grouped masks (T, subtiles_per_tile, N) etc.
+        dense = ts.dense
+        sub_of_tile = grid.tile_of_region(grid.subtile)
+        mini_of_tile = grid.tile_of_region(grid.minitile)
+        s_sort = jnp.argsort(sub_of_tile)
+        m_sort = jnp.argsort(mini_of_tile)
+        sub_by_tile = dense.subtile_mask[s_sort].reshape(
+            grid.num_tiles, grid.subtiles_per_tile, -1)
+        mini_by_tile = dense.minitile_mask[m_sort].reshape(
+            grid.num_tiles, grid.minitiles_per_tile, -1)
+
+        def per_tile(sub_t, mini_t, id_row, live_row):
+            sub_hits = jnp.sum(sub_t[:, id_row], axis=0)         # (K,)
+            mini_hits = jnp.sum(mini_t[:, id_row], axis=0)       # (K,)
+            return (jnp.sum(sub_hits * live_row),
+                    jnp.sum(mini_hits * live_row))
+
+        def per_tile_prs(sub_t, id_row, live_row):
+            sub_hits = jnp.sum(sub_t[:, id_row], axis=0)
+            return jnp.sum(sub_hits * prs_per_sub[id_row] * live_row)
+
+        sub_eff, mini_eff = jax.vmap(per_tile)(sub_by_tile, mini_by_tile,
+                                               idx, live)
+        prs_eff = jax.vmap(per_tile_prs)(sub_by_tile, idx, live)
+        return dict(
+            ctu_pairs_eff=jnp.sum(sub_eff).astype(jnp.float32),
+            ctu_prs_eff=jnp.sum(prs_eff).astype(jnp.float32),
+            vru_pairs_eff=jnp.sum(mini_eff).astype(jnp.float32),
+            ctu_stream_len=jnp.sum(entry_alive).astype(jnp.float32),
+        )
+
+
+# ---------------------------------------------------------------------------
+# Renderer facade
+# ---------------------------------------------------------------------------
+
+
+class Renderer:
+    """User-facing facade over a `RenderPlan`.
+
+        r = Renderer(test=TestConfig(method="cat", backend="pallas"),
+                     stream=StreamConfig(k_max=2048,
+                                         overflow=OverflowPolicy.WARN),
+                     raster=RasterConfig(fused=True))
+        out, counters = r.render_with_stats(scene, camera)
+
+    Omitted sub-configs take their defaults (the FLICKER configuration:
+    CAT method, SMOOTH_FOCUSED leaders, MIXED precision, stream dataflow).
+    """
+
+    def __init__(self, grid: Optional[GridConfig] = None,
+                 test: Optional[TestConfig] = None,
+                 stream: Optional[StreamConfig] = None,
+                 raster: Optional[RasterConfig] = None,
+                 dataflow: str = "stream"):
+        self.plan = RenderPlan(
+            grid=grid if grid is not None else GridConfig(),
+            test=test if test is not None else TestConfig(),
+            stream=stream if stream is not None else StreamConfig(),
+            raster=raster if raster is not None else RasterConfig(),
+            dataflow=dataflow)
+
+    @classmethod
+    def from_plan(cls, plan: RenderPlan) -> "Renderer":
+        r = cls.__new__(cls)
+        r.plan = plan
+        return r
+
+    @classmethod
+    def from_config(cls, cfg) -> "Renderer":
+        """Bridge from the legacy flat `pipeline.RenderConfig` (no warning —
+        this is the supported migration path)."""
+        return cls.from_plan(cfg.to_plan())
+
+    def replace(self, **kw) -> "Renderer":
+        """New Renderer with plan fields replaced (grid/test/stream/raster/
+        dataflow)."""
+        return Renderer.from_plan(dataclasses.replace(self.plan, **kw))
+
+    def render(self, scene: GaussianScene, camera) -> raster.RenderOut:
+        return self.plan.render(scene, camera)
+
+    def render_with_stats(self, scene: GaussianScene, camera):
+        return self.plan.render_with_stats(scene, camera)
+
+    def render_batch_with_stats(self, scene: GaussianScene, cameras):
+        return self.plan.render_batch_with_stats(scene, cameras)
+
+    def __repr__(self):
+        return f"Renderer({self.plan!r})"
+
+
+def as_plan(obj) -> RenderPlan:
+    """Normalize Renderer | RenderPlan | legacy RenderConfig to a plan."""
+    if isinstance(obj, RenderPlan):
+        return obj
+    if isinstance(obj, Renderer):
+        return obj.plan
+    if hasattr(obj, "to_plan"):               # legacy pipeline.RenderConfig
+        return obj.to_plan()
+    raise TypeError(f"cannot build a RenderPlan from {type(obj).__name__}")
+
+
+# ---------------------------------------------------------------------------
+# Overflow policy enforcement (host-side)
+# ---------------------------------------------------------------------------
+
+
+def enforce_overflow_policy(overflow, policy: OverflowPolicy, *,
+                            k_max: int, context: str = "") -> bool:
+    """Apply an OverflowPolicy to a concrete overflow flag.
+
+    No-ops under tracing (jit/vmap cannot branch on the flag — the in-graph
+    behavior is always clamping); callers holding concrete results (eager
+    renders, the serving engine after device sync) get the warn/raise
+    behavior. Returns True iff overflow was observed (and not raised).
+    """
+    if policy is OverflowPolicy.CLAMP or isinstance(overflow, jax.core.Tracer):
+        return False
+    if not bool(overflow):
+        return False
+    msg = (f"Stage-1 tile list overflowed k_max={k_max}; entries past the "
+           f"capacity were dropped (clamped){' — ' + context if context else ''}. "
+           f"Raise StreamConfig.k_max or register the scene with "
+           f"probe_cameras to measure a sufficient bound.")
+    if policy is OverflowPolicy.RAISE:
+        raise StreamOverflowError(msg)
+    warnings.warn(msg, StreamOverflowWarning, stacklevel=2)
+    return True
+
+
+# ---------------------------------------------------------------------------
+# Probe-driven k_max (the paper's FIFO-depth knob, measured)
+# ---------------------------------------------------------------------------
+
+
+def measure_k_max(scene: GaussianScene, cameras, *,
+                  grid: GridConfig = GridConfig(),
+                  cap: Optional[int] = None) -> int:
+    """k_max from the Stage-1 survivor histogram over a camera probe set.
+
+    For each probe camera, projects the scene and takes the per-tile
+    Stage-1 survivor counts (the histogram the Compact stage fills its
+    per-tile lists from); the bound is the longest list seen over the whole
+    probe set, rounded up to the next power of two so nearby probe sets land
+    on the same value and the serving jit cache stays small. `cap` (e.g. the
+    scene's padded Gaussian count) bounds the result from above.
+
+    Each camera carries its own resolution; `grid` supplies the tile shape.
+    """
+    cameras = list(cameras)
+    if not cameras:
+        raise ValueError("measure_k_max needs at least one probe camera "
+                         "(an empty probe set would measure k_max=1 and "
+                         "clamp every tile list)")
+    longest = 1
+    for cam in cameras:
+        g = grid.with_resolution(cam.height, cam.width).make()
+        proj = project(scene, cam)
+        counts = jnp.sum(aabb_mask(proj, g.tile_origins(), g.tile), axis=1)
+        longest = max(longest, int(jnp.max(counts)))
+    k = next_pow2(longest)
+    return min(k, cap) if cap is not None else k
+
+
+# ---------------------------------------------------------------------------
+# Static accounting + batch helpers
+# ---------------------------------------------------------------------------
+
+
+def cat_mask_elems(grid: TileGrid, n: int, k_max: int, dataflow: str) -> int:
+    """Boolean elements the CAT stage materializes (the Stage-1 + CAT mask
+    footprint, 1 byte/element): dense = (S + M)·N, stream = T·K·(Sp + Mt).
+    Static per config — the stream/dense ratio is the memory win
+    `benchmarks/scaling.py` tracks."""
+    if dataflow == "dense":
+        return (grid.num_subtiles + grid.num_minitiles) * n
+    if dataflow == "stream":
+        return grid.num_tiles * k_max * (grid.subtiles_per_tile
+                                         + grid.minitiles_per_tile)
+    raise ValueError(dataflow)
+
+
+def frame_counters(counters: dict, i: int) -> dict:
+    """Slice frame `i`'s scalars out of a batched counters dict."""
+    return {k: v[i] for k, v in counters.items()}

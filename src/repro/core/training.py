@@ -15,7 +15,9 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.gaussians import GaussianScene
-from repro.core.pipeline import RenderConfig, render, ssim
+from repro.core.metrics import ssim
+from repro.core.pipeline import RenderConfig
+from repro.core.renderer import as_plan
 
 
 @dataclasses.dataclass(frozen=True)
@@ -46,7 +48,10 @@ def init_state(scene: GaussianScene) -> TrainState:
 
 def loss_fn(scene: GaussianScene, camera, target: jax.Array,
             cfg: RenderConfig, ssim_weight: float) -> jax.Array:
-    img = render(scene, camera, cfg).image
+    """cfg: a legacy RenderConfig, a Renderer, or a RenderPlan — training
+    differentiates through whichever staged plan it maps to (the pure-jnp
+    blend path; `RasterConfig(fused=True)` is not differentiable)."""
+    img = as_plan(cfg).render(scene, camera).image
     l1 = jnp.mean(jnp.abs(img - target))
     return (1.0 - ssim_weight) * l1 + ssim_weight * (1.0 - ssim(img, target))
 

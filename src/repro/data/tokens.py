@@ -11,8 +11,6 @@ contract that matters for the framework is preserved here:
 """
 from __future__ import annotations
 
-import dataclasses
-
 import jax
 import jax.numpy as jnp
 

@@ -18,7 +18,7 @@ import dataclasses
 import signal
 import time
 from collections import deque
-from typing import Any, Callable, Optional
+from typing import Optional
 
 import jax
 import numpy as np

@@ -1,5 +1,12 @@
 """Jit'd wrappers routing the render pipeline through the Pallas kernels.
 
+This is what the staged `core.renderer.RenderPlan` dispatches to for its
+"pallas" backends: `TestConfig(backend="pallas")` routes the CTU stage
+through the PRTU kernels (`entry_cat_mask_pallas` on the stream dataflow,
+`cat_mask_pallas`/`hierarchical_test_pallas` on the dense oracle), and
+`RasterConfig(fused=True)` routes the blend stage through
+`render_tiles_fused`.
+
 Two blend routes exist on top of the shared operand gather
 (`gather_tile_features`): `blend_tiles_pallas` is the full-sweep kernel and
 `render_tiles_fused` is the contribution-aware kernel with true in-kernel
@@ -78,6 +85,16 @@ def entry_cat_mask_pallas(proj: Projected, grid: TileGrid, lists, valid,
     return mask != 0
 
 
+def entry_cat_fn(mode: SamplingMode, prec: PrecisionScheme,
+                 spiky_threshold: float = 3.0, interpret: bool = True):
+    """The `cat_fn` closure that routes an entry CAT evaluation through the
+    Pallas entry-PRTU kernel — the single place the kernel routing lives.
+    `core.renderer.RenderPlan.ctu` passes this to
+    `hierarchy.stream_entry_test` when `TestConfig.backend == "pallas"`."""
+    return lambda p, g, ls, v: entry_cat_mask_pallas(
+        p, g, ls, v, mode, prec, spiky_threshold, interpret)
+
+
 def stream_hierarchical_test_pallas(proj: Projected, grid: TileGrid,
                                     mode: SamplingMode,
                                     prec: PrecisionScheme,
@@ -89,8 +106,7 @@ def stream_hierarchical_test_pallas(proj: Projected, grid: TileGrid,
     through the Pallas entry-PRTU kernel."""
     return H.stream_hierarchical_test(
         proj, grid, mode, prec, spiky_threshold, k_max=k_max, order=order,
-        cat_fn=lambda p, g, ls, v: entry_cat_mask_pallas(
-            p, g, ls, v, mode, prec, spiky_threshold, interpret))
+        cat_fn=entry_cat_fn(mode, prec, spiky_threshold, interpret))
 
 
 def gather_tile_features(proj: Projected, grid: TileGrid, lists, valid,

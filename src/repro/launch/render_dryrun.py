@@ -21,7 +21,8 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.core.gaussians import GaussianScene
 from repro.core.camera import Camera
-from repro.core.pipeline import RenderConfig, render_with_stats
+from repro.core.renderer import (RenderPlan, GridConfig, TestConfig,
+                                 StreamConfig)
 from repro.core.cat import SamplingMode
 from repro.core.precision import MIXED
 from repro.launch.mesh import make_production_mesh
@@ -65,9 +66,11 @@ def main() -> int:
     # frames shard over EVERY mesh axis (pure DP serving: one frame per chip
     # at 256 frames on the single pod — the model axis would otherwise idle)
     dp = tuple(a for a in ("pod", "data", "model") if a in mesh.axis_names)
-    cfg = RenderConfig(height=args.res, width=args.res, method="cat",
-                       mode=SamplingMode.SMOOTH_FOCUSED, precision=MIXED,
-                       k_max=args.k_max)
+    plan = RenderPlan(
+        grid=GridConfig(height=args.res, width=args.res),
+        test=TestConfig(method="cat", mode=SamplingMode.SMOOTH_FOCUSED,
+                        precision=MIXED),
+        stream=StreamConfig(k_max=args.k_max))
 
     def render_batch(scene, cams):
         def one(cam_leaves):
@@ -75,7 +78,7 @@ def main() -> int:
                          fx=cam_leaves[2], fy=cam_leaves[3],
                          cx=cam_leaves[4], cy=cam_leaves[5],
                          width=args.res, height=args.res)
-            out, counters = render_with_stats(scene, cam, cfg)
+            out, counters = plan.render_with_stats(scene, cam)
             return out.image, counters["processed_per_pixel"]
 
         leaves = (cams.R_wc, cams.t_wc, cams.fx, cams.fy, cams.cx, cams.cy)

@@ -25,15 +25,23 @@ from repro.launch.mesh import make_local_mesh
 
 
 def serve_render(args) -> int:
-    from repro.core import (orbit_camera, RenderConfig, SamplingMode, MIXED)
+    from repro.core import (orbit_camera, Renderer, TestConfig, SamplingMode,
+                            MIXED)
     from repro.serving import (RenderEngine, MicroBatcher,
                                register_demo_scenes)
 
-    cfg = RenderConfig(method="cat", mode=SamplingMode.SMOOTH_FOCUSED,
-                       precision=MIXED, use_pallas=args.pallas)
-    engine = RenderEngine(cfg, mesh=make_local_mesh(),
+    renderer = Renderer(test=TestConfig(
+        method="cat", mode=SamplingMode.SMOOTH_FOCUSED, precision=MIXED,
+        backend="pallas" if args.pallas else "jnp"))
+    engine = RenderEngine(renderer, mesh=make_local_mesh(),
                           max_batch=args.max_batch)
-    register_demo_scenes(engine, args.gaussians)
+    # Probe-driven per-scene k_max over both served resolutions (the
+    # engine's OverflowPolicy.WARN flags any off-probe pose that still
+    # overflows, and telemetry counts it in overflow_frames).
+    probes = [orbit_camera(t, r, r)
+              for r in (args.res, max(args.res // 2, 16))
+              for t in (0.0, 1.6, 3.2, 4.8)]
+    register_demo_scenes(engine, args.gaussians, probe_cameras=probes)
     batcher = MicroBatcher(engine)
 
     # Mixed workload with request locality (real traffic clusters on hot

@@ -3,9 +3,6 @@ both the real launcher (train.py/serve.py) and the dry-run compile.
 """
 from __future__ import annotations
 
-import dataclasses
-from typing import Any, Optional
-
 import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P

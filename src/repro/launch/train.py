@@ -10,8 +10,6 @@ path (jit + shardings + checkpoint + straggler monitor).
 from __future__ import annotations
 
 import argparse
-import dataclasses
-import time
 
 import jax
 import jax.numpy as jnp
@@ -19,13 +17,11 @@ import jax.numpy as jnp
 from repro.configs import get_arch, reduced as reduce_cfg
 from repro.configs.base import ShapeConfig
 from repro.models.model import Model
-from repro.models import pspec
 from repro.optim import adamw
 from repro.optim.compression import (CompressionConfig, init_residuals,
                                      apply_tree)
 from repro.data import tokens as data
 from repro.launch.mesh import make_production_mesh, make_local_mesh
-from repro.launch import steps as ST
 from repro.distributed.fault import FaultManager, FaultConfig, \
     StragglerMonitor
 

@@ -9,13 +9,11 @@ remat policy keeps only the SP-sharded boundary tensors resident.
 from __future__ import annotations
 
 import functools
-from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
-from repro.models.pspec import PSpec, stack
 from repro.models import layers as L
 from repro.models import attention as A
 from repro.models import mla as M

@@ -13,7 +13,6 @@ Model(cfg) exposes:
 from __future__ import annotations
 
 import dataclasses
-import functools
 from typing import Any, Dict
 
 import jax

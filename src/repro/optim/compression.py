@@ -14,7 +14,6 @@ traffic at <1% quality cost at the scales the literature reports.
 from __future__ import annotations
 
 import dataclasses
-from typing import Any
 
 import jax
 import jax.numpy as jnp

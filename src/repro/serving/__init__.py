@@ -1,17 +1,20 @@
-"""Request-level serving layer above `core.pipeline`.
+"""Request-level serving layer above the staged render API (`core.renderer`).
 
-    engine     — RenderEngine: scene registry + bucketed jit cache +
-                 vmapped batch rendering
+    engine     — RenderEngine: scene registry (probe-driven k_max) +
+                 RenderPlan-keyed jit cache + vmapped batch rendering +
+                 per-batch OverflowPolicy enforcement
     batching   — request queue / micro-batcher with per-request futures
     sharding   — frame-axis device sharding glue over launch.mesh
-    telemetry  — rolling latency percentiles, throughput, and modeled
-                 accelerator FPS from aggregated FLICKER counters
+    telemetry  — rolling latency percentiles, throughput, overflow-frame
+                 counts, and modeled accelerator FPS from FLICKER counters
 """
 from repro.serving.engine import (RenderEngine, RenderRequest, FrameResult,
                                   batch_bucket, scene_bucket)
 from repro.serving.batching import MicroBatcher, RequestResult
 from repro.serving.telemetry import Telemetry
 from repro.serving.workloads import register_demo_scenes
+from repro.core.renderer import (OverflowPolicy, StreamOverflowWarning,
+                                 StreamOverflowError, measure_k_max)
 
 __all__ = [
     "RenderEngine", "RenderRequest", "FrameResult",
@@ -19,4 +22,6 @@ __all__ = [
     "MicroBatcher", "RequestResult",
     "Telemetry",
     "register_demo_scenes",
+    "OverflowPolicy", "StreamOverflowWarning", "StreamOverflowError",
+    "measure_k_max",
 ]

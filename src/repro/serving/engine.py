@@ -1,9 +1,9 @@
 """RenderEngine: multi-scene, bucketed, batched rendering.
 
-The engine is the request-level layer above `core.pipeline`: it holds a
-registry of named `GaussianScene`s and serves whole batches of camera poses
-per jitted call (one `jax.vmap` over the camera pytree, via
-`core.pipeline.render_batch_with_stats`).
+The engine is the request-level layer above the staged render API
+(`core.renderer`): it holds a registry of named `GaussianScene`s and serves
+whole batches of camera poses per jitted call (one `jax.vmap` over the
+camera pytree via `RenderPlan.render_batch_with_stats`).
 
 Recompiles are the throughput killer at this layer, so every shape the
 compiler sees is bucketed:
@@ -14,43 +14,53 @@ compiler sees is bucketed:
                  camera), so differently-sized scenes share executables;
   batch bucket — batches are padded to the next power-of-two frame count by
                  repeating the last camera, and the padding frames are
-                 sliced off the result.
+                 sliced off the result;
+  k_max        — per-scene list capacity, either given or *measured* from a
+                 camera probe set at registration (`probe_cameras=`): the
+                 longest Stage-1 survivor list over the probes, pow2-bucketed
+                 (`core.renderer.measure_k_max`) so nearby probe sets share
+                 executables.
 
-The jit cache is keyed by (scene bucket, RenderConfig, batch bucket); the
-RenderConfig component carries the raster-path flags (`fused`, `use_pallas`),
-so fused and unfused traffic compile and cache separately instead of
-retracing each other. `compile_count` counts cache misses (= traces), which
-tests assert on.
+The jit cache is keyed by (scene bucket, RenderPlan, batch bucket) — the
+`RenderPlan` is a hashable frozen dataclass of the per-stage configs, so any
+knob that changes the compiled program (resolution, k_max, backends, fused)
+keys a separate executable, and fused/unfused traffic never retrace each
+other. `compile_count` counts cache misses (= traces), which tests assert on.
+
+Overflow: a frame whose Stage-1 tile lists exceed the scene's k_max is
+always *clamped* in-graph; the engine then applies the plan's
+`OverflowPolicy` per batch on the concrete per-frame overflow flags —
+WARN (the serving default) emits a `StreamOverflowWarning`, RAISE raises
+`StreamOverflowError` — and counts `overflow_frames` into telemetry either
+way.
 """
 from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Optional, Sequence
+from typing import Callable, Optional, Sequence, Union
 
 import jax
+import numpy as np
 
 from repro.core import (GaussianScene, Camera, pad_scene, stack_cameras,
-                        RenderConfig, FLICKER_CONFIG)
-from repro.core.pipeline import render_batch_with_stats, frame_counters
+                        Renderer, RenderPlan, RenderConfig, OverflowPolicy,
+                        frame_counters, measure_k_max, as_plan)
+from repro.core.renderer import enforce_overflow_policy, next_pow2
 from repro.serving import sharding as shd
 from repro.serving.telemetry import Telemetry
 
 
-def _next_pow2(n: int) -> int:
-    return 1 if n <= 1 else 1 << (n - 1).bit_length()
-
-
 def scene_bucket(n: int) -> int:
     """Gaussian-count bucket a scene is padded to."""
-    return _next_pow2(n)
+    return next_pow2(n)
 
 
 def batch_bucket(n: int, max_batch: int) -> int:
     """Frame-count bucket a batch is padded to: next power of two, clamped
     to `max_batch` (so a non-power-of-two cap is itself the top bucket and
     the padded batch never exceeds it)."""
-    return min(_next_pow2(n), max_batch)
+    return min(next_pow2(n), max_batch)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -71,6 +81,7 @@ class FrameResult:
     batch_size: int           # real frames in the batch that served this
     bucket_size: int          # padded frame count the executable ran at
     render_s: float           # wall-clock of the whole batch
+    overflow: bool = False    # this frame's Stage-1 lists overflowed k_max
 
 
 @dataclasses.dataclass(frozen=True)
@@ -84,52 +95,90 @@ class _SceneEntry:
 class RenderEngine:
     """Registry of scenes + bucketed jit cache + batch renderer.
 
-    base_config: template RenderConfig; height/width/k_max are overridden
+    base: the render configuration to serve with — a `Renderer`, a
+        `RenderPlan`, or a legacy flat `RenderConfig` (converted via
+        `to_plan()`). The plan's grid resolution and k_max are overridden
         per (request resolution, scene) at render time.
     mesh: optional jax Mesh — batches shard their frame axis over the mesh's
         data axes and scenes are replicated (serving/sharding.py).
     max_batch: upper bound on the padded batch bucket.
     pad_scenes: bucket scene sizes (power-of-two padding with inert
         Gaussians). Disable to compile one executable per exact scene size.
-    fused: when not None, overrides base_config.fused — serve through the
+    overflow: the OverflowPolicy applied per batch. When None (default) the
+        base plan's policy is kept — except a plan still on the core default
+        CLAMP is upgraded to WARN, because serving traffic should never
+        *silently* clamp. Pass a policy explicitly (e.g.
+        `overflow=OverflowPolicy.CLAMP` or `"clamp"`) to force one; a
+        WARN/RAISE policy already set on the base plan is always respected.
+    fused: when not None, overrides the raster stage — serve through the
         fused contribution-aware raster kernel (True) or the pure-jnp
         parity path (False). Part of the jit-cache key either way.
-    dataflow: when not None, overrides base_config.dataflow — 'stream'
+    dataflow: when not None, overrides the plan dataflow — 'stream'
         (the default survivor-stream pipeline; O(tiles·k_max) CAT memory,
         the only path that fits production scene sizes) or 'dense' (the
         O(regions×N) parity oracle). Part of the jit-cache key either way.
     """
 
-    def __init__(self, base_config: RenderConfig = FLICKER_CONFIG, *,
-                 mesh=None, max_batch: int = 64, pad_scenes: bool = True,
+    def __init__(self,
+                 base: Union[Renderer, RenderPlan, RenderConfig, None] = None,
+                 *, mesh=None, max_batch: int = 64, pad_scenes: bool = True,
                  telemetry: Optional[Telemetry] = None,
+                 overflow: Union[OverflowPolicy, str, None] = None,
                  fused: Optional[bool] = None,
                  dataflow: Optional[str] = None):
+        plan = RenderPlan() if base is None else as_plan(base)
         if fused is not None:
-            base_config = dataclasses.replace(base_config, fused=fused)
+            plan = dataclasses.replace(
+                plan, raster=dataclasses.replace(plan.raster, fused=fused))
         if dataflow is not None:
-            base_config = dataclasses.replace(base_config, dataflow=dataflow)
-        self.base_config = base_config
+            plan = dataclasses.replace(plan, dataflow=dataflow)
+        if overflow is None and plan.stream.overflow is OverflowPolicy.CLAMP:
+            overflow = OverflowPolicy.WARN    # serving default: never silent
+        if overflow is not None:
+            plan = dataclasses.replace(
+                plan, stream=dataclasses.replace(
+                    plan.stream, overflow=OverflowPolicy(overflow)))
+        self.plan = plan
         self.mesh = mesh
         self.max_batch = max_batch
         self.pad_scenes = pad_scenes
         self.telemetry = telemetry if telemetry is not None else Telemetry()
         self._scenes: dict[str, _SceneEntry] = {}
-        self._cache: dict[tuple, callable] = {}
+        self._cache: dict[tuple, Callable] = {}
         self.compile_count = 0
+
+    @property
+    def base_config(self) -> RenderConfig:
+        """Legacy flat view of the engine's plan (compat accessor)."""
+        return RenderConfig.from_plan(self.plan)
 
     # -- registry -----------------------------------------------------------
 
     def register_scene(self, name: str, scene: GaussianScene, *,
-                       k_max: Optional[int] = None) -> _SceneEntry:
+                       k_max: Optional[int] = None,
+                       probe_cameras: Optional[Sequence[Camera]] = None) \
+            -> _SceneEntry:
         """Register (and bucket-pad) a scene under `name`.
 
-        k_max: per-tile compacted list capacity for this scene; defaults to
-        the padded Gaussian count (no tile can overflow).
+        k_max: per-tile compacted list capacity for this scene. When None:
+        if `probe_cameras` is given, k_max is *measured* — the longest
+        Stage-1 survivor list over the probe set, pow2-bucketed and capped
+        at the scene bucket (`core.renderer.measure_k_max`); otherwise it
+        defaults to the padded Gaussian count (no tile can overflow).
+        Probing with the cameras the scene will actually serve closes the
+        gap between "cannot overflow" (k_max = N, maximal padding waste)
+        and "right-sized" (k_max = what Stage 1 actually produces);
+        off-probe traffic that still overflows is handled by the engine's
+        OverflowPolicy.
         """
         n_real = scene.n
         n_bucket = scene_bucket(n_real) if self.pad_scenes else n_real
         padded = pad_scene(scene, n_bucket)
+        if k_max is None and probe_cameras is not None:
+            # Probe the *padded* scene: padding is inert and frustum-culled,
+            # so it can never lengthen a survivor list.
+            k_max = measure_k_max(padded, probe_cameras,
+                                  grid=self.plan.grid, cap=n_bucket)
         if self.mesh is not None:
             padded = shd.replicate(padded, self.mesh)
         entry = _SceneEntry(scene=padded, n_real=n_real, n_bucket=n_bucket,
@@ -145,18 +194,27 @@ class RenderEngine:
 
     # -- jit cache ----------------------------------------------------------
 
-    def config_for(self, name: str, height: int, width: int) -> RenderConfig:
+    def plan_for(self, name: str, height: int, width: int) -> RenderPlan:
+        """The engine plan specialized to a scene's k_max and a resolution —
+        exactly the jit-cache key component for this traffic."""
         entry = self._scenes[name]
-        return dataclasses.replace(self.base_config, height=height,
-                                   width=width, k_max=entry.k_max)
+        return dataclasses.replace(
+            self.plan,
+            grid=self.plan.grid.with_resolution(height, width),
+            stream=dataclasses.replace(self.plan.stream,
+                                       k_max=entry.k_max))
 
-    def _render_fn(self, n_bucket: int, cfg: RenderConfig, bucket: int):
-        key = (n_bucket, cfg, bucket)
+    def config_for(self, name: str, height: int, width: int) -> RenderConfig:
+        """Legacy flat view of `plan_for` (compat accessor)."""
+        return RenderConfig.from_plan(self.plan_for(name, height, width))
+
+    def _render_fn(self, n_bucket: int, plan: RenderPlan, bucket: int):
+        key = (n_bucket, plan, bucket)
         fn = self._cache.get(key)
         if fn is None:
             self.compile_count += 1
             fn = jax.jit(
-                lambda scene, cams: render_batch_with_stats(scene, cams, cfg))
+                lambda scene, cams: plan.render_batch_with_stats(scene, cams))
             self._cache[key] = fn
         return fn
 
@@ -186,7 +244,7 @@ class RenderEngine:
                              f"{self.max_batch}; split it upstream")
 
         entry = self._scenes[name]
-        cfg = self.config_for(name, height, width)
+        plan = self.plan_for(name, height, width)
         n = len(requests)
         bucket = batch_bucket(n, self.max_batch)
 
@@ -196,7 +254,7 @@ class RenderEngine:
         if self.mesh is not None:
             cams = shd.shard_frames(cams, self.mesh)
 
-        fn = self._render_fn(entry.n_bucket, cfg, bucket)
+        fn = self._render_fn(entry.n_bucket, plan, bucket)
         t0 = time.perf_counter()
         out, counters = jax.block_until_ready(fn(entry.scene, cams))
         dt = time.perf_counter() - t0
@@ -208,9 +266,20 @@ class RenderEngine:
         if "n_gaussians" in counters:
             counters["n_gaussians"] = jax.numpy.full(
                 (n,), float(entry.n_real), jax.numpy.float32)
+
+        # Overflow accounting + policy (concrete flags now that the batch
+        # has materialized — in-graph behavior is always clamping).
+        frame_overflow = np.asarray(out.overflow)[:n]
+        overflow_frames = int(frame_overflow.sum())
         self.telemetry.record_batch(batch_size=n, bucket_size=bucket,
                                     latency_s=dt, counters=counters,
-                                    height=height, width=width)
+                                    height=height, width=width,
+                                    overflow_frames=overflow_frames)
+        if overflow_frames:
+            enforce_overflow_policy(
+                True, plan.stream.overflow, k_max=entry.k_max,
+                context=f"{overflow_frames}/{n} frames of scene {name!r} "
+                        f"at {height}x{width}")
 
         return [
             FrameResult(
@@ -221,6 +290,7 @@ class RenderEngine:
                 batch_size=n,
                 bucket_size=bucket,
                 render_s=dt,
+                overflow=bool(frame_overflow[i]),
             )
             for i, r in enumerate(requests)
         ]

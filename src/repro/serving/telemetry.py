@@ -26,6 +26,7 @@ class BatchRecord:
     latency_s: float         # wall-clock for the whole batch
     modeled_fps: float       # mean modeled accelerator FPS over the frames
     counters: dict           # per-frame counter means (python floats)
+    overflow_frames: int = 0  # frames whose Stage-1 lists overflowed k_max
 
 
 class Telemetry:
@@ -37,11 +38,16 @@ class Telemetry:
             collections.deque(maxlen=window)
         self.total_frames = 0
         self.total_batches = 0
+        self.total_overflow_frames = 0
 
     def record_batch(self, *, batch_size: int, bucket_size: int,
                      latency_s: float, counters: dict,
-                     height: int, width: int) -> BatchRecord:
-        """counters: dict of per-frame (B,) arrays for the real frames."""
+                     height: int, width: int,
+                     overflow_frames: int = 0) -> BatchRecord:
+        """counters: dict of per-frame (B,) arrays for the real frames.
+        overflow_frames: how many of them overflowed their k_max (the
+        engine's overflow-aware accounting — ends up in `snapshot()` both
+        as a window sum and as the lifetime `total_overflow_frames`)."""
         c = {k: np.asarray(v, np.float64) for k, v in counters.items()}
         fps = [
             pm.frame_time_s(
@@ -57,10 +63,12 @@ class Telemetry:
             latency_s=latency_s,
             modeled_fps=float(np.mean(fps)) if fps else 0.0,
             counters={k: float(np.mean(v)) for k, v in c.items()},
+            overflow_frames=overflow_frames,
         )
         self._records.append(rec)
         self.total_frames += batch_size
         self.total_batches += 1
+        self.total_overflow_frames += overflow_frames
         return rec
 
     def snapshot(self) -> dict:
@@ -69,7 +77,9 @@ class Telemetry:
         if not recs:
             return dict(batches=0, frames=0, p50_ms=0.0, p95_ms=0.0,
                         p99_ms=0.0, fps=0.0, modeled_fps=0.0,
-                        mean_batch=0.0, counters={})
+                        mean_batch=0.0, overflow_frames=0,
+                        total_overflow_frames=self.total_overflow_frames,
+                        counters={})
         lat_ms = np.array([r.latency_s for r in recs]) * 1e3
         frames = sum(r.batch_size for r in recs)
         # Throughput over the same window the percentiles describe: from the
@@ -90,13 +100,18 @@ class Telemetry:
             fps=frames / span,
             modeled_fps=float(np.mean([r.modeled_fps for r in recs])),
             mean_batch=frames / len(recs),
+            overflow_frames=sum(r.overflow_frames for r in recs),
+            total_overflow_frames=self.total_overflow_frames,
             counters=agg,
         )
 
     def format_snapshot(self) -> str:
         s = self.snapshot()
-        return (f"{s['frames']} frames / {s['batches']} batches "
+        line = (f"{s['frames']} frames / {s['batches']} batches "
                 f"(mean batch {s['mean_batch']:.1f}) | host {s['fps']:.1f} "
                 f"fps | latency p50 {s['p50_ms']:.1f} / p95 {s['p95_ms']:.1f}"
                 f" / p99 {s['p99_ms']:.1f} ms | modeled FLICKER "
                 f"{s['modeled_fps']:.0f} fps")
+        if s["overflow_frames"]:
+            line += f" | OVERFLOW {s['overflow_frames']} frames in window"
+        return line

@@ -17,15 +17,21 @@ DEMO_SCENE_KW = dict(scale_range=(-2.9, -2.4), stretch=4.0,
 
 def register_demo_scenes(engine: RenderEngine, n_gaussians: int, *,
                          sizes: Optional[dict] = None,
-                         k_max: Optional[int] = None) -> list[str]:
+                         k_max: Optional[int] = None,
+                         probe_cameras=None) -> list[str]:
     """Register the standard mixed workload: 'train' at `n_gaussians`,
     'truck' at 3/4 of it (override both via `sizes={name: n}`). Returns the
-    registered scene names."""
+    registered scene names.
+
+    probe_cameras: forwarded to `RenderEngine.register_scene` — when given
+    (and k_max is None) each scene's k_max is measured from its Stage-1
+    survivor histogram over the probe set instead of defaulting to the
+    scene bucket size."""
     if sizes is None:
         sizes = {"train": n_gaussians,
                  "truck": max(n_gaussians * 3 // 4, 16)}
     for seed, (name, n) in enumerate(sizes.items()):
         engine.register_scene(
             name, random_scene(jax.random.PRNGKey(seed), n, **DEMO_SCENE_KW),
-            k_max=k_max)
+            k_max=k_max, probe_cameras=probe_cameras)
     return list(sizes)

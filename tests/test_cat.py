@@ -9,8 +9,7 @@ from hypothesis import given, settings, strategies as st
 
 from repro.core.cat import (pr_gaussian_weight, minitile_cat_mask,
                             exact_minitile_mask, SamplingMode)
-from repro.core.precision import (FULL_FP32, FULL_FP16, FULL_FP8, MIXED,
-                                  PrecisionScheme)
+from repro.core.precision import FULL_FP32, FULL_FP8, MIXED
 from repro.core.hierarchy import hierarchical_test
 from repro.core.culling import aabb_mask
 

@@ -8,7 +8,6 @@ from hypothesis import given, settings, strategies as st
 
 from repro.core.gaussians import (quat_to_rotmat, covariance_3d, project,
                                   classify_spiky, random_scene, _sym2x2_eig)
-from repro.core.camera import default_camera
 
 
 @settings(deadline=None, max_examples=50)

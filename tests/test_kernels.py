@@ -9,7 +9,6 @@ from repro.core.camera import default_camera
 from repro.core.culling import TileGrid
 from repro.core.cat import SamplingMode, minitile_cat_mask
 from repro.core.precision import FULL_FP32, FULL_FP16, FULL_FP8, MIXED
-from repro.core import raster
 from repro.core.hierarchy import stream_hierarchical_test
 from repro.kernels import ops as kops
 from repro.kernels import prtu, ref as kref, render as krender

@@ -4,7 +4,6 @@ import dataclasses
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
 import repro.configs as R
 from repro.models.model import Model

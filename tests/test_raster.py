@@ -7,11 +7,8 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.core import raster
 from repro.core.culling import aabb_mask
-from repro.core.pipeline import (render_with_stats, RenderConfig, psnr,
-                                 VANILLA_CONFIG, GSCORE_CONFIG,
-                                 FLICKER_CONFIG)
+from repro.core.pipeline import render_with_stats, RenderConfig, psnr
 from repro.core.raster import render_reference, depth_order, \
     compact_tile_lists
 from repro.core.precision import FULL_FP32

@@ -1,0 +1,262 @@
+"""The staged Renderer/RenderPlan API.
+
+Covers: bit-exact parity between the legacy flat-RenderConfig entry points
+and the structured plan across the full {method × dataflow × backend ×
+fused} grid (images AND every workload counter), the deprecation shims, the
+plan's hashability/value-equality (it is the serving jit-cache key), stage
+introspection, config validation, probe-driven k_max measurement, and the
+OverflowPolicy semantics at the core level.
+"""
+import dataclasses
+import warnings
+
+import jax
+import numpy as np
+import pytest
+
+from repro.core import (random_scene, default_camera, orbit_camera,
+                        stack_cameras, Renderer, RenderPlan, GridConfig,
+                        TestConfig, StreamConfig, RasterConfig,
+                        OverflowPolicy, StreamOverflowWarning,
+                        StreamOverflowError, RenderConfig, render,
+                        render_with_stats, render_batch_with_stats,
+                        measure_k_max, as_plan, FULL_FP32, MIXED)
+from repro.core.renderer import next_pow2
+
+SIZE = 32
+N = 250
+
+
+@pytest.fixture(scope="module")
+def scene():
+    return random_scene(jax.random.PRNGKey(3), N, scale_range=(-2.9, -2.2),
+                        stretch=4.0, opacity_range=(-1.5, 3.0),
+                        spiky_frac=0.4)
+
+
+@pytest.fixture(scope="module")
+def cam():
+    return default_camera(SIZE, SIZE)
+
+
+def _legacy(**kw) -> RenderConfig:
+    base = dict(height=SIZE, width=SIZE, k_max=N, precision=MIXED)
+    base.update(kw)
+    return RenderConfig(**base)
+
+
+def _assert_bit_identical(a, b):
+    out_a, c_a = a
+    out_b, c_b = b
+    np.testing.assert_array_equal(np.asarray(out_a.image),
+                                  np.asarray(out_b.image))
+    np.testing.assert_array_equal(np.asarray(out_a.alpha),
+                                  np.asarray(out_b.alpha))
+    np.testing.assert_array_equal(np.asarray(out_a.processed_per_pixel),
+                                  np.asarray(out_b.processed_per_pixel))
+    assert set(c_a) == set(c_b)
+    for k in c_a:
+        np.testing.assert_array_equal(np.asarray(c_a[k]),
+                                      np.asarray(c_b[k]), err_msg=k)
+
+
+# ---------------------------------------------------------------------------
+# Parity grid: legacy flat config == structured plan, bit for bit
+# ---------------------------------------------------------------------------
+
+PARITY_GRID = [
+    # (method, dataflow, use_pallas, fused)
+    ("aabb", "stream", False, False),
+    ("obb", "stream", False, False),
+    ("cat", "stream", False, False),
+    ("cat", "stream", False, True),
+    ("cat", "stream", True, False),
+    ("cat", "stream", True, True),
+    ("cat", "dense", False, False),
+    ("cat", "dense", False, True),
+    ("cat", "dense", True, False),
+    ("cat", "dense", True, True),
+]
+
+
+@pytest.mark.parametrize("method,dataflow,use_pallas,fused", PARITY_GRID)
+def test_renderer_bit_matches_legacy_entry_points(scene, cam, method,
+                                                  dataflow, use_pallas,
+                                                  fused):
+    """`Renderer` renders bit-identically to the deprecated
+    `render_with_stats` for every point of the config grid — images and
+    every workload counter."""
+    cfg = _legacy(method=method, dataflow=dataflow, use_pallas=use_pallas,
+                  fused=fused,
+                  precision=MIXED if method == "cat" else FULL_FP32)
+    renderer = Renderer(
+        grid=GridConfig(height=SIZE, width=SIZE),
+        test=TestConfig(method=method, precision=cfg.precision,
+                        backend="pallas" if use_pallas else "jnp"),
+        stream=StreamConfig(k_max=N),
+        raster=RasterConfig(fused=fused),
+        dataflow=dataflow)
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore", DeprecationWarning)
+        legacy = render_with_stats(scene, cam, cfg)
+    _assert_bit_identical(renderer.render_with_stats(scene, cam), legacy)
+
+
+def test_renderer_batch_bit_matches_legacy(scene):
+    cams = stack_cameras([orbit_camera(t, SIZE, SIZE)
+                          for t in (0.3, 1.1, 2.2)])
+    renderer = Renderer(grid=GridConfig(height=SIZE, width=SIZE),
+                        stream=StreamConfig(k_max=N))
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore", DeprecationWarning)
+        legacy = render_batch_with_stats(scene, cams, _legacy())
+    _assert_bit_identical(renderer.render_batch_with_stats(scene, cams),
+                          legacy)
+
+
+# ---------------------------------------------------------------------------
+# Deprecation shims
+# ---------------------------------------------------------------------------
+
+def test_legacy_entry_points_warn_and_bit_match(scene, cam):
+    """Satellite: every legacy entry point emits DeprecationWarning while
+    returning exactly what the new API returns."""
+    cfg = _legacy()
+    plan = cfg.to_plan()
+
+    with pytest.warns(DeprecationWarning, match="render_with_stats"):
+        legacy = render_with_stats(scene, cam, cfg)
+    _assert_bit_identical(legacy, plan.render_with_stats(scene, cam))
+
+    with pytest.warns(DeprecationWarning, match="core.pipeline.render "):
+        img = render(scene, cam, cfg).image
+    np.testing.assert_array_equal(np.asarray(img),
+                                  np.asarray(plan.render(scene, cam).image))
+
+    cams = stack_cameras([orbit_camera(0.5, SIZE, SIZE)])
+    with pytest.warns(DeprecationWarning, match="render_batch_with_stats"):
+        legacy_b = render_batch_with_stats(scene, cams, cfg)
+    _assert_bit_identical(legacy_b,
+                          plan.render_batch_with_stats(scene, cams))
+
+
+def test_to_plan_round_trip():
+    cfg = _legacy(method="obb", dataflow="dense", use_pallas=True,
+                  fused=True, background=0.25, spiky_threshold=2.5)
+    assert RenderConfig.from_plan(cfg.to_plan()) == cfg
+    assert as_plan(cfg) == cfg.to_plan()
+    assert as_plan(cfg.to_renderer()) == cfg.to_plan()
+
+
+# ---------------------------------------------------------------------------
+# Plan structure: hashability (the serving jit-cache key) + introspection
+# ---------------------------------------------------------------------------
+
+def test_plan_is_hashable_value_equal_cache_key():
+    a = RenderPlan(stream=StreamConfig(k_max=512))
+    b = RenderPlan(stream=StreamConfig(k_max=512))
+    c = dataclasses.replace(a, raster=RasterConfig(fused=True))
+    assert a == b and hash(a) == hash(b)
+    assert a != c
+    cache = {a: "compiled"}
+    assert cache[b] == "compiled"   # value equality, not identity
+    assert c not in cache
+
+
+def test_plan_stages_reflect_backends():
+    plan = RenderPlan(test=TestConfig(backend="pallas"),
+                      raster=RasterConfig(fused=True))
+    names = [s.name for s in plan.stages()]
+    assert names == ["preprocess", "stage1_compact", "ctu", "blend"]
+    by_name = {s.name: s for s in plan.stages()}
+    assert by_name["ctu"].backend == "pallas"
+    assert by_name["blend"].backend == "pallas"
+    jnp_plan = RenderPlan()
+    assert all(s.backend == "jnp" for s in jnp_plan.stages())
+
+
+def test_config_validation():
+    with pytest.raises(ValueError, match="method"):
+        TestConfig(method="bogus")
+    with pytest.raises(ValueError, match="backend"):
+        TestConfig(backend="cuda")
+    with pytest.raises(ValueError, match="dataflow"):
+        RenderPlan(dataflow="sideways")
+    # string overflow policies normalize to the enum
+    assert StreamConfig(overflow="raise").overflow is OverflowPolicy.RAISE
+
+
+# ---------------------------------------------------------------------------
+# Probe-driven k_max
+# ---------------------------------------------------------------------------
+
+def test_measure_k_max_pow2_and_sufficient(scene):
+    cams = [orbit_camera(t, SIZE, SIZE) for t in (0.0, 2.0, 4.0)]
+    k = measure_k_max(scene, cams, grid=GridConfig(SIZE, SIZE))
+    assert k == next_pow2(k)                      # pow2-bucketed
+    assert k <= next_pow2(N)
+    # Sufficient: no probe camera overflows at the measured bound.
+    r = Renderer(grid=GridConfig(SIZE, SIZE), stream=StreamConfig(k_max=k))
+    for c in cams:
+        assert not bool(r.render(scene, c).overflow)
+    # cap applies
+    assert measure_k_max(scene, cams, grid=GridConfig(SIZE, SIZE),
+                         cap=16) == 16
+    # an empty probe set must fail loudly, not measure k_max=1
+    with pytest.raises(ValueError, match="probe"):
+        measure_k_max(scene, [], grid=GridConfig(SIZE, SIZE))
+
+
+# ---------------------------------------------------------------------------
+# OverflowPolicy semantics at the core level
+# ---------------------------------------------------------------------------
+
+def _tiny_k_renderer(policy):
+    return Renderer(grid=GridConfig(SIZE, SIZE),
+                    stream=StreamConfig(k_max=4, overflow=policy))
+
+
+def test_overflow_policy_core(scene, cam):
+    with pytest.warns(StreamOverflowWarning, match="k_max=4"):
+        out, _ = _tiny_k_renderer(OverflowPolicy.WARN) \
+            .render_with_stats(scene, cam)
+    assert bool(out.overflow)
+
+    with pytest.raises(StreamOverflowError):
+        _tiny_k_renderer(OverflowPolicy.RAISE).render_with_stats(scene, cam)
+
+    with warnings.catch_warnings():
+        warnings.simplefilter("error", StreamOverflowWarning)
+        out, _ = _tiny_k_renderer(OverflowPolicy.CLAMP) \
+            .render_with_stats(scene, cam)      # silent by contract
+    assert bool(out.overflow)
+
+
+def test_overflow_policy_is_inert_under_jit(scene, cam):
+    """In-graph behavior is always clamping: a jitted plan with RAISE must
+    trace and execute (the policy is enforced where flags are concrete —
+    e.g. by the serving engine)."""
+    plan = _tiny_k_renderer(OverflowPolicy.RAISE).plan
+    out, _ = jax.jit(lambda s: plan.render_with_stats(s, cam))(scene)
+    assert bool(out.overflow)
+
+
+# ---------------------------------------------------------------------------
+# Renderer facade ergonomics
+# ---------------------------------------------------------------------------
+
+def test_renderer_replace(scene, cam):
+    r = Renderer(grid=GridConfig(SIZE, SIZE), stream=StreamConfig(k_max=N))
+    r2 = r.replace(raster=RasterConfig(background=1.0))
+    assert r.plan.raster.background == 0.0          # original untouched
+    assert r2.plan.raster.background == 1.0
+    img0 = np.asarray(r.render(scene, cam).image)
+    img1 = np.asarray(r2.render(scene, cam).image)
+    assert (img1 >= img0 - 1e-6).all() and img1.mean() > img0.mean()
+
+
+def test_resolution_mismatch_raises(scene):
+    cams = stack_cameras([orbit_camera(0.0, 64, 64)])
+    r = Renderer(grid=GridConfig(SIZE, SIZE))
+    with pytest.raises(ValueError, match="resolution"):
+        r.render_batch_with_stats(scene, cams)

@@ -1,7 +1,6 @@
 """Roofline machinery: HLO collective parsing, term math, mesh builders."""
 import jax
 import jax.numpy as jnp
-import numpy as np
 import pytest
 
 from repro.launch import roofline as RL

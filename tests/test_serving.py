@@ -1,12 +1,17 @@
 """Serving engine: batched == per-frame, bucket padding is inert, the jit
-cache actually caches, batching/futures behave, telemetry is sane."""
+cache actually caches (keyed by RenderPlan), probe-driven k_max, overflow
+policy, batching/futures behave, telemetry is sane."""
+import warnings
+
 import numpy as np
 import pytest
 
 import jax
 
 from repro.core import (random_scene, orbit_camera, stack_cameras,
-                        render_with_stats, RenderConfig)
+                        render_with_stats, RenderConfig, OverflowPolicy,
+                        StreamOverflowWarning, StreamOverflowError)
+from repro.core.renderer import next_pow2
 from repro.launch.mesh import make_local_mesh
 from repro.serving import (RenderEngine, RenderRequest, MicroBatcher,
                            batch_bucket, scene_bucket, register_demo_scenes)
@@ -41,6 +46,23 @@ def test_buckets():
     assert batch_bucket(3, max_batch=8) == 4
     assert batch_bucket(5, max_batch=8) == 8
     assert batch_bucket(1, max_batch=8) == 1
+
+
+def test_bucket_edge_cases():
+    """n=0/1 degenerate buckets and a non-power-of-two max_batch cap."""
+    assert scene_bucket(0) == 1            # empty scene still pads to 1
+    assert scene_bucket(1) == 1
+    assert batch_bucket(0, max_batch=8) == 1
+    assert batch_bucket(1, max_batch=1) == 1
+    # non-pow2 cap is itself the top bucket; padded batch never exceeds it
+    assert batch_bucket(3, max_batch=6) == 4
+    assert batch_bucket(5, max_batch=6) == 6
+    assert batch_bucket(6, max_batch=6) == 6
+    # monotone in n and never above the cap
+    for cap in (1, 3, 6, 8):
+        buckets = [batch_bucket(n, max_batch=cap) for n in range(1, cap + 1)]
+        assert buckets == sorted(buckets)
+        assert all(b <= cap for b in buckets)
 
 
 # ---------------------------------------------------------------------------
@@ -136,6 +158,127 @@ def test_jit_cache_hits_on_repeated_buckets():
     assert eng.compile_count == 2
     eng.render_batch([RenderRequest("truck", orbit(1))])
     assert eng.compile_count == 2
+
+
+# ---------------------------------------------------------------------------
+# probe-driven k_max (register_scene(probe_cameras=...))
+# ---------------------------------------------------------------------------
+
+def test_probe_registration_measures_pow2_k_max():
+    eng = RenderEngine(CFG, max_batch=8)
+    scene = random_scene(jax.random.PRNGKey(5), 300, **DEMO_SCENE_KW)
+    probes = [orbit(i) for i in range(4)]
+    entry = eng.register_scene("probed", scene, probe_cameras=probes)
+    # measured bound: pow2-bucketed and no larger than the scene bucket
+    assert entry.k_max == next_pow2(entry.k_max)
+    assert entry.k_max <= entry.n_bucket == 512
+    assert entry.k_max < entry.n_bucket   # actually tighter than the default
+    # sufficient for the probe set: no overflow on any probed pose
+    for r in eng.render_batch([RenderRequest("probed", c) for c in probes]):
+        assert not r.overflow
+    assert eng.telemetry.total_overflow_frames == 0
+
+
+def test_probe_registration_bit_matches_default_k_max():
+    """A tighter (but sufficient) measured k_max must not change any pixel
+    or counter vs the no-overflow default (k_max = scene bucket)."""
+    scene = random_scene(jax.random.PRNGKey(6), 300, **DEMO_SCENE_KW)
+    a = RenderEngine(CFG, max_batch=8)
+    b = RenderEngine(CFG, max_batch=8)
+    a.register_scene("s", scene, probe_cameras=[orbit(i) for i in range(3)])
+    b.register_scene("s", scene)
+    reqs = [RenderRequest("s", orbit(i)) for i in range(3)]
+    # cat_mask_bytes and the unfused swept_per_pixel are k_max-sized by
+    # design (they are the memory/sweep the tighter bound saves) — every
+    # workload counter must be untouched.
+    k_sized = {"cat_mask_bytes", "swept_per_pixel"}
+    for x, y in zip(a.render_batch(reqs), b.render_batch(reqs)):
+        np.testing.assert_array_equal(np.asarray(x.image),
+                                      np.asarray(y.image))
+        for k in set(x.counters) - k_sized:
+            np.testing.assert_array_equal(np.asarray(x.counters[k]),
+                                          np.asarray(y.counters[k]),
+                                          err_msg=k)
+        assert float(x.counters["swept_per_pixel"]) <= \
+            float(y.counters["swept_per_pixel"])
+
+
+def test_probe_reruns_keep_jit_cache_small():
+    """Different probe subsets land on the same pow2 bucket, so re-probed
+    registrations share compiled executables instead of fragmenting the
+    cache."""
+    eng = RenderEngine(CFG, max_batch=8)
+    scene = random_scene(jax.random.PRNGKey(7), 300, **DEMO_SCENE_KW)
+    e1 = eng.register_scene("a", scene,
+                            probe_cameras=[orbit(i) for i in range(4)])
+    e2 = eng.register_scene("b", scene,
+                            probe_cameras=[orbit(i) for i in range(2)])
+    e3 = eng.register_scene("a", scene,   # re-register with other probes
+                            probe_cameras=[orbit(i + 1) for i in range(3)])
+    assert e1.k_max == e2.k_max == e3.k_max   # pow2 bucketing converges
+    eng.render_batch([RenderRequest("a", orbit(0)),
+                      RenderRequest("a", orbit(1))])
+    eng.render_batch([RenderRequest("b", orbit(2)),
+                      RenderRequest("b", orbit(3))])
+    assert eng.compile_count == 1             # same plan -> one executable
+
+
+# ---------------------------------------------------------------------------
+# overflow policy through serving
+# ---------------------------------------------------------------------------
+
+def _overflowing_engine(**kw):
+    eng = RenderEngine(CFG, max_batch=8, **kw)
+    scene = random_scene(jax.random.PRNGKey(8), 300, **DEMO_SCENE_KW)
+    eng.register_scene("s", scene, k_max=4)   # guaranteed to overflow
+    return eng
+
+
+def test_serving_overflow_warns_by_default_and_counts():
+    eng = _overflowing_engine()
+    assert eng.plan.stream.overflow is OverflowPolicy.WARN
+    reqs = [RenderRequest("s", orbit(i)) for i in range(2)]
+    with pytest.warns(StreamOverflowWarning, match="k_max=4"):
+        results = eng.render_batch(reqs)
+    assert all(r.overflow for r in results)
+    snap = eng.telemetry.snapshot()
+    assert snap["overflow_frames"] == 2
+    assert eng.telemetry.total_overflow_frames == 2
+    assert "OVERFLOW" in eng.telemetry.format_snapshot()
+
+
+def test_serving_overflow_raise_policy():
+    eng = _overflowing_engine(overflow=OverflowPolicy.RAISE)
+    with pytest.raises(StreamOverflowError):
+        eng.render_batch([RenderRequest("s", orbit(0))])
+    # telemetry recorded the frame before the policy fired
+    assert eng.telemetry.total_overflow_frames == 1
+
+
+def test_engine_respects_explicit_plan_policy():
+    """A WARN/RAISE policy set on the base plan survives engine
+    construction; only the core default CLAMP is upgraded to WARN."""
+    from repro.core import Renderer, StreamConfig
+    strict = Renderer(stream=StreamConfig(overflow=OverflowPolicy.RAISE))
+    assert RenderEngine(strict).plan.stream.overflow is OverflowPolicy.RAISE
+    assert RenderEngine(CFG).plan.stream.overflow is OverflowPolicy.WARN
+    assert RenderEngine(CFG, overflow="clamp").plan.stream.overflow \
+        is OverflowPolicy.CLAMP
+
+
+def test_serving_overflow_clamp_policy_is_silent():
+    eng = _overflowing_engine(overflow="clamp")
+    with warnings.catch_warnings():
+        warnings.simplefilter("error", StreamOverflowWarning)
+        results = eng.render_batch([RenderRequest("s", orbit(0))])
+    assert results[0].overflow
+    assert eng.telemetry.total_overflow_frames == 1   # still counted
+
+
+def test_no_overflow_keeps_results_clean(engine):
+    r, = engine.render_batch([RenderRequest("train", orbit(0))])
+    assert r.overflow is False
+    assert engine.telemetry.total_overflow_frames == 0
 
 
 # ---------------------------------------------------------------------------

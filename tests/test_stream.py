@@ -18,8 +18,8 @@ from repro.core.gaussians import random_scene, project
 from repro.core.camera import default_camera
 from repro.core.culling import TileGrid
 from repro.core.cat import SamplingMode, minitile_cat_mask, entry_cat_mask
-from repro.core.hierarchy import (hierarchical_test, stream_hierarchical_test,
-                                  entry_subtile_mask)
+from repro.core.hierarchy import (hierarchical_test,
+                                  stream_hierarchical_test)
 from repro.core.pipeline import (render_with_stats, RenderConfig,
                                  cat_mask_elems)
 from repro.core.precision import FULL_FP32, MIXED

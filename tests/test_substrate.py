@@ -9,8 +9,7 @@ hypothesis = pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.optim import adamw, adafactor
-from repro.optim.compression import (CompressionConfig, compress_decompress,
-                                     init_residuals, apply_tree)
+from repro.optim.compression import CompressionConfig, compress_decompress
 from repro.checkpoint import ckpt
 from repro.distributed.fault import FaultManager, FaultConfig, \
     StragglerMonitor

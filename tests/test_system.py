@@ -1,17 +1,12 @@
 """End-to-end behaviour tests: the paper's full pipeline (train a scene,
 prune, render with FLICKER) and training/serving drivers."""
-import dataclasses
-
 import jax
 import jax.numpy as jnp
-import numpy as np
-import pytest
 
 from repro.core.gaussians import random_scene, project
 from repro.core.camera import default_camera
 from repro.core.culling import TileGrid
-from repro.core.pipeline import (render_with_stats, RenderConfig, psnr,
-                                 ssim)
+from repro.core.pipeline import render_with_stats, RenderConfig, psnr
 from repro.core.training import fit, TrainConfig
 from repro.core.pruning import contribution_scores, prune
 from repro.core.clustering import (kmeans_clusters, cluster_frustum_cull,
