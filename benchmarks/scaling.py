@@ -1,5 +1,5 @@
 """Dense-vs-stream dataflow scaling: CAT-stage memory + wall time over
-(N, resolution).
+(N, resolution), up to the Full-HD serving rung.
 
 Sweeps N ∈ {4k, 32k, 128k} × resolution ∈ {128², 512², 1024²} and renders
 each point with both dataflows, recording
@@ -17,11 +17,24 @@ and writes BENCH_scaling.json. The stream path has no such cliff: its mask
 memory is resolution-bound (tiles × k_max), so the 1024²/128k point that
 the dense path cannot touch renders normally.
 
+--hd1080 adds the 1080p serving rung: a 1920×1088 / 512k-Gaussian frame
+served through `serving.RenderEngine` under `OverflowPolicy.SPILL`
+(`serving.workloads.hd1080_engine`: per-pass k_max chunk, probe-measured
+pass bucket, frame-size-aware max_batch). The recorded `mask_bytes` is the
+*per-pass* CTU working set — bounded by the spill chunk no matter how long
+the survivor lists run — while the dense path at this scale is INFEASIBLE
+by ~two orders of magnitude. --hd1080-dry runs the same wiring with a tiny
+Gaussian count (real 1920×1088 tiling) as a CI smoke; --spill-smoke
+renders a forced-overflow scene under SPILL and asserts bit-parity with
+the dense oracle, so the multi-pass loop is exercised on every PR.
+
 Run:
-    PYTHONPATH=src python benchmarks/scaling.py [--quick] [--out f.json]
+    PYTHONPATH=src python benchmarks/scaling.py [--quick] [--spill-smoke]
+        [--hd1080 | --hd1080-dry] [--out f.json]
 
 --quick restricts to N ≤ 32k and resolution ≤ 512² (CI-sized); the full
-sweep takes a few minutes on CPU, dominated by the 1024² stream blends.
+sweep takes a few minutes on CPU, dominated by the 1024² stream blends;
+--hd1080 adds tens of minutes (one Full-HD compile + render).
 """
 from __future__ import annotations
 
@@ -30,10 +43,11 @@ import json
 import time
 
 import jax
+import numpy as np
 
 from repro.core import (random_scene, default_camera, GridConfig, TestConfig,
-                        StreamConfig, RenderPlan, cat_mask_elems,
-                        measure_k_max)
+                        StreamConfig, RenderPlan, OverflowPolicy,
+                        cat_mask_elems, measure_k_max)
 from repro.core.precision import MIXED
 
 NS = (4096, 32768, 131072)
@@ -86,6 +100,100 @@ def run_point(scene, n: int, res: int, k_max: int, dataflow: str,
     )
 
 
+def run_spill_smoke() -> dict:
+    """Forced-overflow SPILL render vs the dense oracle (bit-parity assert).
+
+    The CI-sized guarantee behind the policy: a scene whose per-tile
+    survivor lists overflow k_max=8 by an order of magnitude renders
+    bit-identically to the dense single-pass oracle through the multi-pass
+    spill loop.
+    """
+    n, res, k_max, passes = 400, 64, 8, 64
+    scene = random_scene(jax.random.PRNGKey(5), n,
+                         scale_range=(-2.9, -2.2), stretch=4.0,
+                         opacity_range=(-1.5, 3.0))
+    cam = default_camera(res, res)
+    spill = RenderPlan(
+        grid=GridConfig(height=res, width=res),
+        test=TestConfig(method="cat", precision=MIXED),
+        stream=StreamConfig(k_max=k_max, overflow=OverflowPolicy.SPILL,
+                            max_spill_passes=passes))
+    dense = RenderPlan(
+        grid=GridConfig(height=res, width=res),
+        test=TestConfig(method="cat", precision=MIXED),
+        stream=StreamConfig(k_max=k_max * passes), dataflow="dense")
+    out_s, c_s = jax.jit(lambda s: spill.render_with_stats(s, cam))(scene)
+    out_d, c_d = jax.jit(lambda s: dense.render_with_stats(s, cam))(scene)
+    bit_identical = bool(
+        (np.asarray(out_s.image) == np.asarray(out_d.image)).all())
+    spill_passes = float(c_s["spill_passes"])
+    assert not bool(out_s.overflow), "spill capacity must cover the scene"
+    assert spill_passes >= 2, "smoke must actually spill"
+    assert bit_identical, "SPILL must bit-match the dense oracle"
+    assert float(c_s["vru_pairs"]) == float(c_d["vru_pairs"])
+    print(f"spill smoke: k_max={k_max} x {passes} passes | used "
+          f"{spill_passes:.0f} passes | bit-identical to dense oracle: "
+          f"{bit_identical}")
+    return dict(n=n, res=res, k_max=k_max, max_spill_passes=passes,
+                spill_passes=spill_passes, bit_identical=bit_identical)
+
+
+def run_hd1080(n_gaussians: int, k_max_pass: int, repeats: int) -> dict:
+    """The 1080p serving rung: 1920×1088 through `serving.RenderEngine`
+    under SPILL. Returns the JSON record (also asserts no overflow and no
+    dense-path fallback — the acceptance criteria of the workload)."""
+    from repro.serving import RenderRequest
+    from repro.serving.workloads import (HD1080_HEIGHT, HD1080_WIDTH,
+                                         hd1080_cameras, hd1080_engine)
+
+    engine, name = hd1080_engine(n_gaussians, k_max_pass=k_max_pass)
+    entry = engine._scenes[name]
+    plan = engine.plan_for(name, HD1080_HEIGHT, HD1080_WIDTH)
+    grid = plan.grid.make()
+    stream_bytes = cat_mask_elems(grid, entry.n_bucket, plan.stream.k_max,
+                                  "stream")
+    dense_bytes = cat_mask_elems(grid, entry.n_bucket, plan.stream.k_max,
+                                 "dense")
+
+    cams = hd1080_cameras(repeats + 1)
+    # First frame pays the compile; the following ones are the measurement.
+    engine.render_batch([RenderRequest(name, cams[0])])
+    walls, spill_passes = [], 0.0
+    for cam in cams[1:]:
+        frame, = engine.render_batch([RenderRequest(name, cam)])
+        assert not frame.overflow, "SPILL serving must never clamp"
+        walls.append(frame.render_s)
+        spill_passes = max(spill_passes,
+                           float(frame.counters["spill_passes"]))
+    snap = engine.telemetry.snapshot()
+    rec = dict(
+        n=n_gaussians, res=f"{HD1080_WIDTH}x{HD1080_HEIGHT}",
+        tiles=grid.num_tiles,
+        k_max_pass=plan.stream.k_max,
+        pass_bucket=plan.stream.max_spill_passes,
+        scene_k_max=entry.k_max,
+        spill_passes=spill_passes,
+        spill_retries=engine.spill_retries,
+        max_batch=engine.max_batch,
+        wall_s=float(np.mean(walls)),
+        mask_bytes_per_pass=float(stream_bytes),
+        dense=dict(feasible=False, mask_bytes=float(dense_bytes),
+                   reason=f"dense CAT masks alone = "
+                          f"{dense_bytes / (1 << 30):.1f} GiB"),
+        mask_ratio_dense_over_stream=dense_bytes / max(stream_bytes, 1.0),
+        modeled_fps=snap["modeled_fps"],
+        overflow_frames=snap["total_overflow_frames"],
+    )
+    print(f"hd1080 N={n_gaussians} {rec['res']} | k_max {rec['scene_k_max']}"
+          f" -> {rec['k_max_pass']} x {rec['pass_bucket']} passes "
+          f"(used {spill_passes:.0f}) | per-pass masks "
+          f"{stream_bytes / (1 << 20):.1f} MiB vs dense "
+          f"{dense_bytes / (1 << 30):.1f} GiB (INFEASIBLE, "
+          f"{rec['mask_ratio_dense_over_stream']:.0f}x) | wall "
+          f"{rec['wall_s']:.1f}s | modeled {rec['modeled_fps']:.0f} fps")
+    return rec
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true",
@@ -94,6 +202,18 @@ def main():
     ap.add_argument("--dense-budget-gb", type=float, default=4.0,
                     help="skip (mark infeasible) dense points whose CAT "
                          "mask footprint alone exceeds this")
+    ap.add_argument("--spill-smoke", action="store_true",
+                    help="forced-overflow SPILL render, bit-checked "
+                         "against the dense oracle")
+    ap.add_argument("--hd1080", action="store_true",
+                    help="add the 1920x1088 / 512k-Gaussian serving rung "
+                         "(tens of minutes on CPU)")
+    ap.add_argument("--hd1080-dry", action="store_true",
+                    help="hd1080 wiring with a tiny Gaussian count (real "
+                         "1920x1088 tiling) — CI-sized")
+    ap.add_argument("--hd1080-gaussians", type=int, default=1 << 19)
+    ap.add_argument("--hd1080-k-max-pass", type=int, default=512,
+                    help="SPILL per-pass list chunk for the hd1080 rung")
     ap.add_argument("--out", type=str, default="BENCH_scaling.json")
     args = ap.parse_args()
 
@@ -136,9 +256,22 @@ def main():
                     dense_budget_gb=args.dense_budget_gb,
                     note="wall_s is CPU/jnp end-to-end (jit, compile "
                          "excluded); mask_bytes is the CAT-stage mask "
-                         "footprint the pipeline records (cat_mask_bytes)"),
+                         "footprint the pipeline records (cat_mask_bytes); "
+                         "the hd1080 rung serves through "
+                         "serving.RenderEngine under OverflowPolicy.SPILL "
+                         "and reports the bounded per-pass footprint"),
         points=points,
     )
+    if args.spill_smoke:
+        result["spill_smoke"] = run_spill_smoke()
+    if args.hd1080 or args.hd1080_dry:
+        n_hd = 4096 if args.hd1080_dry else args.hd1080_gaussians
+        # dry run: chunk well below the measured survivor bound so the CI
+        # smoke actually runs the multi-pass loop at 1080p tiling
+        k_pass = (16 if args.hd1080_dry else args.hd1080_k_max_pass)
+        rec = run_hd1080(n_hd, k_pass, args.repeats)
+        rec["dry_run"] = args.hd1080_dry
+        result["hd1080"] = rec
     with open(args.out, "w") as f:
         json.dump(result, f, indent=2)
     print(f"wrote {args.out}")

@@ -1,0 +1,98 @@
+"""Train-step wall time: stream vs dense dataflow (ROADMAP "training on
+the stream path").
+
+`training.train_step` differentiates through the full staged renderer; this
+micro-benchmark times one jitted Adam step on a small synthetic fit under
+both dataflows and cross-checks the gradients (the stream path's
+entry-indexed gathers and the scan-fold blend are plain differentiable jnp,
+so grad(stream) must match grad(dense) up to float reassociation). It is
+the training-side companion of `benchmarks/scaling.py`: the stream path
+pays a per-step overhead at toy sizes but is the only dataflow whose mask
+memory survives production scene sizes — and with `OverflowPolicy.SPILL`
+the same holds for the k_max cap.
+
+Run:
+    PYTHONPATH=src python benchmarks/train_dataflow.py [--steps 20]
+        [--out BENCH_train_dataflow.json]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import (random_scene, default_camera, GridConfig, RenderPlan,
+                        StreamConfig, TestConfig, FULL_FP32)
+from repro.core.training import TrainConfig, init_state, loss_fn, train_step
+
+SIZE = 64
+N = 500
+
+
+def plan_for(dataflow: str) -> RenderPlan:
+    return RenderPlan(grid=GridConfig(height=SIZE, width=SIZE),
+                      test=TestConfig(method="cat", precision=FULL_FP32),
+                      stream=StreamConfig(k_max=N), dataflow=dataflow)
+
+
+def time_train_steps(plan: RenderPlan, scene, cam, target, steps: int):
+    tc = TrainConfig()
+    step = jax.jit(lambda st: train_step(st, cam, target, plan, tc))
+    state = init_state(scene)
+    state, loss = jax.block_until_ready(step(state))   # compile + warm
+    t0 = time.perf_counter()
+    for _ in range(steps):
+        state, loss = step(state)
+    jax.block_until_ready(loss)
+    wall = (time.perf_counter() - t0) / steps
+    return wall, float(loss)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=20)
+    ap.add_argument("--out", type=str, default=None)
+    args = ap.parse_args()
+
+    scene = random_scene(jax.random.PRNGKey(0), N, scale_range=(-2.8, -2.0),
+                         stretch=3.5, opacity_range=(-1.0, 1.0),
+                         spiky_frac=0.4)
+    cam = default_camera(SIZE, SIZE)
+    y, x = jnp.mgrid[0:SIZE, 0:SIZE] / SIZE
+    target = jnp.stack([0.5 + 0.4 * jnp.sin(3 * x + 2 * y),
+                        0.5 + 0.4 * jnp.cos(2 * y),
+                        0.5 + 0.4 * jnp.sin(4 * x * y)], -1)
+
+    # Gradient parity first: the two dataflows must train identically.
+    g_s = jax.grad(loss_fn)(scene, cam, target, plan_for("stream"), 0.2)
+    g_d = jax.grad(loss_fn)(scene, cam, target, plan_for("dense"), 0.2)
+    max_rel = max(
+        float(jnp.max(jnp.abs(a - b) / (jnp.abs(b) + 1e-8)))
+        for a, b in zip(jax.tree.leaves(g_s), jax.tree.leaves(g_d)))
+    assert all(bool(jnp.isfinite(leaf).all())
+               for leaf in jax.tree.leaves(g_s))
+    assert max_rel < 1e-3, f"stream/dense grad mismatch: {max_rel}"
+
+    result = dict(size=SIZE, n=N, steps=args.steps, grad_max_rel=max_rel)
+    for dataflow in ("stream", "dense"):
+        wall, loss = time_train_steps(plan_for(dataflow), scene, cam,
+                                      target, args.steps)
+        result[dataflow] = dict(step_wall_s=wall, final_loss=loss)
+        print(f"{dataflow:>6s}: {wall * 1e3:8.1f} ms/step "
+              f"(loss {loss:.4f})")
+    result["wall_ratio_stream_over_dense"] = (
+        result["stream"]["step_wall_s"] / result["dense"]["step_wall_s"])
+    print(f"grad parity max rel err {max_rel:.2e} | stream/dense step "
+          f"ratio {result['wall_ratio_stream_over_dense']:.2f}x")
+    if args.out:
+        with open(args.out, "w") as f:
+            json.dump(result, f, indent=2)
+        print(f"wrote {args.out}")
+    return result
+
+
+if __name__ == "__main__":
+    main()

@@ -192,6 +192,12 @@ def entry_cat_mask(proj: Projected, grid: TileGrid,
     so `entry_cat_mask(...)[t, k, m] == minitile_cat_mask(...)[mid, g]` for
     every valid entry (g = lists[t, k], mid = the global id of tile t's
     m-th mini-tile) — the property the stream/dense parity tests assert.
+
+    Entries are tested independently, so the function is spill-pass
+    agnostic: under `OverflowPolicy.SPILL` the CTU calls it once per
+    compacted pass and only that pass's O(T·k_max·Mt) weights/masks (plus
+    the `ENTRY_CHUNK_ELEMS`-bounded chunk intermediates) are live at a
+    time — the bounded CTU working set the spill policy guarantees.
     """
     t_origins = grid.tile_origins().astype(jnp.float32)        # (T, 2)
     local = grid.minitile_local_origins().astype(jnp.float32)  # (Mt, 2)

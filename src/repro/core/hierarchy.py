@@ -21,6 +21,12 @@ Both return the workload counters the performance model consumes (CTU
 tests, VRU work, duplicate Gaussian instances per level) — the quantities
 behind Fig. 4, Fig. 8 and Fig. 9 — and the stream counters are asserted
 equal to the dense ones whenever no tile list overflows.
+
+Under `OverflowPolicy.SPILL` the stream CTU runs once per compacted pass
+(`stream_entry_test` is pass-agnostic: it tests whatever (T, K) list it is
+handed). Per-pass counters in `ADDITIVE_COUNTER_KEYS` are sums over list
+entries, so summing them across passes reproduces the dense totals exactly;
+the remaining keys are scene-level and identical in every pass.
 """
 from __future__ import annotations
 
@@ -120,6 +126,18 @@ def hierarchical_test(proj: Projected, grid: TileGrid,
 # ---------------------------------------------------------------------------
 
 
+# Counter keys that are sums over stream list entries: additive across
+# spill passes (pass entries are disjoint), and equal to the dense-mask
+# totals once every survivor is listed. Everything else the hierarchy
+# reports (n_gaussians, n_frustum, leader_tests_per_pair) is scene-level —
+# identical per pass, merged by taking any one pass's value.
+ADDITIVE_COUNTER_KEYS = frozenset({
+    "ctu_pairs", "ctu_pairs_no_stage1", "ctu_prs",
+    "dup_tile", "dup_subtile", "dup_minitile",
+    "vru_pairs", "vru_pairs_tile_aabb",
+})
+
+
 class StreamHierarchyOut(NamedTuple):
     lists: jax.Array            # (T, K) int32 depth-ordered Gaussian ids
     valid: jax.Array            # (T, K) bool — slot occupied
@@ -178,14 +196,14 @@ def stream_hierarchical_test(
     """
     from repro.core import raster  # late import: raster is mask-agnostic
 
-    tile_mask = aabb_mask(proj, grid.tile_origins(), grid.tile)   # (T, N)
     if order is None:
         order = raster.depth_order(proj)
-    lists, valid, overflow = raster.compact_tile_lists(tile_mask, order,
-                                                       k_max)
-    del tile_mask  # transient: O(T·N) peak, never kept past compaction
-    return stream_entry_test(proj, grid, lists, valid, overflow, mode, prec,
-                             spiky_threshold, cat_fn=cat_fn)
+    # Stage-1 AABB fused into the chunked compaction: the transient (T, N)
+    # mask only ever materializes one tile block at a time.
+    lists, valid, overflow = raster.compact_aabb_tile_lists(proj, grid,
+                                                            order, k_max)
+    return stream_entry_test(proj, grid, lists[0], valid[0], overflow, mode,
+                             prec, spiky_threshold, cat_fn=cat_fn)
 
 
 def stream_entry_test(

@@ -89,8 +89,9 @@ class RenderConfig:
 
     @classmethod
     def from_plan(cls, plan: RenderPlan) -> "RenderConfig":
-        """Inverse of `to_plan` (lossy only in the overflow policy, which the
-        flat config never had — legacy behavior is CLAMP)."""
+        """Inverse of `to_plan` (lossy only in the overflow policy and its
+        spill pass count, which the flat config never had — legacy behavior
+        is CLAMP; configure SPILL through `StreamConfig` on the new API)."""
         return cls(
             height=plan.grid.height, width=plan.grid.width,
             tile=plan.grid.tile, subtile=plan.grid.subtile,

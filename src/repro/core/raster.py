@@ -6,18 +6,27 @@ per-FIFO duplication in Fig. 6), so the SIMD blending kernel wastes no
 lanes on Gaussians that no mini-tile in the tile needs. Blending consumes
 the stream dataflow's per-entry (T, K, minitiles_per_tile) CAT masks
 (`StreamHierarchyOut.entry_mini_mask`); dense (num_minitiles, N) masks
-convert via `entry_mask_from_dense`. Per-tile work (compaction scans and
-blend tensors) is lax.mapped over tile chunks past a static size threshold,
-so peak memory stays bounded at production scene sizes.
+convert via `entry_mask_from_dense`. Per-tile compaction scans are
+lax.mapped over tile chunks past a static size threshold (and
+`compact_aabb_tile_lists` fuses the Stage-1 AABB test into that loop so
+the transient (T, N) mask never materializes at once), so peak memory
+stays bounded at production scene sizes.
 
 All blending math matches vanilla 3DGS [2]:
     alpha = min(0.99, o * exp(-E)),  skip if alpha < 1/255
     T_i = prod_{j<i} (1 - alpha_j),  c = sum_i T_i c_i alpha_i
-In this (pure-jnp, differentiable) path, early termination (T < T_EPS) is
-modeled by the processed-Gaussian counters — the quantities the
+The pure-jnp differentiable path evaluates that recurrence as a strict
+front-to-back left fold (`lax.scan` over list entries carrying a
+`BlendState`), which makes the blend *chunk-invariant*: splitting a tile's
+list at any point and resuming from the carried state reproduces the
+single-sweep result bit for bit. That invariance is what
+`OverflowPolicy.SPILL` rides on — overflow entries render in extra
+compacted passes (`blend_pass` per pass, `finalize_blend` once) and still
+match the dense single-pass oracle exactly. Early termination (T < T_EPS)
+is modeled by the processed-Gaussian counters — the quantities the
 accelerator's speedup derives from — while the image is computed with the
-full cumulative product, which differs by < 1e-4 in transmittance-weighted
-contribution and is invisible at 8-bit PSNR. The serving hot path
+full fold, which differs by < 1e-4 in transmittance-weighted contribution
+and is invisible at 8-bit PSNR. The serving hot path
 (`RasterConfig(fused=True)` -> `kernels.render.blend_tiles_fused`) performs
 the termination for real inside the Pallas kernel and measures the same
 counters there; `kernels/ops.render_tiles_fused` reassembles its outputs
@@ -26,14 +35,13 @@ into the same `RenderOut` via `untile` below, so both blend backends of
 """
 from __future__ import annotations
 
-from typing import NamedTuple, Optional
+from typing import NamedTuple, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
 
 from repro.core.gaussians import Projected, ALPHA_MIN
-from repro.core.culling import (TileGrid, tile_divisor_chunk,
-                                map_tile_chunks)
+from repro.core.culling import TileGrid, aabb_mask, tile_divisor_chunk
 
 ALPHA_MAX = 0.99
 T_EPS = 1e-4
@@ -45,8 +53,10 @@ class RenderOut(NamedTuple):
     processed_per_pixel: jax.Array  # (H, W) Gaussians the VRU lane touched
     blended_per_pixel: jax.Array    # (H, W) Gaussians actually blended
     overflow: jax.Array         # () bool: any tile exceeded its K_max list
+    #                             (under SPILL: exceeded passes * K_max)
     entry_alive: jax.Array      # (T, K) list entry processed before the tile
-    #                             fully terminated (drives CTU accounting)
+    #                             fully terminated (drives CTU accounting;
+    #                             K spans all spill passes, concatenated)
 
 
 def depth_order(proj: Projected) -> jax.Array:
@@ -63,22 +73,30 @@ COMPACT_CHUNK_ELEMS = 1 << 27   # bound on T*N int32 scan elements held live;
 #                                 larger problems lax.map over tile chunks.
 
 
-def _compact_block(mask: jax.Array, order: jax.Array, k_max: int):
-    """Compaction of one block of tiles (the (B, N) working set)."""
+def _compact_block(mask: jax.Array, order: jax.Array, k_max: int,
+                   passes: int = 1):
+    """Compaction of one block of tiles (the (B, N) working set).
+
+    Survivor j of a tile lands in pass j // k_max, slot j % k_max — pass 0
+    is the classic clamped list, passes 1.. hold the overflow entries the
+    SPILL policy renders in extra sweeps. Returns lists (B, passes*k_max)
+    with the passes concatenated along the slot axis.
+    """
+    cap = passes * k_max
     mask_sorted = mask[:, order]                         # (B, N)
     pos = jnp.cumsum(mask_sorted, axis=1) - 1            # (B, N)
-    take = mask_sorted & (pos < k_max)
-    tgt = jnp.where(take, pos, k_max)                    # overflow slot K
+    take = mask_sorted & (pos < cap)
+    tgt = jnp.where(take, pos, cap)                      # overflow slot cap
 
     def one_tile(tgt_row, take_row):
-        lst = jnp.full((k_max + 1,), -1, jnp.int32)
+        lst = jnp.full((cap + 1,), -1, jnp.int32)
         lst = lst.at[tgt_row].set(jnp.where(take_row, order, -1).astype(jnp.int32),
                                   mode="drop")
-        return lst[:k_max]
+        return lst[:cap]
 
     lists = jax.vmap(one_tile)(tgt, take)
     valid = lists >= 0
-    overflow = jnp.any(jnp.sum(mask, axis=1) > k_max)
+    overflow = jnp.any(jnp.sum(mask, axis=1) > cap)
     return lists, valid, overflow
 
 
@@ -93,15 +111,68 @@ def compact_tile_lists(mask: jax.Array, order: jax.Array, k_max: int):
     last O(tiles × N) working set of the stream pipeline, and chunking keeps
     its *live* footprint bounded at production scene sizes.
     """
-    t, n = mask.shape
+    lists, valid, overflow = compact_tile_lists_passes(mask, order, k_max, 1)
+    return lists[0], valid[0], overflow
+
+
+def _compact_passes(mask_of_block, block_operand, t: int, n: int,
+                    order: jax.Array, k_max: int, passes: int):
+    """Shared chunk dispatch + pass-splitting layout for the compactions.
+
+    mask_of_block(block_operand[chunk slice]) -> (chunk, N) bool Stage-1
+    mask; `block_operand` has leading dim T. One place owns the
+    tile-chunked lax.map and the (T, passes*K) -> (passes, T, K) layout
+    split the SPILL bit-parity rests on.
+    """
+    cap = passes * k_max
     chunk = tile_divisor_chunk(t, n, COMPACT_CHUNK_ELEMS)
     if chunk >= t:
-        return _compact_block(mask, order, k_max)
-    nb = t // chunk
-    lists, valid, ovf = jax.lax.map(
-        lambda mb: _compact_block(mb, order, k_max),
-        mask.reshape(nb, chunk, n))
-    return (lists.reshape(t, k_max), valid.reshape(t, k_max), jnp.any(ovf))
+        lists, valid, overflow = _compact_block(mask_of_block(block_operand),
+                                                order, k_max, passes)
+    else:
+        nb = t // chunk
+        lists, valid, ovf = jax.lax.map(
+            lambda ob: _compact_block(mask_of_block(ob), order, k_max,
+                                      passes),
+            block_operand.reshape((nb, chunk) + block_operand.shape[1:]))
+        lists, valid = lists.reshape(t, cap), valid.reshape(t, cap)
+        overflow = jnp.any(ovf)
+    lists = jnp.moveaxis(lists.reshape(t, passes, k_max), 1, 0)
+    valid = jnp.moveaxis(valid.reshape(t, passes, k_max), 1, 0)
+    return lists, valid, overflow
+
+
+def compact_tile_lists_passes(mask: jax.Array, order: jax.Array, k_max: int,
+                              passes: int):
+    """Multi-pass compaction: survivors past a pass's k_max spill into the
+    next pass's list instead of being dropped.
+
+    Returns (lists (passes, T, K) int32, valid (passes, T, K) bool,
+    overflow () bool — the tile count exceeded passes*k_max). Concatenating
+    the passes along K reproduces exactly the single list a `k_max * passes`
+    compaction would build (same ids, same order, valid-prefix layout) —
+    the invariant the SPILL blend parity rests on.
+    """
+    t, n = mask.shape
+    return _compact_passes(lambda mb: mb, mask, t, n, order, k_max, passes)
+
+
+def compact_aabb_tile_lists(proj: Projected, grid: TileGrid,
+                            order: jax.Array, k_max: int, passes: int = 1):
+    """Stage-1 tile AABB test fused into the (chunked) compaction loop.
+
+    Equivalent to `compact_tile_lists_passes(aabb_mask(proj,
+    grid.tile_origins(), grid.tile), order, k_max, passes)` but the (T, N)
+    Stage-1 mask is computed one tile block at a time inside the lax.map,
+    so its live footprint is O(chunk × N) instead of O(T × N) — the wall
+    that a 1920×1088 / 512k-Gaussian frame (8160 tiles) would otherwise hit
+    before compaction even starts. Returns the same (lists (passes, T, K),
+    valid, overflow) triple.
+    """
+    return _compact_passes(
+        lambda origins: aabb_mask(proj, origins, grid.tile),
+        grid.tile_origins(), grid.num_tiles, proj.depth.shape[0],
+        order, k_max, passes)
 
 
 def untile(grid: TileGrid, x: jax.Array) -> jax.Array:
@@ -142,88 +213,144 @@ def entry_mask_from_dense(grid: TileGrid, minitile_mask: jax.Array,
     return minitile_mask[mids[:, None, :], idx[:, :, None]]  # (T, K, Mt)
 
 
-BLEND_CHUNK_ELEMS = 1 << 26   # bound on T*P*K blend-tensor elements live at
-#                               once; larger problems lax.map tile chunks.
+class BlendState(NamedTuple):
+    """Per-pixel blend accumulators carried across spill passes.
+
+    All fields are tile-major (T, P[, ...]) with P = tile**2 pixels in the
+    row-major layout `_pixel_offsets` produces; `finalize_blend` untiles
+    them into image space. Because `blend_pass` folds entries strictly
+    front-to-back, feeding a pass's output state into the next pass is
+    bit-identical to blending the concatenated lists in one pass.
+    """
+    trans: jax.Array        # (T, P) carried transmittance (starts at 1)
+    rgb: jax.Array          # (T, P, 3) accumulated color
+    acc: jax.Array          # (T, P) accumulated alpha (sum of weights)
+    processed: jax.Array    # (T, P) i32 entries touched while lane alive
+    blended: jax.Array      # (T, P) i32 entries actually blended
 
 
-def render_tiles(proj: Projected, grid: TileGrid,
-                 lists: jax.Array, valid: jax.Array,
-                 entry_mask: Optional[jax.Array] = None,
-                 background: float = 0.0,
-                 overflow: jax.Array | bool = False) -> RenderOut:
-    """Blend per-tile compacted lists into the image.
+def init_blend_state(num_tiles: int, pixels_per_tile: int) -> BlendState:
+    return BlendState(
+        trans=jnp.ones((num_tiles, pixels_per_tile), jnp.float32),
+        rgb=jnp.zeros((num_tiles, pixels_per_tile, 3), jnp.float32),
+        acc=jnp.zeros((num_tiles, pixels_per_tile), jnp.float32),
+        processed=jnp.zeros((num_tiles, pixels_per_tile), jnp.int32),
+        blended=jnp.zeros((num_tiles, pixels_per_tile), jnp.int32),
+    )
+
+
+def blend_pass(proj: Projected, grid: TileGrid,
+               lists: jax.Array, valid: jax.Array,
+               entry_mask: Optional[jax.Array],
+               state: BlendState):
+    """Fold one compacted pass's entries into the blend state.
 
     entry_mask: optional (T, K, minitiles_per_tile) per-entry CAT mask —
     pixel p of tile t blends entry k only if entry_mask[t, k, m(p)] with
     m(p) the pixel's tile-local mini-tile. None = every listed Gaussian is
     blended by every pixel of the tile (AABB/OBB behavior). Dense
     (num_minitiles, N) masks convert via `entry_mask_from_dense`.
+
+    The fold is a `lax.scan` over the K list entries (front-to-back), one
+    (T, P) step at a time — a strict left fold, so the per-step float-op
+    sequence is independent of where the list is split into passes. That is
+    the property that makes SPILL rendering bit-identical to the dense
+    single-pass oracle. Returns (state', entry_alive (T, K) bool).
     """
     tile_origins = grid.tile_origins().astype(jnp.float32)   # (T, 2)
     poffs = _pixel_offsets(grid.tile)                        # (P, 2)
     mt_in_tile = _minitile_index_in_tile(grid)               # (P,)
+    pix = tile_origins[:, None, :] + poffs[None, :, :]       # (T, P, 2)
 
-    # Gather features OUTSIDE the tile vmap (plain fancy indexing — its VJP
-    # is a scatter-add over the whole feature table).
+    # Gather features up front (plain fancy indexing — its VJP is a
+    # scatter-add over the whole feature table), then scan over the K axis.
+    # No all-ones placeholder when entry_mask is None (AABB/OBB behavior):
+    # the mask operand is simply absent from the scan xs.
     idx = lists.clip(0)
-    g_mean_all = proj.mean2d[idx]                            # (T, K, 2)
-    g_conic_all = proj.conic[idx]
-    g_op_all = proj.opacity[idx]
-    g_col_all = proj.color[idx]
-    def one_tile(origin, lst, val, g_mean, g_conic, g_op, g_col, allow_e):
-        pix = origin[None, :] + poffs                        # (P, 2)
-        d = pix[:, None, :] - g_mean[None, :, :]             # (P, K, 2)
-        E = (0.5 * (g_conic[None, :, 0] * d[..., 0] ** 2
-                    + g_conic[None, :, 2] * d[..., 1] ** 2)
-             + g_conic[None, :, 1] * d[..., 0] * d[..., 1])
-        a = jnp.minimum(g_op[None, :] * jnp.exp(-E), ALPHA_MAX)  # (P, K)
+    xs = (
+        jnp.moveaxis(proj.mean2d[idx], 1, 0),                # (K, T, 2)
+        jnp.moveaxis(proj.conic[idx], 1, 0),                 # (K, T, 3)
+        jnp.moveaxis(proj.opacity[idx], 1, 0),               # (K, T)
+        jnp.moveaxis(proj.color[idx], 1, 0),                 # (K, T, 3)
+        jnp.moveaxis(valid, 1, 0),                           # (K, T)
+    ) + ((jnp.moveaxis(entry_mask, 1, 0),)                   # (K, T, Mt)
+         if entry_mask is not None else ())
 
-        allow = val[None, :]
-        if allow_e is not None:
-            # (K, Mt) entry mask -> (P, K) pixel lanes, expanded per tile so
-            # nothing of shape (T, P, K) outlives its chunk.
-            allow = allow & allow_e[:, mt_in_tile].T
-        a = jnp.where(allow & (a >= ALPHA_MIN), a, 0.0)
+    def step(carry, x):
+        trans, rgb, acc, proc, bl = carry
+        if entry_mask is not None:
+            mean_k, conic_k, op_k, col_k, valid_k, allow_k = x
+        else:
+            mean_k, conic_k, op_k, col_k, valid_k = x
+            allow_k = None
+        d = pix - mean_k[:, None, :]                         # (T, P, 2)
+        E = (0.5 * (conic_k[:, None, 0] * d[..., 0] ** 2
+                    + conic_k[:, None, 2] * d[..., 1] ** 2)
+             + conic_k[:, None, 1] * d[..., 0] * d[..., 1])
+        a = jnp.minimum(op_k[:, None] * jnp.exp(-E), ALPHA_MAX)  # (T, P)
+        lane = jnp.broadcast_to(valid_k[:, None], a.shape)       # (T, P)
+        if allow_k is not None:
+            lane = lane & allow_k[:, mt_in_tile]
+        a = jnp.where(lane & (a >= ALPHA_MIN), a, 0.0)
 
-        # Exclusive cumulative transmittance.
-        T = jnp.cumprod(1.0 - a, axis=1)
-        T_excl = jnp.concatenate([jnp.ones_like(T[:, :1]), T[:, :-1]], axis=1)
-        w = T_excl * a                                        # (P, K)
-        rgb = w @ g_col                                       # (P, 3)
-        acc = jnp.sum(w, axis=1)
-        rgb = rgb + background * (1.0 - acc)[:, None]
-
-        alive = T_excl >= T_EPS
-        processed = jnp.sum(allow & alive, axis=1)
-        blended = jnp.sum((a > 0) & alive, axis=1)
+        alive = trans >= T_EPS                               # (T, P)
+        w = trans * a
+        rgb = rgb + w[..., None] * col_k[:, None, :]
+        acc = acc + w
+        proc = proc + (lane & alive)
+        bl = bl + ((a > 0) & alive)
         # Tile-level termination (paper: "rendering of the current tile can
         # terminate early if the transmittance of all pixels falls below a
         # threshold") — entry k is processed iff any pixel is still alive.
-        entry_alive = jnp.any(alive, axis=0) & val
-        return rgb, acc, processed, blended, entry_alive
+        entry_alive = jnp.any(alive, axis=1) & valid_k       # (T,)
+        trans = trans * (1.0 - a)
+        return (trans, rgb, acc, proc, bl), entry_alive
 
-    t, k = lists.shape
-    p = poffs.shape[0]
-    chunk = tile_divisor_chunk(t, p * k, BLEND_CHUNK_ELEMS)
-    if entry_mask is None:
-        fn = jax.vmap(lambda o, l, v, gm, gc, go, gl:
-                      one_tile(o, l, v, gm, gc, go, gl, None))
-        operands = (tile_origins, lists, valid, g_mean_all, g_conic_all,
-                    g_op_all, g_col_all)
-    else:
-        fn = jax.vmap(one_tile)
-        operands = (tile_origins, lists, valid, g_mean_all, g_conic_all,
-                    g_op_all, g_col_all, entry_mask)
-    rgb, acc, processed, blended, entry_alive = map_tile_chunks(
-        fn, operands, t, chunk)
+    carry, alive_seq = jax.lax.scan(step, tuple(state), xs)
+    return BlendState(*carry), jnp.moveaxis(alive_seq, 0, 1)
 
+
+def finalize_blend(grid: TileGrid, state: BlendState,
+                   background: float,
+                   overflow: jax.Array | bool,
+                   entry_alive: jax.Array) -> RenderOut:
+    """Apply the background against the final transmittance and assemble a
+    `RenderOut` from the accumulated state (once, after the last pass)."""
+    rgb = state.rgb + background * (1.0 - state.acc)[..., None]
     return RenderOut(
-        image=untile(grid, rgb), alpha=untile(grid, acc),
-        processed_per_pixel=untile(grid, processed.astype(jnp.float32)),
-        blended_per_pixel=untile(grid, blended.astype(jnp.float32)),
+        image=untile(grid, rgb), alpha=untile(grid, state.acc),
+        processed_per_pixel=untile(grid, state.processed.astype(jnp.float32)),
+        blended_per_pixel=untile(grid, state.blended.astype(jnp.float32)),
         overflow=jnp.asarray(overflow),
         entry_alive=entry_alive,
     )
+
+
+def render_tiles(proj: Projected, grid: TileGrid,
+                 lists: jax.Array, valid: jax.Array,
+                 entry_mask: Optional[jax.Array] = None,
+                 background: float = 0.0,
+                 overflow: jax.Array | bool = False,
+                 passes: Optional[Sequence[tuple]] = None) -> RenderOut:
+    """Blend per-tile compacted lists into the image.
+
+    Single-pass entry point over (lists, valid, entry_mask) — see
+    `blend_pass` for the entry-mask semantics. `passes` optionally supplies
+    *additional* (lists, valid, entry_mask) spill passes blended after the
+    first from the carried state; the result is bit-identical to one pass
+    over the concatenated lists.
+    """
+    state = init_blend_state(grid.num_tiles, grid.tile ** 2)
+    state, entry_alive = blend_pass(proj, grid, lists, valid, entry_mask,
+                                    state)
+    alive_parts = [entry_alive]
+    for p_lists, p_valid, p_mask in (passes or ()):
+        state, alive = blend_pass(proj, grid, p_lists, p_valid, p_mask,
+                                  state)
+        alive_parts.append(alive)
+    entry_alive = (alive_parts[0] if len(alive_parts) == 1
+                   else jnp.concatenate(alive_parts, axis=1))
+    return finalize_blend(grid, state, background, overflow, entry_alive)
 
 
 def render_reference(proj: Projected, grid: TileGrid,

@@ -24,9 +24,15 @@ dataflow selector:
 dataclass I/O contracts:
 
     preprocess(scene, camera)      -> ProjectedScene
-    stage1_compact(ProjectedScene) -> TileStream
-    ctu(ProjectedScene, TileStream)-> StreamHierarchyOut
+    stage1_compact(ProjectedScene) -> tuple[TileStream, ...]  (1 per pass)
+    ctu(ProjectedScene, TileStream)-> StreamHierarchyOut      (per pass)
     blend(ProjectedScene, ...)     -> RenderOut (+ blend counters)
+
+Under `OverflowPolicy.SPILL` the plan runs `StreamConfig.max_spill_passes`
+compacted passes: stage1_compact emits one TileStream per pass, the CTU
+tests each pass's entries, and the blend folds the passes through a carried
+`raster.BlendState` — overflow entries render (bit-identical to the dense
+oracle) instead of being clamped, with per-pass memory at the k_max size.
 
 The plan is a frozen dataclass of frozen sub-configs: hashable and
 value-equal, so it doubles as the jit-cache key in `serving.RenderEngine`.
@@ -107,16 +113,28 @@ class TestConfig:
 class OverflowPolicy(enum.Enum):
     """What to do when a tile's Stage-1 survivor list exceeds `k_max`.
 
-    The in-graph behavior is always CLAMP (the compaction drops entries past
-    k_max — jit-compiled code cannot branch on a traced overflow bit); WARN
-    and RAISE are enforced wherever the overflow flag becomes concrete: in
-    eager `Renderer` calls and, for serving traffic, per frame in
+    CLAMP/WARN/RAISE drop entries past k_max in-graph (jit-compiled code
+    cannot branch on a traced overflow bit); WARN and RAISE are enforced
+    wherever the overflow flag becomes concrete: in eager `Renderer` calls
+    and, for serving traffic, per frame in
     `serving.RenderEngine.render_batch` (which also counts `overflow_frames`
     in telemetry).
+
+    SPILL renders the overflow entries instead of dropping them: Stage-1
+    compaction emits up to `StreamConfig.max_spill_passes` per-tile lists of
+    k_max entries each (pass p holds survivors p*k_max..(p+1)*k_max-1), the
+    CTU tests each pass's entries, and the blend folds the passes
+    front-to-back through a carried `raster.BlendState` — bit-identical to
+    a single pass over the concatenated lists, hence to the dense oracle.
+    Per-pass working memory stays at the k_max size (that is the point: the
+    cap becomes a bounded-memory streaming knob, not a correctness hazard).
+    The overflow flag then only fires when the *total* capacity
+    (max_spill_passes * k_max) is exceeded, which warns like WARN.
     """
     CLAMP = "clamp"
     WARN = "warn"
     RAISE = "raise"
+    SPILL = "spill"
 
 
 class StreamOverflowWarning(RuntimeWarning):
@@ -129,14 +147,27 @@ class StreamOverflowError(RuntimeError):
 
 @dataclasses.dataclass(frozen=True)
 class StreamConfig:
-    """Survivor-stream resources (Compact stage)."""
-    k_max: int = 1024                         # per-tile list capacity
+    """Survivor-stream resources (Compact stage).
+
+    k_max is the per-tile list capacity *per pass*; under
+    `OverflowPolicy.SPILL` up to `max_spill_passes` passes run, so the
+    total per-tile capacity is k_max * max_spill_passes (other policies
+    always run exactly one pass and ignore `max_spill_passes`). Passes are
+    static shapes: a spill plan always executes its configured pass count
+    in-graph — empty trailing passes blend nothing — which is what lets
+    the serving engine key its jit cache on the (bucketed) pass count.
+    """
+    k_max: int = 1024                         # per-tile list capacity / pass
     overflow: OverflowPolicy = OverflowPolicy.CLAMP
+    max_spill_passes: int = 4                 # total passes under SPILL
 
     def __post_init__(self):
         if not isinstance(self.overflow, OverflowPolicy):
             object.__setattr__(self, "overflow",
                                OverflowPolicy(self.overflow))
+        if self.max_spill_passes < 1:
+            raise ValueError(
+                f"max_spill_passes must be >= 1, got {self.max_spill_passes}")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -165,13 +196,20 @@ class ProjectedScene:
 
 @dataclasses.dataclass(frozen=True)
 class TileStream:
-    """Stage-1 + Compact output: per-tile depth-ordered survivor streams.
+    """One compacted pass of per-tile depth-ordered survivor streams.
+
+    `stage1_compact` emits a tuple of these — one per spill pass (length 1
+    unless the plan's overflow policy is SPILL). Pass `index` holds
+    survivors index*k_max..(index+1)*k_max-1 of each tile's depth-ordered
+    list; `overflow` is the *global* flag (total capacity exceeded),
+    identical in every pass of a frame.
 
     `dense` carries the full-mask `HierarchyOut` on the dense parity
     dataflow (the oracle computes every mask up front); `baseline_mini` and
     `counters` carry the non-CAT baselines' mini-tile mask / workload
     counters. All three are None on the stream dataflow, where nothing of
-    shape (regions, N) survives past compaction.
+    shape (regions, N) survives past compaction; on multi-pass plans they
+    are shared (the same arrays) across the passes.
     """
     lists: jax.Array                          # (T, K) int32 gaussian ids
     valid: jax.Array                          # (T, K) bool
@@ -179,6 +217,7 @@ class TileStream:
     dense: Optional[H.HierarchyOut] = None
     baseline_mini: Optional[jax.Array] = None
     counters: Optional[dict] = None
+    index: int = 0                            # spill pass index (0-based)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -222,24 +261,44 @@ class RenderPlan:
         return ProjectedScene(proj=project(scene, camera),
                               grid=self.grid.make())
 
-    def stage1_compact(self, ps: ProjectedScene) -> TileStream:
+    @property
+    def n_passes(self) -> int:
+        """Static spill pass count: max_spill_passes under SPILL, else 1."""
+        return (self.stream.max_spill_passes
+                if self.stream.overflow is OverflowPolicy.SPILL else 1)
+
+    def stage1_compact(self, ps: ProjectedScene) -> tuple[TileStream, ...]:
         """Stage-1 test + depth sort + per-tile list compaction.
 
-        stream: tile-level AABB only (== OR of the tile's sub-tile AABBs) —
-        the transient (T, N) mask is dropped right after compaction.
+        Returns one `TileStream` per spill pass (a 1-tuple unless the
+        overflow policy is SPILL): pass p holds survivors
+        p*k_max..(p+1)*k_max-1 of each tile's depth-ordered list, so the
+        concatenation of the passes equals a single k_max*n_passes
+        compaction.
+
+        stream: tile-level AABB only (== OR of the tile's sub-tile AABBs),
+        fused into the chunked compaction so the transient (T, N) mask
+        materializes one tile block at a time.
         dense:  the full dense hierarchy runs here (the oracle needs every
         mask anyway) and the tile lists derive from its sub-tile bits.
         baselines: `hierarchy.baseline_masks` for the method.
         """
         proj, grid = ps.proj, ps.grid
         k_max = self.stream.k_max
+        n_passes = self.n_passes
+
+        def as_streams(lists, valid, overflow, **shared):
+            return tuple(
+                TileStream(lists[p], valid[p], overflow, index=p, **shared)
+                for p in range(n_passes))
+
         if self.test.method != "cat":
             tile_mask, mini_mask, counters = H.baseline_masks(
                 proj, grid, self.test.method)
             order = raster.depth_order(proj)
-            lists, valid, overflow = raster.compact_tile_lists(
-                tile_mask, order, k_max)
-            return TileStream(lists, valid, overflow,
+            lists, valid, overflow = raster.compact_tile_lists_passes(
+                tile_mask, order, k_max, n_passes)
+            return as_streams(lists, valid, overflow,
                               baseline_mini=mini_mask, counters=counters)
         if self.dataflow == "dense":
             if self.test.backend == "pallas":
@@ -257,15 +316,14 @@ class RenderPlan:
                 hout.subtile_mask.astype(jnp.int32), sub_of_tile,
                 num_segments=grid.num_tiles) > 0                     # (T, N)
             order = raster.depth_order(proj)
-            lists, valid, overflow = raster.compact_tile_lists(
-                stage1_tile, order, k_max)
-            return TileStream(lists, valid, overflow, dense=hout)
+            lists, valid, overflow = raster.compact_tile_lists_passes(
+                stage1_tile, order, k_max, n_passes)
+            return as_streams(lists, valid, overflow, dense=hout)
         # stream
         order = raster.depth_order(proj)
-        tile_mask = aabb_mask(proj, grid.tile_origins(), grid.tile)  # (T, N)
-        lists, valid, overflow = raster.compact_tile_lists(tile_mask, order,
-                                                           k_max)
-        return TileStream(lists, valid, overflow)
+        lists, valid, overflow = raster.compact_aabb_tile_lists(
+            proj, grid, order, k_max, n_passes)
+        return as_streams(lists, valid, overflow)
 
     def ctu(self, ps: ProjectedScene, ts: TileStream) -> H.StreamHierarchyOut:
         """Per-entry hierarchical testing (the queue-fed CTU of Fig. 6).
@@ -303,51 +361,103 @@ class RenderPlan:
             self.test.precision, self.test.spiky_threshold, cat_fn=cat_fn)
 
     def blend(self, ps: ProjectedScene, hout: H.StreamHierarchyOut):
-        """Blend stage: (RenderOut, blend counters dict).
+        """Blend stage, single pass: (RenderOut, blend counters dict).
 
         fused=False: the pure-jnp differentiable rasterizer (early
         termination modeled by counters); fused=True: the Pallas kernel with
-        true in-kernel termination and kernel-measured counters.
+        true in-kernel termination and kernel-measured counters. Multi-pass
+        (SPILL) plans blend through `_blend_passes`, which folds each pass
+        into the carried blend state; this method is the 1-pass view of it.
+        """
+        out, counters, _ = self._blend_passes(ps, [hout])
+        return out, counters
+
+    def _blend_passes(self, ps: ProjectedScene, houts):
+        """Blend the spill passes front-to-back from one carried state.
+
+        Returns (RenderOut, blend counters dict, per-pass entry_alive list).
+        The RenderOut's entry_alive concatenates the passes along K, so it
+        lines up entry-for-entry with a single dense pass of the same total
+        capacity.
         """
         proj, grid = ps.proj, ps.grid
         counters: dict = {}
         if self.raster.fused:
             from repro.kernels import ops as kops
-            out, fused_counters = kops.render_tiles_fused(
-                proj, grid, hout.lists, hout.valid, hout.entry_mini_mask,
-                self.raster.background, hout.overflow)
+            out, fused_counters = kops.render_tiles_fused_passes(
+                proj, grid,
+                [(h.lists, h.valid, h.entry_mini_mask) for h in houts],
+                self.raster.background, houts[0].overflow)
             counters.update(fused_counters)
+            k = houts[0].lists.shape[1]
+            alive_parts = [out.entry_alive[:, i * k:(i + 1) * k]
+                           for i in range(len(houts))]
         else:
-            out = raster.render_tiles(proj, grid, hout.lists, hout.valid,
-                                      hout.entry_mini_mask,
-                                      self.raster.background, hout.overflow)
-            # The unfused sweep always walks the full padded list.
+            first, rest = houts[0], houts[1:]
+            out = raster.render_tiles(
+                proj, grid, first.lists, first.valid, first.entry_mini_mask,
+                self.raster.background, first.overflow,
+                passes=[(h.lists, h.valid, h.entry_mini_mask) for h in rest])
+            k = houts[0].lists.shape[1]
+            alive_parts = [out.entry_alive[:, i * k:(i + 1) * k]
+                           for i in range(len(houts))]
+            # The unfused sweep always walks every padded list slot.
             counters["swept_per_pixel"] = jnp.asarray(
-                float(hout.lists.shape[1]), jnp.float32)
+                float(sum(h.lists.shape[1] for h in houts)), jnp.float32)
         counters["processed_per_pixel"] = jnp.mean(out.processed_per_pixel)
         counters["blended_per_pixel"] = jnp.mean(out.blended_per_pixel)
-        return out, counters
+        return out, counters, alive_parts
+
+    def _merge_hout_counters(self, houts) -> dict:
+        """Fold per-pass CTU counters into frame totals.
+
+        Stream-dataflow CAT counters are per-entry sums — additive across
+        passes (`hierarchy.ADDITIVE_COUNTER_KEYS`). Dense-oracle and
+        baseline counters are full-mask sums, identical in every pass, so
+        pass 0's dict already is the total.
+        """
+        counters = dict(houts[0].counters)
+        if self.dataflow == "stream" and self.test.method == "cat":
+            for h in houts[1:]:
+                for key in H.ADDITIVE_COUNTER_KEYS:
+                    counters[key] = counters[key] + h.counters[key]
+        return counters
 
     # -- composition --------------------------------------------------------
 
     def render_with_stats(self, scene: GaussianScene, camera):
-        """Run the full plan: returns (RenderOut, counters dict)."""
+        """Run the full plan: returns (RenderOut, counters dict).
+
+        Under SPILL this is the multi-pass loop of the staged API: one CTU
+        evaluation and one blend fold per compacted pass, sharing a single
+        carried `raster.BlendState` — so overflow entries render instead of
+        being clamped, while per-pass mask memory stays at the k_max size.
+        """
         ps = self.preprocess(scene, camera)
-        ts = self.stage1_compact(ps)
-        hout = self.ctu(ps, ts)
-        counters = dict(hout.counters)
+        streams = self.stage1_compact(ps)
+        houts = [self.ctu(ps, ts) for ts in streams]
+        counters = self._merge_hout_counters(houts)
         if self.test.method == "cat":
             counters["cat_mask_bytes"] = jnp.asarray(
                 float(cat_mask_elems(ps.grid, ps.proj.depth.shape[0],
                                      self.stream.k_max, self.dataflow)),
                 jnp.float32)
-        out, blend_counters = self.blend(ps, hout)
+        out, blend_counters, alive_parts = self._blend_passes(ps, houts)
         counters.update(blend_counters)
         if self.test.method == "cat":
-            counters.update(self._effective_counters(ps, ts, hout,
-                                                     out.entry_alive))
+            eff: dict = {}
+            for ts, hout, alive in zip(streams, houts, alive_parts):
+                for key, v in self._effective_counters(ps, ts, hout,
+                                                       alive).items():
+                    eff[key] = v if key not in eff else eff[key] + v
+            counters.update(eff)
+        # How many passes actually carried entries (>= 1 even on an empty
+        # frame, so the counter always reads as a pass count).
+        counters["spill_passes"] = jnp.maximum(
+            sum(jnp.any(h.valid) for h in houts), 1).astype(jnp.float32)
         enforce_overflow_policy(out.overflow, self.stream.overflow,
-                                k_max=self.stream.k_max)
+                                k_max=self.stream.k_max,
+                                n_passes=self.n_passes)
         return out, counters
 
     def render(self, scene: GaussianScene, camera) -> raster.RenderOut:
@@ -372,7 +482,8 @@ class RenderPlan:
         out, counters = jax.vmap(
             lambda cam: self.render_with_stats(scene, cam))(cameras)
         enforce_overflow_policy(jnp.any(out.overflow), self.stream.overflow,
-                                k_max=self.stream.k_max)
+                                k_max=self.stream.k_max,
+                                n_passes=self.n_passes)
         return out, counters
 
     # -- introspection ------------------------------------------------------
@@ -385,11 +496,13 @@ class RenderPlan:
             "obb": "sub-tile OBB gathered at entries",
             "aabb": "no fine test (whole tile list blends)",
         }[self.test.method]
+        passes = (f" x {self.n_passes} spill passes"
+                  if self.n_passes > 1 else "")
         return (
             StageSpec("preprocess", "jnp", "projection + 3σ footprints"),
             StageSpec("stage1_compact", "jnp",
                       f"Stage-1 {self.test.method} + depth sort + "
-                      f"k_max={self.stream.k_max} compaction "
+                      f"k_max={self.stream.k_max} compaction{passes} "
                       f"({self.stream.overflow.value} on overflow)"),
             StageSpec("ctu", test_be, ctu_desc),
             StageSpec("blend", self.raster.backend,
@@ -547,20 +660,36 @@ def as_plan(obj) -> RenderPlan:
 
 
 def enforce_overflow_policy(overflow, policy: OverflowPolicy, *,
-                            k_max: int, context: str = "") -> bool:
+                            k_max: int, n_passes: int = 1,
+                            context: str = "") -> bool:
     """Apply an OverflowPolicy to a concrete overflow flag.
 
     No-ops under tracing (jit/vmap cannot branch on the flag — the in-graph
     behavior is always clamping); callers holding concrete results (eager
     renders, the serving engine after device sync) get the warn/raise
     behavior. Returns True iff overflow was observed (and not raised).
+
+    Under SPILL the flag means the total spill capacity (k_max * n_passes)
+    was exhausted and the remainder clamped — never silent: it warns with
+    the spill-specific remedy (more passes), while the serving engine
+    additionally retries with a doubled pass bucket before any frame is
+    allowed to report it.
     """
     if policy is OverflowPolicy.CLAMP or isinstance(overflow, jax.core.Tracer):
         return False
     if not bool(overflow):
         return False
+    suffix = " — " + context if context else ""
+    if policy is OverflowPolicy.SPILL:
+        warnings.warn(
+            f"Stage-1 tile list overflowed the spill capacity "
+            f"k_max={k_max} x {n_passes} passes; entries past it were "
+            f"dropped (clamped){suffix}. Raise StreamConfig.max_spill_passes "
+            f"(or k_max) to cover the longest survivor list.",
+            StreamOverflowWarning, stacklevel=2)
+        return True
     msg = (f"Stage-1 tile list overflowed k_max={k_max}; entries past the "
-           f"capacity were dropped (clamped){' — ' + context if context else ''}. "
+           f"capacity were dropped (clamped){suffix}. "
            f"Raise StreamConfig.k_max or register the scene with "
            f"probe_cameras to measure a sufficient bound.")
     if policy is OverflowPolicy.RAISE:
@@ -587,7 +716,13 @@ def measure_k_max(scene: GaussianScene, cameras, *,
     scene's padded Gaussian count) bounds the result from above.
 
     Each camera carries its own resolution; `grid` supplies the tile shape.
+    The per-probe (T, N) Stage-1 mask is counted one tile block at a time
+    (same chunking as the compaction), so probing stays feasible at
+    1080p/512k-Gaussian scale where the full mask would be gigabytes.
     """
+    from repro.core.raster import COMPACT_CHUNK_ELEMS
+    from repro.core.culling import tile_divisor_chunk, map_tile_chunks
+
     cameras = list(cameras)
     if not cameras:
         raise ValueError("measure_k_max needs at least one probe camera "
@@ -597,7 +732,11 @@ def measure_k_max(scene: GaussianScene, cameras, *,
     for cam in cameras:
         g = grid.with_resolution(cam.height, cam.width).make()
         proj = project(scene, cam)
-        counts = jnp.sum(aabb_mask(proj, g.tile_origins(), g.tile), axis=1)
+        t, n = g.num_tiles, proj.depth.shape[0]
+        counts = map_tile_chunks(
+            lambda ob: jnp.sum(aabb_mask(proj, ob, g.tile), axis=1),
+            (g.tile_origins(),), t,
+            tile_divisor_chunk(t, n, COMPACT_CHUNK_ELEMS))
         longest = max(longest, int(jnp.max(counts)))
     k = next_pow2(longest)
     return min(k, cap) if cap is not None else k
@@ -609,10 +748,12 @@ def measure_k_max(scene: GaussianScene, cameras, *,
 
 
 def cat_mask_elems(grid: TileGrid, n: int, k_max: int, dataflow: str) -> int:
-    """Boolean elements the CAT stage materializes (the Stage-1 + CAT mask
-    footprint, 1 byte/element): dense = (S + M)·N, stream = T·K·(Sp + Mt).
-    Static per config — the stream/dense ratio is the memory win
-    `benchmarks/scaling.py` tracks."""
+    """Boolean elements the CAT stage materializes *per pass* (the Stage-1 +
+    CAT mask footprint, 1 byte/element): dense = (S + M)·N, stream =
+    T·K·(Sp + Mt). Static per config — the stream/dense ratio is the memory
+    win `benchmarks/scaling.py` tracks. SPILL plans hold one pass's masks
+    at this size in the CTU working set regardless of the survivor count;
+    that boundedness is exactly what the policy buys."""
     if dataflow == "dense":
         return (grid.num_subtiles + grid.num_minitiles) * n
     if dataflow == "stream":

@@ -150,50 +150,85 @@ def blend_tiles_reference(proj, grid, lists, valid, entry_mask=None):
 
 
 def blend_tiles_fused_pallas(proj, grid, lists, valid, entry_mask=None,
-                             interpret: bool = True) \
+                             init=None, interpret: bool = True) \
         -> krender.FusedBlendOut:
     ops = gather_tile_features(proj, grid, lists, valid, entry_mask)
-    return krender.blend_tiles_fused(*ops, interpret=interpret)
+    return krender.blend_tiles_fused(*ops, init=init, interpret=interpret)
 
 
 def render_tiles_fused(proj, grid, lists, valid, entry_mask=None,
                        background: float = 0.0,
                        overflow: jax.Array | bool = False,
                        interpret: bool = True):
-    """Fused-kernel drop-in for `core.raster.render_tiles`.
+    """Fused-kernel drop-in for `core.raster.render_tiles` (single pass).
+
+    See `render_tiles_fused_passes` for the counters contract and the
+    multi-pass (SPILL) form this wraps.
+    """
+    return render_tiles_fused_passes(proj, grid,
+                                     [(lists, valid, entry_mask)],
+                                     background, overflow, interpret)
+
+
+def render_tiles_fused_passes(proj, grid, passes,
+                              background: float = 0.0,
+                              overflow: jax.Array | bool = False,
+                              interpret: bool = True):
+    """Fused-kernel blend over one or more compacted spill passes.
+
+    passes: sequence of (lists (T, K), valid, entry_mask) — consecutive
+    segments of each tile's depth-ordered survivor list
+    (`OverflowPolicy.SPILL`). The kernel's VMEM carry (transmittance, RGB,
+    work counters) is threaded between the calls via the `init` operand, so
+    the chain blends exactly like one kernel call over the concatenation
+    whenever K is a multiple of the kernel's K block (and within < T_EPS
+    otherwise). Early termination spans passes: a pass whose tiles have all
+    saturated executes zero live K blocks.
 
     Returns (RenderOut, counters dict). The RenderOut fields come from the
-    kernel's own measurements (processed/blended/entry_alive), and the dict
-    adds the sweep-level counters only the fused kernel can report:
+    kernel's own measurements (processed/blended/entry_alive, with
+    entry_alive concatenating the passes along K), and the dict adds the
+    sweep-level counters only the fused kernel can report:
 
       kblocks_processed  — K blocks the kernel actually executed (summed
-                           over tiles; termination + adaptive trip count)
+                           over tiles and passes; termination + adaptive
+                           trip count)
       kblocks_total      — K blocks a full sweep would execute
       swept_per_pixel    — Gaussian list slots each pixel lane swept,
                            averaged over tiles (the unfused path always
-                           sweeps the padded k_max)
+                           sweeps the padded k_max of every pass)
 
     `alpha` is derived as 1 - transmittance — the identity sum(T_excl·a) =
     1 - prod(1-a) holds telescopically inside the kernel too, so it equals
     the blended accumulation exactly up to the terminated tail (< T_EPS).
     """
-    fb = blend_tiles_fused_pallas(proj, grid, lists, valid, entry_mask,
-                                  interpret=interpret)
-    acc = 1.0 - fb.trans
-    rgb = fb.rgb + background * fb.trans[:, :, None]
+    state = None
+    alive_parts = []
+    kproc = jnp.zeros((), jnp.float32)
+    kblocks_total = 0
+    for lists, valid, entry_mask in passes:
+        fb = blend_tiles_fused_pallas(proj, grid, lists, valid, entry_mask,
+                                      init=state, interpret=interpret)
+        state = (fb.trans, fb.rgb, fb.processed, fb.blended)
+        alive_parts.append(fb.entry_alive)
+        kproc = kproc + jnp.sum(fb.kblocks_processed).astype(jnp.float32)
+        kblocks_total += fb.kblocks_total
+    trans, rgb, processed, blended = state
+    acc = 1.0 - trans
+    rgb = rgb + background * trans[:, :, None]
     out = raster.RenderOut(
         image=raster.untile(grid, rgb),
         alpha=raster.untile(grid, acc),
-        processed_per_pixel=raster.untile(grid, fb.processed),
-        blended_per_pixel=raster.untile(grid, fb.blended),
+        processed_per_pixel=raster.untile(grid, processed),
+        blended_per_pixel=raster.untile(grid, blended),
         overflow=jnp.asarray(overflow),
-        entry_alive=fb.entry_alive,
+        entry_alive=(alive_parts[0] if len(alive_parts) == 1
+                     else jnp.concatenate(alive_parts, axis=1)),
     )
-    kproc = jnp.sum(fb.kblocks_processed).astype(jnp.float32)
-    ktotal = float(grid.num_tiles * fb.kblocks_total)
     counters = dict(
         kblocks_processed=kproc,
-        kblocks_total=jnp.asarray(ktotal, jnp.float32),
+        kblocks_total=jnp.asarray(float(grid.num_tiles * kblocks_total),
+                                  jnp.float32),
         swept_per_pixel=kproc * krender.K_BLK / grid.num_tiles,
     )
     return out, counters

@@ -214,18 +214,23 @@ class FusedBlendOut(NamedTuple):
 
 
 def _fused_blend_kernel(kb_ref, pix_ref, feat_ref, col_ref, valid_ref,
-                        allow_ref, mtmap_ref, rgb_ref, trans_ref, proc_ref,
+                        allow_ref, mtmap_ref, t0_ref, acc0_ref, p0_ref,
+                        b0_ref, rgb_ref, trans_ref, proc_ref,
                         blnd_ref, alive_ref, kproc_ref, t_scr, acc_scr,
                         pcnt_scr, bcnt_scr, kp_scr, *, n_kblocks: int):
     i = pl.program_id(0)
     k = pl.program_id(1)
 
+    # Scratch starts from the carried pass state (all-ones transmittance /
+    # zero accumulators on the first pass) — the cross-call analogue of the
+    # cross-K-block carry the scratch already implements, which is what
+    # makes a spill pass resume exactly where the previous one stopped.
     @pl.when(k == 0)
     def _init():
-        t_scr[...] = jnp.ones_like(t_scr)
-        acc_scr[...] = jnp.zeros_like(acc_scr)
-        pcnt_scr[...] = jnp.zeros_like(pcnt_scr)
-        bcnt_scr[...] = jnp.zeros_like(bcnt_scr)
+        t_scr[...] = t0_ref[0]
+        acc_scr[...] = acc0_ref[0]
+        pcnt_scr[...] = p0_ref[0]
+        bcnt_scr[...] = b0_ref[0]
         kp_scr[0] = 0
 
     # Skipped blocks (terminated tile or past the tile's occupied bound)
@@ -293,6 +298,7 @@ def _fused_blend_kernel(kb_ref, pix_ref, feat_ref, col_ref, valid_ref,
 def blend_tiles_fused(pix: jax.Array, feat: jax.Array, colors: jax.Array,
                       valid: jax.Array, allow: jax.Array,
                       kblock_bound: Optional[jax.Array] = None,
+                      init: Optional[tuple] = None,
                       interpret: bool = True) -> FusedBlendOut:
     """Contribution-aware blend with in-kernel early termination.
 
@@ -304,6 +310,12 @@ def blend_tiles_fused(pix: jax.Array, feat: jax.Array, colors: jax.Array,
     sweep to < T_EPS per channel (every skipped contribution has weight
     T·a < T_EPS); the work counters match `core.raster.render_tiles`'s
     accounting exactly.
+
+    init: optional carried state (trans (T,P), rgb (T,P,3), processed (T,P),
+    blended (T,P)) from a previous spill pass — the kernel's VMEM carries
+    resume from it, so chaining calls over consecutive list segments equals
+    one call over the concatenation whenever the segment lengths are
+    multiples of K_BLK (the kernel's op sequence is per-K-block either way).
     """
     t, p, _ = pix.shape
     k = feat.shape[1]
@@ -325,6 +337,16 @@ def blend_tiles_fused(pix: jax.Array, feat: jax.Array, colors: jax.Array,
         kblock_bound = -(-nvalid // K_BLK)
     kblock_bound = kblock_bound.astype(jnp.int32)
 
+    if init is None:
+        t0 = jnp.ones((t, p), jnp.float32)
+        acc0 = jnp.zeros((t, p, 3), jnp.float32)
+        p0 = jnp.zeros((t, p), jnp.float32)
+        b0 = jnp.zeros((t, p), jnp.float32)
+    else:
+        t0, acc0, p0, b0 = (x.astype(jnp.float32) for x in init)
+        # A fully-terminated or fully-empty spill pass still runs its
+        # guarded grid (the scalar bound already skips dead blocks).
+
     kernel = functools.partial(_fused_blend_kernel, n_kblocks=n_kblocks)
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=1,
@@ -336,6 +358,10 @@ def blend_tiles_fused(pix: jax.Array, feat: jax.Array, colors: jax.Array,
             pl.BlockSpec((1, K_BLK), lambda i, j, kb: (i, j)),
             pl.BlockSpec((1, K_BLK, mt), lambda i, j, kb: (i, j, 0)),
             pl.BlockSpec((p, mt), lambda i, j, kb: (0, 0)),
+            pl.BlockSpec((1, p), lambda i, j, kb: (i, 0)),
+            pl.BlockSpec((1, p, 3), lambda i, j, kb: (i, 0, 0)),
+            pl.BlockSpec((1, p), lambda i, j, kb: (i, 0)),
+            pl.BlockSpec((1, p), lambda i, j, kb: (i, 0)),
         ],
         out_specs=[
             pl.BlockSpec((1, p, 3), lambda i, j, kb: (i, 0, 0)),
@@ -369,7 +395,7 @@ def blend_tiles_fused(pix: jax.Array, feat: jax.Array, colors: jax.Array,
         interpret=interpret,
     )(kblock_bound, pix.astype(jnp.float32), feat.astype(jnp.float32),
       colors.astype(jnp.float32), valid.astype(jnp.int8),
-      allow.astype(jnp.int8), mtmap)
+      allow.astype(jnp.int8), mtmap, t0, acc0, p0, b0)
     return FusedBlendOut(
         rgb=rgb, trans=trans, processed=proc, blended=blnd,
         entry_alive=(alive[:, :k] != 0),

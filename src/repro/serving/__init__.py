@@ -5,14 +5,19 @@
                  per-batch OverflowPolicy enforcement
     batching   — request queue / micro-batcher with per-request futures
     sharding   — frame-axis device sharding glue over launch.mesh
-    telemetry  — rolling latency percentiles, throughput, overflow-frame
-                 counts, and modeled accelerator FPS from FLICKER counters
+    telemetry  — rolling latency percentiles, throughput, overflow/spill
+                 accounting, and modeled accelerator FPS from FLICKER
+                 counters
+    workloads  — shared demo scenes + the Full-HD (1920×1088 / 512k) SPILL
+                 workload and its frame-size-aware batching policy
 """
 from repro.serving.engine import (RenderEngine, RenderRequest, FrameResult,
                                   batch_bucket, scene_bucket)
 from repro.serving.batching import MicroBatcher, RequestResult
 from repro.serving.telemetry import Telemetry
-from repro.serving.workloads import register_demo_scenes
+from repro.serving.workloads import (register_demo_scenes, max_batch_for,
+                                     hd1080_cameras, hd1080_engine,
+                                     register_hd1080_scene)
 from repro.core.renderer import (OverflowPolicy, StreamOverflowWarning,
                                  StreamOverflowError, measure_k_max)
 
@@ -21,7 +26,8 @@ __all__ = [
     "batch_bucket", "scene_bucket",
     "MicroBatcher", "RequestResult",
     "Telemetry",
-    "register_demo_scenes",
+    "register_demo_scenes", "max_batch_for", "hd1080_cameras",
+    "hd1080_engine", "register_hd1080_scene",
     "OverflowPolicy", "StreamOverflowWarning", "StreamOverflowError",
     "measure_k_max",
 ]

@@ -33,6 +33,19 @@ always *clamped* in-graph; the engine then applies the plan's
 WARN (the serving default) emits a `StreamOverflowWarning`, RAISE raises
 `StreamOverflowError` — and counts `overflow_frames` into telemetry either
 way.
+
+SPILL serving: with `overflow=OverflowPolicy.SPILL` the plan's k_max is the
+*per-pass* streaming chunk and the engine derives the pass count per scene —
+ceil(measured survivor bound / chunk), rounded up to a power of two so
+nearby scenes share executables (the pass count is part of the `RenderPlan`,
+hence of the jit-cache key: traffic that stays inside a pass bucket never
+recompiles). A batch that still exhausts its spill capacity (off-probe
+traffic) is transparently re-rendered with a doubled pass bucket — the
+bucket sticks for the scene, `spill_retries` counts the recompiles — so
+SPILL frames never report `FrameResult.overflow`; they report the
+`spill_passes` they actually used in their counters instead. This is the
+regime the 1080p workload runs in (`serving.workloads.hd1080`): survivor
+lists far past any single k_max render in bounded per-pass memory.
 """
 from __future__ import annotations
 
@@ -146,6 +159,11 @@ class RenderEngine:
         self._scenes: dict[str, _SceneEntry] = {}
         self._cache: dict[tuple, Callable] = {}
         self.compile_count = 0
+        # Per-scene learned multiplier on the spill pass bucket: doubled
+        # whenever a SPILL batch exhausts its capacity, so the scene's next
+        # plan covers the traffic that overflowed.
+        self._spill_boost: dict[str, int] = {}
+        self.spill_retries = 0
 
     @property
     def base_config(self) -> RenderConfig:
@@ -196,13 +214,38 @@ class RenderEngine:
 
     def plan_for(self, name: str, height: int, width: int) -> RenderPlan:
         """The engine plan specialized to a scene's k_max and a resolution —
-        exactly the jit-cache key component for this traffic."""
+        exactly the jit-cache key component for this traffic.
+
+        Non-SPILL policies serve at the scene's (measured or given) k_max.
+        SPILL keeps the plan's k_max as the per-pass chunk and sizes the
+        pass count to the scene instead: next_pow2(ceil(scene k_max /
+        chunk)), times any learned overflow boost, capped at the bucket
+        that already covers every Gaussian in the scene (spilling further
+        cannot be needed).
+        """
         entry = self._scenes[name]
+        stream = self.plan.stream
+        if stream.overflow is OverflowPolicy.SPILL:
+            k_pass = min(stream.k_max, entry.k_max)
+            if entry.k_max < entry.n_bucket:
+                # Measured (or explicitly given) survivor bound: size the
+                # bucket to cover it outright.
+                need = next_pow2(-(-entry.k_max // k_pass))
+            else:
+                # Unmeasured bound (defaulted to the scene bucket): start
+                # from the base plan's pass budget instead of compiling a
+                # capacity-sized pass unroll; overflow retries double it.
+                need = next_pow2(stream.max_spill_passes)
+            passes = need * self._spill_boost.get(name, 1)
+            passes = min(passes, next_pow2(-(-entry.n_bucket // k_pass)))
+            stream = dataclasses.replace(stream, k_max=k_pass,
+                                         max_spill_passes=passes)
+        else:
+            stream = dataclasses.replace(stream, k_max=entry.k_max)
         return dataclasses.replace(
             self.plan,
             grid=self.plan.grid.with_resolution(height, width),
-            stream=dataclasses.replace(self.plan.stream,
-                                       k_max=entry.k_max))
+            stream=stream)
 
     def config_for(self, name: str, height: int, width: int) -> RenderConfig:
         """Legacy flat view of `plan_for` (compat accessor)."""
@@ -244,7 +287,6 @@ class RenderEngine:
                              f"{self.max_batch}; split it upstream")
 
         entry = self._scenes[name]
-        plan = self.plan_for(name, height, width)
         n = len(requests)
         bucket = batch_bucket(n, self.max_batch)
 
@@ -254,10 +296,27 @@ class RenderEngine:
         if self.mesh is not None:
             cams = shd.shard_frames(cams, self.mesh)
 
-        fn = self._render_fn(entry.n_bucket, plan, bucket)
-        t0 = time.perf_counter()
-        out, counters = jax.block_until_ready(fn(entry.scene, cams))
-        dt = time.perf_counter() - t0
+        retries = 0
+        t0 = time.perf_counter()   # spans retries: render_s is the wall the
+        while True:                # batch actually cost, failed passes incl.
+            plan = self.plan_for(name, height, width)
+            fn = self._render_fn(entry.n_bucket, plan, bucket)
+            out, counters = jax.block_until_ready(fn(entry.scene, cams))
+            dt = time.perf_counter() - t0
+            frame_overflow = np.asarray(out.overflow)[:n]
+            overflow_frames = int(frame_overflow.sum())
+            spill = plan.stream.overflow is OverflowPolicy.SPILL
+            capacity = plan.stream.k_max * plan.stream.max_spill_passes
+            if overflow_frames and spill and capacity < entry.n_bucket:
+                # Off-probe traffic exhausted the spill capacity: double the
+                # scene's pass bucket (it sticks) and re-render — SPILL
+                # frames never ship clamped.
+                self._spill_boost[name] = \
+                    2 * self._spill_boost.get(name, 1)
+                self.spill_retries += 1
+                retries += 1
+                continue
+            break
 
         # Drop padding frames, then report the *real* Gaussian count — the
         # perf model's preprocessing/DRAM terms should not charge for inert
@@ -269,15 +328,15 @@ class RenderEngine:
 
         # Overflow accounting + policy (concrete flags now that the batch
         # has materialized — in-graph behavior is always clamping).
-        frame_overflow = np.asarray(out.overflow)[:n]
-        overflow_frames = int(frame_overflow.sum())
         self.telemetry.record_batch(batch_size=n, bucket_size=bucket,
                                     latency_s=dt, counters=counters,
                                     height=height, width=width,
-                                    overflow_frames=overflow_frames)
+                                    overflow_frames=overflow_frames,
+                                    spill_retries=retries)
         if overflow_frames:
             enforce_overflow_policy(
-                True, plan.stream.overflow, k_max=entry.k_max,
+                True, plan.stream.overflow, k_max=plan.stream.k_max,
+                n_passes=plan.stream.max_spill_passes,
                 context=f"{overflow_frames}/{n} frames of scene {name!r} "
                         f"at {height}x{width}")
 

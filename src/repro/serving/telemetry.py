@@ -27,6 +27,7 @@ class BatchRecord:
     modeled_fps: float       # mean modeled accelerator FPS over the frames
     counters: dict           # per-frame counter means (python floats)
     overflow_frames: int = 0  # frames whose Stage-1 lists overflowed k_max
+    spill_retries: int = 0    # SPILL re-renders after capacity exhaustion
 
 
 class Telemetry:
@@ -39,15 +40,21 @@ class Telemetry:
         self.total_frames = 0
         self.total_batches = 0
         self.total_overflow_frames = 0
+        self.total_spill_retries = 0
 
     def record_batch(self, *, batch_size: int, bucket_size: int,
                      latency_s: float, counters: dict,
                      height: int, width: int,
-                     overflow_frames: int = 0) -> BatchRecord:
+                     overflow_frames: int = 0,
+                     spill_retries: int = 0) -> BatchRecord:
         """counters: dict of per-frame (B,) arrays for the real frames.
         overflow_frames: how many of them overflowed their k_max (the
         engine's overflow-aware accounting — ends up in `snapshot()` both
-        as a window sum and as the lifetime `total_overflow_frames`)."""
+        as a window sum and as the lifetime `total_overflow_frames`).
+        spill_retries: SPILL-policy re-renders this batch needed before its
+        capacity covered the traffic (each one recompiled at a doubled pass
+        bucket); the per-frame pass usage itself arrives through the
+        `spill_passes` counter and aggregates with the other counters."""
         c = {k: np.asarray(v, np.float64) for k, v in counters.items()}
         fps = [
             pm.frame_time_s(
@@ -64,11 +71,13 @@ class Telemetry:
             modeled_fps=float(np.mean(fps)) if fps else 0.0,
             counters={k: float(np.mean(v)) for k, v in c.items()},
             overflow_frames=overflow_frames,
+            spill_retries=spill_retries,
         )
         self._records.append(rec)
         self.total_frames += batch_size
         self.total_batches += 1
         self.total_overflow_frames += overflow_frames
+        self.total_spill_retries += spill_retries
         return rec
 
     def snapshot(self) -> dict:
@@ -79,6 +88,8 @@ class Telemetry:
                         p99_ms=0.0, fps=0.0, modeled_fps=0.0,
                         mean_batch=0.0, overflow_frames=0,
                         total_overflow_frames=self.total_overflow_frames,
+                        spill_passes=0.0, spill_retries=0,
+                        total_spill_retries=self.total_spill_retries,
                         counters={})
         lat_ms = np.array([r.latency_s for r in recs]) * 1e3
         frames = sum(r.batch_size for r in recs)
@@ -102,6 +113,9 @@ class Telemetry:
             mean_batch=frames / len(recs),
             overflow_frames=sum(r.overflow_frames for r in recs),
             total_overflow_frames=self.total_overflow_frames,
+            spill_passes=agg.get("spill_passes", 0.0),
+            spill_retries=sum(r.spill_retries for r in recs),
+            total_spill_retries=self.total_spill_retries,
             counters=agg,
         )
 
@@ -112,6 +126,10 @@ class Telemetry:
                 f"fps | latency p50 {s['p50_ms']:.1f} / p95 {s['p95_ms']:.1f}"
                 f" / p99 {s['p99_ms']:.1f} ms | modeled FLICKER "
                 f"{s['modeled_fps']:.0f} fps")
+        if s["spill_passes"] > 1.0:
+            line += (f" | spill {s['spill_passes']:.1f} passes/frame"
+                     + (f" ({s['spill_retries']} retries)"
+                        if s["spill_retries"] else ""))
         if s["overflow_frames"]:
             line += f" | OVERFLOW {s['overflow_frames']} frames in window"
         return line

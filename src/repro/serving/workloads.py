@@ -1,18 +1,33 @@
-"""Shared demo workload: the two-scene registry used by the serve CLI, the
-example, and the serving tests — one definition so they cannot diverge.
-Scene knobs mirror `benchmarks/common.py`'s synthetic stand-ins for the
-paper's captures (screen-space sigma ~2-3 px, ~40% spiky)."""
+"""Shared serving workloads: the two-scene demo registry used by the serve
+CLI, the example, and the serving tests, plus the Full-HD (1920×1088 /
+512k-Gaussian) workload the 1080p scaling benchmark serves — one definition
+each so they cannot diverge. Scene knobs mirror `benchmarks/common.py`'s
+synthetic stand-ins for the paper's captures (screen-space sigma ~2-3 px,
+~40% spiky); the HD scene uses the compact-footprint regime of
+`benchmarks/scaling.py` (many small Gaussians — the production shape)."""
 from __future__ import annotations
 
+import math
 from typing import Optional
 
 import jax
 
-from repro.core import random_scene
+from repro.core import OverflowPolicy, RenderPlan, StreamConfig, \
+    orbit_camera, random_scene
 from repro.serving.engine import RenderEngine
 
 DEMO_SCENE_KW = dict(scale_range=(-2.9, -2.4), stretch=4.0,
                      opacity_range=(-1.0, 3.0))
+
+# Compact screen footprints so survivor lists grow with density, not blob
+# size — same knobs as benchmarks/scaling.py's scenes.
+HD_SCENE_KW = dict(scale_range=(-3.3, -2.7), stretch=3.0,
+                   opacity_range=(-1.0, 3.0))
+
+# Full HD, tile-aligned: 1080 rows round up to 1088 (multiples of the
+# 16-px tile), matching how real rasterizers pad 1080p framebuffers.
+HD1080_WIDTH, HD1080_HEIGHT = 1920, 1088
+HD1080_GAUSSIANS = 1 << 19        # 512k — the paper-scale scene size
 
 
 def register_demo_scenes(engine: RenderEngine, n_gaussians: int, *,
@@ -35,3 +50,65 @@ def register_demo_scenes(engine: RenderEngine, n_gaussians: int, *,
             name, random_scene(jax.random.PRNGKey(seed), n, **DEMO_SCENE_KW),
             k_max=k_max, probe_cameras=probe_cameras)
     return list(sizes)
+
+
+def max_batch_for(height: int, width: int,
+                  pixel_budget: int = 1 << 22) -> int:
+    """Batching policy for large frames: the biggest power-of-two batch
+    whose total pixel count stays within `pixel_budget` (default 4M px —
+    two Full-HD frames). Small frames batch wide for SIMD width; a
+    1920×1088 frame lands at 2 and anything larger serves frame-at-a-time,
+    because past the budget the vmapped blend's working set scales with the
+    batch while the per-frame latency bound does not.
+    """
+    frames = max(1, pixel_budget // (height * width))
+    # 64 is the engine's default max_batch — batching wider than that buys
+    # no SIMD width on any frame size, it only fattens tail latency.
+    return min(1 << (frames.bit_length() - 1), 64)
+
+
+def hd1080_cameras(n: int, *, width: int = HD1080_WIDTH,
+                   height: int = HD1080_HEIGHT) -> list:
+    """n orbit poses at the Full-HD resolution."""
+    return [orbit_camera(2 * math.pi * i / max(n, 1), width, height)
+            for i in range(n)]
+
+
+def register_hd1080_scene(engine: RenderEngine,
+                          n_gaussians: int = HD1080_GAUSSIANS, *,
+                          name: str = "hd1080",
+                          n_probes: int = 2) -> str:
+    """Register the Full-HD workload scene: `n_gaussians` compact-footprint
+    Gaussians, k_max measured from `n_probes` orbit probes at 1920×1088.
+    Returns the scene name."""
+    scene = random_scene(jax.random.PRNGKey(1080), n_gaussians,
+                         **HD_SCENE_KW)
+    engine.register_scene(name, scene,
+                          probe_cameras=hd1080_cameras(n_probes))
+    return name
+
+
+def hd1080_engine(n_gaussians: int = HD1080_GAUSSIANS, *,
+                  k_max_pass: int = 512,
+                  max_spill_passes: int = 8,
+                  fused: Optional[bool] = None) -> tuple[RenderEngine, str]:
+    """The 1080p serving configuration in one call: a SPILL-policy engine
+    (per-pass chunk `k_max_pass`, pass bucket derived per scene at render
+    time) with the frame-size-aware batching policy, and the 512k-Gaussian
+    HD scene registered under 'hd1080'. Returns (engine, scene_name).
+
+    SPILL is what makes this workload servable: Full-HD survivor lists
+    exceed any memory-comfortable single k_max, so overflow entries render
+    in extra bounded passes instead of being clamped (or forcing a
+    capacity-sized k_max). `max_spill_passes` here is only the *base plan*
+    default; the engine re-derives the real pass bucket from the scene's
+    measured survivor bound.
+    """
+    base = RenderPlan(stream=StreamConfig(
+        k_max=k_max_pass, overflow=OverflowPolicy.SPILL,
+        max_spill_passes=max_spill_passes))
+    engine = RenderEngine(
+        base, fused=fused,
+        max_batch=max_batch_for(HD1080_HEIGHT, HD1080_WIDTH))
+    name = register_hd1080_scene(engine, n_gaussians)
+    return engine, name

@@ -282,6 +282,78 @@ def test_no_overflow_keeps_results_clean(engine):
 
 
 # ---------------------------------------------------------------------------
+# SPILL through serving: overflow entries render instead of clamping
+# ---------------------------------------------------------------------------
+
+def test_serving_spill_never_overflows_and_matches_clamp_free():
+    """SPILL serving on a guaranteed-overflow registration (k_max=4): no
+    frame ever reports overflow, spill_passes >= 2 lands in the counters
+    and telemetry, and the images bit-match a no-overflow engine."""
+    eng = _overflowing_engine(overflow=OverflowPolicy.SPILL)
+    reqs = [RenderRequest("s", orbit(i)) for i in range(2)]
+    with warnings.catch_warnings():
+        warnings.simplefilter("error", StreamOverflowWarning)  # never warns
+        results = eng.render_batch(reqs)
+    assert all(not r.overflow for r in results)
+    assert all(float(r.counters["spill_passes"]) >= 2.0 for r in results)
+    assert eng.telemetry.total_overflow_frames == 0
+    assert eng.spill_retries >= 1          # capacity was learned, not given
+    snap = eng.telemetry.snapshot()
+    assert snap["spill_passes"] >= 2.0
+    assert snap["total_spill_retries"] == eng.spill_retries
+    assert "spill" in eng.telemetry.format_snapshot()
+
+    # Oracle engine: same scene served with an overflow-proof k_max.
+    ref = RenderEngine(CFG, max_batch=8)
+    ref.register_scene(
+        "s", random_scene(jax.random.PRNGKey(8), 300, **DEMO_SCENE_KW),
+        k_max=512)
+    for spill_r, ref_r in zip(results, ref.render_batch(reqs)):
+        np.testing.assert_array_equal(np.asarray(spill_r.image),
+                                      np.asarray(ref_r.image))
+
+
+def test_serving_spill_probe_registration_sizes_pass_bucket():
+    """With probe-measured k_max, the SPILL pass bucket is derived at
+    registration-time quality: the first batch renders with zero retries."""
+    from repro.core import RenderPlan, GridConfig, StreamConfig
+    base = RenderPlan(grid=GridConfig(32, 32),
+                      stream=StreamConfig(k_max=8,
+                                          overflow=OverflowPolicy.SPILL))
+    eng = RenderEngine(base, max_batch=8)
+    scene = random_scene(jax.random.PRNGKey(8), 300, **DEMO_SCENE_KW)
+    probes = [orbit(i) for i in range(4)]
+    eng.register_scene("s", scene, probe_cameras=probes)
+    results = eng.render_batch([RenderRequest("s", c) for c in probes[:2]])
+    assert eng.spill_retries == 0
+    assert all(not r.overflow for r in results)
+    assert all(float(r.counters["spill_passes"]) >= 2.0 for r in results)
+    plan = eng.plan_for("s", 32, 32)
+    assert plan.stream.k_max == 8          # the chunk knob is respected
+    assert plan.stream.max_spill_passes >= 2
+
+
+def test_serving_spill_jit_cache_stable_within_pass_bucket():
+    """Frames whose *actual* spill pass usage differs but stays inside the
+    same pass bucket share one executable — the bucket (not the usage) is
+    the jit-cache key component."""
+    from repro.core import RenderPlan, GridConfig, StreamConfig
+    base = RenderPlan(grid=GridConfig(32, 32),
+                      stream=StreamConfig(k_max=8,
+                                          overflow=OverflowPolicy.SPILL))
+    eng = RenderEngine(base, max_batch=8)
+    scene = random_scene(jax.random.PRNGKey(8), 300, **DEMO_SCENE_KW)
+    eng.register_scene("s", scene, probe_cameras=[orbit(i) for i in range(8)])
+    passes_seen = set()
+    for i in range(6):
+        r, = eng.render_batch([RenderRequest("s", orbit(i))])
+        passes_seen.add(float(r.counters["spill_passes"]))
+    assert eng.compile_count == 1          # one batch bucket, one plan
+    assert eng.spill_retries == 0
+    assert len(passes_seen) >= 1           # usage may vary; cache must not
+
+
+# ---------------------------------------------------------------------------
 # batching / futures
 # ---------------------------------------------------------------------------
 

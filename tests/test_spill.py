@@ -1,0 +1,336 @@
+"""OverflowPolicy.SPILL: two-pass (and n-pass) overflow spill rendering.
+
+The contract under test: with SPILL, a forced-overflow scene (tiny k_max)
+renders *bit-identically* to the dense oracle — images, entry_alive, and
+every workload counter — across {method × CTU backend × fused}, because the
+blend folds entries strictly front-to-back through a carried BlendState and
+the spill passes partition exactly the list a capacity-sized compaction
+would build. CLAMP remains the only policy allowed to diverge (it drops the
+overflow entries by design).
+
+Also here: the stream-path gradient-flow test (ROADMAP "training on the
+stream path") — `jax.grad` of `training.loss_fn` through the stream plan is
+finite, non-zero, and matches the dense-path gradient, including through a
+multi-pass SPILL plan.
+"""
+import warnings
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (random_scene, default_camera, Renderer, RenderPlan,
+                        GridConfig, TestConfig, StreamConfig, RasterConfig,
+                        OverflowPolicy, StreamOverflowWarning, FULL_FP32,
+                        MIXED)
+from repro.core import raster
+from repro.core.gaussians import project
+from repro.core.culling import aabb_mask
+
+SIZE = 32
+N = 250
+
+# Workload counters that must be bit-equal between a SPILL render and the
+# dense oracle (same set as tests/test_stream.py's PARITY_KEYS, minus the
+# quantities that differ *by design*: cat_mask_bytes is the per-pass
+# footprint — the memory SPILL bounds — and spill_passes is the pass count
+# itself; swept_per_pixel is checked where the sweep shapes match).
+SPILL_PARITY_KEYS = (
+    "n_frustum", "ctu_pairs", "ctu_pairs_no_stage1", "ctu_prs",
+    "leader_tests_per_pair", "dup_tile", "dup_subtile", "dup_minitile",
+    "vru_pairs", "vru_pairs_tile_aabb", "processed_per_pixel",
+    "blended_per_pixel", "ctu_pairs_eff", "ctu_prs_eff", "vru_pairs_eff",
+    "ctu_stream_len",
+)
+
+
+@pytest.fixture(scope="module")
+def scene():
+    return random_scene(jax.random.PRNGKey(3), N, scale_range=(-2.9, -2.2),
+                        stretch=4.0, opacity_range=(-1.5, 3.0),
+                        spiky_frac=0.4)
+
+
+@pytest.fixture(scope="module")
+def cam():
+    return default_camera(SIZE, SIZE)
+
+
+def spill_renderer(k_max, passes, *, method="cat", backend="jnp",
+                   fused=False, dataflow="stream"):
+    prec = MIXED if method == "cat" else FULL_FP32
+    return Renderer(
+        grid=GridConfig(SIZE, SIZE),
+        test=TestConfig(method=method, precision=prec, backend=backend),
+        stream=StreamConfig(k_max=k_max, overflow=OverflowPolicy.SPILL,
+                            max_spill_passes=passes),
+        raster=RasterConfig(fused=fused), dataflow=dataflow)
+
+
+def oracle_renderer(capacity, *, method="cat", backend="jnp", fused=False):
+    """Dense-dataflow oracle at a single-pass k_max equal to the spill
+    renderer's total capacity, so the compacted lists line up slot for
+    slot."""
+    prec = MIXED if method == "cat" else FULL_FP32
+    return Renderer(
+        grid=GridConfig(SIZE, SIZE),
+        test=TestConfig(method=method, precision=prec, backend=backend),
+        stream=StreamConfig(k_max=capacity),
+        raster=RasterConfig(fused=fused), dataflow="dense")
+
+
+def check_spill_matches_dense_oracle(scene, cam, *, k_max, passes,
+                                     method="cat", backend="jnp",
+                                     fused=False, check_swept=True):
+    """Shared body of the seeded grid below and the hypothesis property in
+    test_stream_properties.py."""
+    out_s, c_s = spill_renderer(k_max, passes, method=method,
+                                backend=backend, fused=fused) \
+        .render_with_stats(scene, cam)
+    out_d, c_d = oracle_renderer(k_max * passes, method=method,
+                                 backend=backend, fused=fused) \
+        .render_with_stats(scene, cam)
+    # The spill capacity covers the survivors; the oracle never clamps.
+    assert not bool(out_s.overflow)
+    assert not bool(out_d.overflow)
+    np.testing.assert_array_equal(np.asarray(out_s.image),
+                                  np.asarray(out_d.image))
+    np.testing.assert_array_equal(np.asarray(out_s.alpha),
+                                  np.asarray(out_d.alpha))
+    np.testing.assert_array_equal(np.asarray(out_s.processed_per_pixel),
+                                  np.asarray(out_d.processed_per_pixel))
+    np.testing.assert_array_equal(np.asarray(out_s.blended_per_pixel),
+                                  np.asarray(out_d.blended_per_pixel))
+    # entry_alive concatenates the passes along K — slot-for-slot the
+    # oracle's single capacity-sized list.
+    np.testing.assert_array_equal(np.asarray(out_s.entry_alive),
+                                  np.asarray(out_d.entry_alive))
+    for key in SPILL_PARITY_KEYS:
+        if key in c_s:
+            assert float(c_s[key]) == float(c_d[key]), key
+    if check_swept:
+        # Same total sweep: passes * k_max slots vs one capacity-sized list.
+        assert float(c_s["swept_per_pixel"]) == float(c_d["swept_per_pixel"])
+    return c_s
+
+
+# ---------------------------------------------------------------------------
+# Forced-overflow parity grid: {method × backend × fused}
+# ---------------------------------------------------------------------------
+
+SPILL_GRID = [
+    # (method, backend, fused, k_max, passes)
+    ("cat", "jnp", False, 4, 64),
+    ("cat", "jnp", False, 8, 32),
+    ("cat", "pallas", False, 8, 32),
+    ("aabb", "jnp", False, 8, 32),
+    ("obb", "jnp", False, 8, 32),
+    # The fused kernel folds K in blocks of kernels.render.K_BLK; pass
+    # boundaries aligned to the block size keep it bit-exact too.
+    ("cat", "jnp", True, 128, 2),
+    ("cat", "pallas", True, 128, 2),
+]
+
+
+@pytest.mark.parametrize("method,backend,fused,k_max,passes", SPILL_GRID)
+def test_spill_matches_dense_oracle_bit_exact(scene, cam, method, backend,
+                                              fused, k_max, passes):
+    c_s = check_spill_matches_dense_oracle(
+        scene, cam, k_max=k_max, passes=passes, method=method,
+        backend=backend, fused=fused, check_swept=not fused)
+    if k_max <= 8:
+        # tiny k_max really forced multi-pass spilling
+        assert float(c_s["spill_passes"]) >= 2.0
+
+
+def test_spill_forced_overflow_really_overflows(scene, cam):
+    """Sanity for the grid above: at k_max=8 and a single pass the same
+    scene overflows — the spill tests exercise real overflow, not slack."""
+    r = Renderer(grid=GridConfig(SIZE, SIZE),
+                 stream=StreamConfig(k_max=8))
+    out = r.render(scene, cam)
+    assert bool(out.overflow)
+
+
+def test_fused_spill_unaligned_passes_close(scene, cam):
+    """Unaligned (k_max < K_BLK) fused spill passes reassociate the
+    kernel's per-block folds, so exactness is not guaranteed — but the
+    result must stay within float-reassociation distance of the oracle."""
+    out_s, _ = spill_renderer(8, 32, fused=True).render_with_stats(scene,
+                                                                   cam)
+    out_d, _ = oracle_renderer(256, fused=True).render_with_stats(scene,
+                                                                  cam)
+    np.testing.assert_allclose(np.asarray(out_s.image),
+                               np.asarray(out_d.image), atol=1e-6)
+
+
+def test_clamp_diverges_where_spill_matches(scene, cam):
+    """CLAMP at the same tiny k_max must *lose* the overflow entries —
+    strictly less blended work than the SPILL render of the same scene."""
+    out_c, c_c = Renderer(
+        grid=GridConfig(SIZE, SIZE),
+        stream=StreamConfig(k_max=8, overflow=OverflowPolicy.CLAMP)) \
+        .render_with_stats(scene, cam)
+    out_s, c_s = spill_renderer(8, 32).render_with_stats(scene, cam)
+    assert bool(out_c.overflow)
+    assert not bool(out_s.overflow)
+    assert float(c_c["vru_pairs"]) < float(c_s["vru_pairs"])
+    assert not np.array_equal(np.asarray(out_c.image),
+                              np.asarray(out_s.image))
+
+
+# ---------------------------------------------------------------------------
+# Pass structure invariants
+# ---------------------------------------------------------------------------
+
+def test_stage1_compact_emits_per_pass_streams(scene, cam):
+    """The per-pass lists partition the capacity-sized compaction: pass p
+    holds survivors p*k_max..(p+1)*k_max-1, valid slots form a prefix of
+    the concatenation, and every pass shares the global overflow flag."""
+    plan = spill_renderer(8, 32).plan
+    ps = plan.preprocess(scene, cam)
+    streams = plan.stage1_compact(ps)
+    assert len(streams) == 32
+    assert [ts.index for ts in streams] == list(range(32))
+
+    proj = ps.proj
+    mask = aabb_mask(proj, ps.grid.tile_origins(), ps.grid.tile)
+    order = raster.depth_order(proj)
+    full_lists, full_valid, _ = raster.compact_tile_lists(mask, order, 256)
+    cat_lists = np.concatenate([np.asarray(ts.lists) for ts in streams],
+                               axis=1)
+    cat_valid = np.concatenate([np.asarray(ts.valid) for ts in streams],
+                               axis=1)
+    np.testing.assert_array_equal(cat_lists, np.asarray(full_lists))
+    np.testing.assert_array_equal(cat_valid, np.asarray(full_valid))
+    for ts in streams:
+        np.testing.assert_array_equal(np.asarray(ts.overflow),
+                                      np.asarray(streams[0].overflow))
+
+
+def test_spill_capacity_exhaustion_warns(scene, cam):
+    """A spill plan whose total capacity still cannot hold the survivors
+    warns (never silently clamps) and sets the overflow flag."""
+    r = spill_renderer(4, 2)          # capacity 8 « survivor lists
+    with pytest.warns(StreamOverflowWarning, match="spill capacity"):
+        out, _ = r.render_with_stats(scene, cam)
+    assert bool(out.overflow)
+
+
+def test_spill_pass_count_is_static_shape(scene, cam):
+    """A spill plan always runs its configured pass count in-graph (static
+    shapes; empty passes blend nothing) — spill_passes reports the passes
+    that actually carried entries."""
+    r = spill_renderer(256, 4)        # capacity 1024 » survivors
+    out, c = r.render_with_stats(scene, cam)
+    assert out.entry_alive.shape[1] == 4 * 256
+    assert float(c["spill_passes"]) == 1.0
+    # and under jit (shapes must be trace-stable; eager vs jitted differ
+    # by float reassociation only — bitwise checks compare jit to jit)
+    out2, c2 = jax.jit(lambda s: r.plan.render_with_stats(s, cam))(scene)
+    assert out2.entry_alive.shape == out.entry_alive.shape
+    assert float(c2["spill_passes"]) == 1.0
+    np.testing.assert_allclose(np.asarray(out.image),
+                               np.asarray(out2.image), atol=2e-5)
+
+
+def test_spill_batched_render(scene):
+    """vmapped multi-camera rendering through a spill plan: per-frame
+    results equal the single-frame renders (vmap re-fuses float ops, so the
+    comparison is allclose like the serving-batch parity tests); the
+    batched counters stay bit-equal to the per-frame ones."""
+    from repro.core import orbit_camera, stack_cameras
+    cams = [orbit_camera(t, SIZE, SIZE) for t in (0.3, 1.5)]
+    r = spill_renderer(8, 32)
+    out_b, c_b = r.render_batch_with_stats(scene, stack_cameras(cams))
+    assert not bool(np.asarray(out_b.overflow).any())
+    for i, c in enumerate(cams):
+        out_i, c_i = jax.jit(r.plan.render_with_stats)(scene, c)
+        np.testing.assert_allclose(np.asarray(out_b.image[i]),
+                                   np.asarray(out_i.image), atol=1e-5)
+        assert float(c_b["spill_passes"][i]) == float(c_i["spill_passes"])
+        assert float(c_b["vru_pairs"][i]) == float(c_i["vru_pairs"])
+
+
+# ---------------------------------------------------------------------------
+# Carried-state blend invariance (the raster-level property SPILL rides on)
+# ---------------------------------------------------------------------------
+
+def test_blend_pass_chunk_invariance(scene, cam):
+    """Splitting a compacted list at arbitrary points and folding the
+    chunks through the carried BlendState is bit-identical to one sweep —
+    the lax.scan left fold is split-invariant by construction."""
+    proj = project(scene, cam)
+    grid = GridConfig(SIZE, SIZE).make()
+    mask = aabb_mask(proj, grid.tile_origins(), grid.tile)
+    order = raster.depth_order(proj)
+    lists, valid, _ = raster.compact_tile_lists(mask, order, 192)
+
+    whole = raster.render_tiles(proj, grid, lists, valid, None, 0.25)
+    for splits in ((64, 128), (8, 72, 136)):
+        bounds = (0,) + splits + (192,)
+        segs = [(lists[:, a:b], valid[:, a:b], None)
+                for a, b in zip(bounds, bounds[1:])]
+        state = raster.init_blend_state(grid.num_tiles, grid.tile ** 2)
+        alive = []
+        for seg in segs:
+            state, a = raster.blend_pass(proj, grid, *seg, state)
+            alive.append(a)
+        out = raster.finalize_blend(grid, state, 0.25, False,
+                                    jnp.concatenate(alive, axis=1))
+        np.testing.assert_array_equal(np.asarray(whole.image),
+                                      np.asarray(out.image))
+        np.testing.assert_array_equal(np.asarray(whole.alpha),
+                                      np.asarray(out.alpha))
+        np.testing.assert_array_equal(np.asarray(whole.entry_alive),
+                                      np.asarray(out.entry_alive))
+
+
+# ---------------------------------------------------------------------------
+# Gradient flow on the stream path (ROADMAP: training on the stream path)
+# ---------------------------------------------------------------------------
+
+def _grad_through(plan, scene, cam, target):
+    from repro.core.training import loss_fn
+    return jax.grad(loss_fn)(scene, cam, target, plan, 0.2)
+
+
+def test_stream_gradient_matches_dense(scene, cam):
+    """grad(loss_fn) through the default stream plan is finite, non-zero,
+    and matches the dense-path gradient — training can run on the stream
+    dataflow."""
+    target = jnp.zeros((SIZE, SIZE, 3)) + 0.5
+    stream_plan = RenderPlan(grid=GridConfig(SIZE, SIZE),
+                             test=TestConfig(precision=FULL_FP32),
+                             stream=StreamConfig(k_max=N))
+    dense_plan = RenderPlan(grid=GridConfig(SIZE, SIZE),
+                            test=TestConfig(precision=FULL_FP32),
+                            stream=StreamConfig(k_max=N), dataflow="dense")
+    g_s = _grad_through(stream_plan, scene, cam, target)
+    g_d = _grad_through(dense_plan, scene, cam, target)
+    for leaf_s, leaf_d in zip(jax.tree.leaves(g_s), jax.tree.leaves(g_d)):
+        assert bool(jnp.isfinite(leaf_s).all())
+        np.testing.assert_allclose(np.asarray(leaf_s), np.asarray(leaf_d),
+                                   rtol=1e-4, atol=1e-6)
+    assert float(jnp.abs(g_s.colors).max()) > 0.0
+    assert float(jnp.abs(g_s.means).max()) > 0.0
+
+
+def test_spill_gradient_matches_single_pass(scene, cam):
+    """Gradients flow through the multi-pass spill fold and equal the
+    single-pass gradient at the same total capacity."""
+    target = jnp.zeros((SIZE, SIZE, 3)) + 0.5
+    spill_plan = spill_renderer(8, 32).plan
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore")
+        g_s = _grad_through(spill_plan, scene, cam, target)
+    one_pass = RenderPlan(grid=GridConfig(SIZE, SIZE),
+                          test=TestConfig(precision=MIXED),
+                          stream=StreamConfig(k_max=256))
+    g_1 = _grad_through(one_pass, scene, cam, target)
+    for leaf_s, leaf_1 in zip(jax.tree.leaves(g_s), jax.tree.leaves(g_1)):
+        assert bool(jnp.isfinite(leaf_s).all())
+        np.testing.assert_allclose(np.asarray(leaf_s), np.asarray(leaf_1),
+                                   rtol=1e-5, atol=1e-7)
+    assert float(jnp.abs(g_s.colors).max()) > 0.0

@@ -1,17 +1,28 @@
-"""Hypothesis property: stream CAT masks == dense CAT masks gathered at the
-compacted indices, across all 4 sampling modes × {FULL_FP32, MIXED}.
+"""Hypothesis properties over the stream dataflow.
+
+* stream CAT masks == dense CAT masks gathered at the compacted indices,
+  across all 4 sampling modes × {FULL_FP32, MIXED};
+* SPILL parity: under randomly forced overflow (tiny k_max, random pass
+  split), the multi-pass spill render is bit-identical to the dense oracle
+  (images and workload counters) — the invariant tests/test_spill.py pins
+  with a seeded grid, here fuzzed over (seed, n, k_max).
 
 Skipped (whole module) when hypothesis is absent — same convention as
-test_cat.py; tests/test_stream.py covers the same property with fixed seeds
-so the parity is exercised even without hypothesis.
+test_cat.py; tests/test_stream.py and tests/test_spill.py cover the same
+properties with fixed seeds so the parity is exercised even without
+hypothesis.
 """
 import pytest
 hypothesis = pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
+import jax
+
+from repro.core import default_camera, random_scene
 from repro.core.cat import SamplingMode
 from repro.core.precision import FULL_FP32, MIXED
 from test_stream import check_entry_cat_equals_dense_gathered
+from test_spill import check_spill_matches_dense_oracle
 
 
 @pytest.mark.parametrize("prec", [FULL_FP32, MIXED], ids=["fp32", "mixed"])
@@ -20,3 +31,18 @@ from test_stream import check_entry_cat_equals_dense_gathered
 @given(seed=st.integers(0, 2**31 - 1), n=st.integers(50, 400))
 def test_entry_cat_equals_dense_cat_gathered_property(mode, prec, seed, n):
     check_entry_cat_equals_dense_gathered(mode, prec, seed, n)
+
+
+@pytest.mark.parametrize("method", ["cat", "aabb"])
+@settings(deadline=None, max_examples=4)
+@given(seed=st.integers(0, 2**31 - 1), n=st.integers(80, 300),
+       k_max=st.sampled_from([4, 8, 16]))
+def test_spill_matches_dense_oracle_property(method, seed, n, k_max):
+    scene = random_scene(jax.random.PRNGKey(seed), n,
+                         scale_range=(-2.9, -2.2), stretch=4.0,
+                         opacity_range=(-1.5, 3.0), spiky_frac=0.4)
+    cam = default_camera(32, 32)
+    # enough passes to cover every possible survivor list (<= n entries)
+    passes = -(-n // k_max)
+    check_spill_matches_dense_oracle(scene, cam, k_max=k_max, passes=passes,
+                                     method=method)
