@@ -10,6 +10,17 @@ is the speedup over batch size 1.
 
     PYTHONPATH=src python benchmarks/serve_throughput.py [--pallas-too]
                                                          [--fused-too]
+                                                         [--trace PATH]
+
+With `--trace PATH` the script additionally renders one compile batch and
+one steady-state batch on a fresh engine under a span tracer and writes
+the Chrome trace to PATH. Load it at https://ui.perfetto.dev ("Open trace
+file"; chrome://tracing also works): the first `engine.render_batch` slice
+contains `jit_render` with `compile=true` and the full stage tree
+(preprocess / stage1_compact / ctu / blend / finalize) that jit tracing
+walked through; the second shows the cache-hit dispatch with no stage
+children — the compile-vs-execute split, visually. Span attributes (pass
+index, k_max, survivor counts) are in the Perfetto details pane.
 
 Notes: (1) with large scenes/resolutions on CPU the per-frame compute
 (hundreds of ms) swamps dispatch overhead and the curve flattens into
@@ -30,6 +41,7 @@ import jax
 
 from repro.core import (random_scene, orbit_camera, Renderer, TestConfig,
                         RasterConfig)
+from repro.obs import Tracer, use_tracer, write_chrome_trace
 from repro.serving import RenderEngine, RenderRequest
 
 
@@ -60,6 +72,26 @@ def bench_backend(label: str, renderer: Renderer, args) -> list[dict]:
     return rows
 
 
+def capture_trace(path: str, args) -> None:
+    """One compile batch + one steady-state batch on a fresh engine, span
+    tree written as a Chrome trace (see the module docstring for how to
+    read it in Perfetto)."""
+    engine = RenderEngine(Renderer(), max_batch=max(args.batches))
+    engine.register_scene("bench", random_scene(
+        jax.random.PRNGKey(0), args.gaussians, scale_range=(-2.9, -2.4),
+        stretch=4.0, opacity_range=(-1.0, 3.0)))
+    bs = max(args.batches)
+    reqs = [RenderRequest("bench", orbit_camera(2 * np.pi * i / bs,
+                                                args.res, args.res))
+            for i in range(bs)]
+    tracer = Tracer()
+    with use_tracer(tracer):
+        engine.render_batch(reqs)   # compile: stage spans under jit_render
+        engine.render_batch(reqs)   # execute: cache hit, no stage children
+    n = write_chrome_trace(tracer, path)
+    print(f"trace: {n} spans -> {path} (open in https://ui.perfetto.dev)")
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--gaussians", type=int, default=100)
@@ -73,9 +105,15 @@ def main():
                     help="also run the fused contribution-aware raster "
                          "path (Pallas blend kernel with in-kernel early "
                          "termination; interpreted on CPU)")
+    ap.add_argument("--trace", metavar="PATH",
+                    help="write a Chrome/Perfetto trace of one compile + "
+                         "one steady-state batch to PATH")
     args = ap.parse_args()
     # The eff baseline and trend check assume ascending batch sizes.
     args.batches = sorted(set(args.batches))
+
+    if args.trace:
+        capture_trace(args.trace, args)
 
     rows = bench_backend("jnp", Renderer(), args)
     if args.pallas_too:

@@ -11,7 +11,15 @@ assembled from per-stage configs (`TestConfig` for the hierarchical test,
 (`probe_cameras=`), and whole batches render in one vmapped+jitted call
 (`RenderPlan.render_batch_with_stats` under the hood).
 
-    PYTHONPATH=src python examples/quickstart.py [--fast]
+    PYTHONPATH=src python examples/quickstart.py [--fast] [--trace PATH]
+
+With `--trace PATH` the flicker-cat plan additionally renders one frame
+eagerly under a span tracer and writes the Chrome trace to PATH — load it
+at https://ui.perfetto.dev ("Open trace file") to see the staged pipeline
+as nested slices: `render` -> `preprocess` -> `stage1_compact` ->
+`ctu[pass=i]` -> `blend[pass=i]` -> `finalize`, with per-stage workload
+counters (survivors, vru_pairs, blended deltas) in the details pane. See
+docs/observability.md for the full span taxonomy.
 """
 import argparse
 
@@ -19,10 +27,11 @@ import jax
 import numpy as np
 
 from repro.core import (random_scene, orbit_camera, project, TileGrid,
-                        Renderer, TestConfig, RasterConfig, SamplingMode,
-                        psnr, MIXED, FULL_FP32)
+                        Renderer, GridConfig, TestConfig, RasterConfig,
+                        SamplingMode, psnr, MIXED, FULL_FP32)
 from repro.core import perfmodel as pm
 from repro.core.raster import render_reference
+from repro.obs import Tracer, use_tracer, write_chrome_trace
 from repro.serving import RenderEngine, RenderRequest
 
 
@@ -30,6 +39,9 @@ def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--fast", action="store_true",
                     help="small scene (CI smoke): ~10x faster")
+    ap.add_argument("--trace", metavar="PATH",
+                    help="write a Chrome/Perfetto trace of one eager "
+                         "flicker-cat render to PATH")
     args = ap.parse_args()
     n, res = (1200, 64) if args.fast else (4000, 128)
 
@@ -86,6 +98,15 @@ def main():
         print(f"{name:14s} {quality:7.2f} "
               f"{counters['processed_per_pixel']:8.1f} {swept:9.1f} "
               f"{fps:10.0f}")
+
+    if args.trace:
+        tracer = Tracer()
+        traced = configs["flicker-cat"].replace(grid=GridConfig(res, res))
+        with use_tracer(tracer):
+            traced.render_with_stats(scene, cameras[0])
+        n = write_chrome_trace(tracer, args.trace)
+        print(f"\ntrace: {n} spans -> {args.trace} "
+              "(open in https://ui.perfetto.dev)")
 
     print("\nFLICKER processes ~1/5 the Gaussians per pixel at matched "
           "quality — that\nskipped work is the paper's speed/energy win. "

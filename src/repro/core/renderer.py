@@ -55,6 +55,7 @@ import jax.numpy as jnp
 
 from repro.core.gaussians import GaussianScene, Projected, project, \
     classify_spiky
+from repro.obs import trace as obs_trace
 from repro.core.culling import TileGrid, aabb_mask
 from repro.core.cat import SamplingMode
 from repro.core import hierarchy as H
@@ -372,35 +373,60 @@ class RenderPlan:
         out, counters, _ = self._blend_passes(ps, [hout])
         return out, counters
 
-    def _blend_passes(self, ps: ProjectedScene, houts):
+    def _blend_passes(self, ps: ProjectedScene, houts, tracer=None):
         """Blend the spill passes front-to-back from one carried state.
 
         Returns (RenderOut, blend counters dict, per-pass entry_alive list).
         The RenderOut's entry_alive concatenates the passes along K, so it
         lines up entry-for-entry with a single dense pass of the same total
         capacity.
+
+        Each pass's fold is bracketed by a host-side `blend` span (see
+        `repro.obs.trace`): the unfused path runs the same
+        init -> `raster.blend_pass` per pass -> `raster.finalize_blend`
+        sequence `raster.render_tiles` composes, so the per-pass spans cost
+        nothing and the output stays bit-identical.
         """
+        if tracer is None:
+            tracer = obs_trace.current()
         proj, grid = ps.proj, ps.grid
+        live = tracer.enabled and not obs_trace.is_traced(proj)
         counters: dict = {}
         if self.raster.fused:
             from repro.kernels import ops as kops
             out, fused_counters = kops.render_tiles_fused_passes(
                 proj, grid,
                 [(h.lists, h.valid, h.entry_mini_mask) for h in houts],
-                self.raster.background, houts[0].overflow)
+                self.raster.background, houts[0].overflow,
+                span_cb=lambda i: tracer.span(
+                    "blend", {"pass": i, "backend": "pallas"}))
             counters.update(fused_counters)
             k = houts[0].lists.shape[1]
             alive_parts = [out.entry_alive[:, i * k:(i + 1) * k]
                            for i in range(len(houts))]
         else:
-            first, rest = houts[0], houts[1:]
-            out = raster.render_tiles(
-                proj, grid, first.lists, first.valid, first.entry_mini_mask,
-                self.raster.background, first.overflow,
-                passes=[(h.lists, h.valid, h.entry_mini_mask) for h in rest])
-            k = houts[0].lists.shape[1]
-            alive_parts = [out.entry_alive[:, i * k:(i + 1) * k]
-                           for i in range(len(houts))]
+            state = raster.init_blend_state(grid.num_tiles, grid.tile ** 2)
+            alive_parts = []
+            prev_proc = prev_blend = 0.0
+            for i, h in enumerate(houts):
+                with tracer.span("blend",
+                                 {"pass": i, "backend": "jnp"}) as sp:
+                    state, alive = raster.blend_pass(
+                        proj, grid, h.lists, h.valid, h.entry_mini_mask,
+                        state)
+                    tracer.block((state, alive))
+                    if live:
+                        proc = float(jnp.sum(state.processed))
+                        blend = float(jnp.sum(state.blended))
+                        sp.set(processed_delta=proc - prev_proc,
+                               blended_delta=blend - prev_blend,
+                               entries_alive=float(jnp.sum(alive)))
+                        prev_proc, prev_blend = proc, blend
+                alive_parts.append(alive)
+            entry_alive = (alive_parts[0] if len(alive_parts) == 1
+                           else jnp.concatenate(alive_parts, axis=1))
+            out = raster.finalize_blend(grid, state, self.raster.background,
+                                        houts[0].overflow, entry_alive)
             # The unfused sweep always walks every padded list slot.
             counters["swept_per_pixel"] = jnp.asarray(
                 float(sum(h.lists.shape[1] for h in houts)), jnp.float32)
@@ -432,32 +458,92 @@ class RenderPlan:
         evaluation and one blend fold per compacted pass, sharing a single
         carried `raster.BlendState` — so overflow entries render instead of
         being clamped, while per-pass mask memory stays at the k_max size.
+
+        Every call emits a host-side span tree on the active tracer
+        (`repro.obs.trace`, NoopTracer by default = zero cost):
+
+            render
+            ├── preprocess
+            ├── stage1_compact
+            ├── ctu   [pass=i]   (x n_passes, with that pass's CTU counters)
+            ├── blend [pass=i]   (x n_passes, with processed/blended deltas)
+            └── finalize
+
+        Span walls are `jax.block_until_ready`-bounded on eager (concrete)
+        renders; under jit/vmap tracing the spans carry `traced=True` and
+        measure trace time (the compile side of the compile-vs-execute
+        split — see docs/observability.md). `plan_first_call` on the root
+        marks the first render this tracer saw for this exact plan.
         """
-        ps = self.preprocess(scene, camera)
-        streams = self.stage1_compact(ps)
-        houts = [self.ctu(ps, ts) for ts in streams]
-        counters = self._merge_hout_counters(houts)
-        if self.test.method == "cat":
-            counters["cat_mask_bytes"] = jnp.asarray(
-                float(cat_mask_elems(ps.grid, ps.proj.depth.shape[0],
-                                     self.stream.k_max, self.dataflow)),
-                jnp.float32)
-        out, blend_counters, alive_parts = self._blend_passes(ps, houts)
-        counters.update(blend_counters)
-        if self.test.method == "cat":
-            eff: dict = {}
-            for ts, hout, alive in zip(streams, houts, alive_parts):
-                for key, v in self._effective_counters(ps, ts, hout,
-                                                       alive).items():
-                    eff[key] = v if key not in eff else eff[key] + v
-            counters.update(eff)
-        # How many passes actually carried entries (>= 1 even on an empty
-        # frame, so the counter always reads as a pass count).
-        counters["spill_passes"] = jnp.maximum(
-            sum(jnp.any(h.valid) for h in houts), 1).astype(jnp.float32)
-        enforce_overflow_policy(out.overflow, self.stream.overflow,
-                                k_max=self.stream.k_max,
-                                n_passes=self.n_passes)
+        tracer = obs_trace.current()
+        with tracer.span("render") as root:
+            live = tracer.enabled and not obs_trace.is_traced(
+                (scene, camera))
+            if tracer.enabled:
+                root.set(dataflow=self.dataflow, method=self.test.method,
+                         k_max=self.stream.k_max, n_passes=self.n_passes,
+                         overflow_policy=self.stream.overflow.value,
+                         fused=self.raster.fused,
+                         height=self.grid.height, width=self.grid.width,
+                         plan_first_call=tracer.mark_first(self),
+                         traced=not live)
+            with tracer.span("preprocess") as sp:
+                ps = self.preprocess(scene, camera)
+                tracer.block(ps)
+                if tracer.enabled:
+                    sp.set(n_gaussians=int(ps.proj.depth.shape[0]),
+                           tiles=int(ps.grid.num_tiles))
+            with tracer.span("stage1_compact") as sp:
+                streams = self.stage1_compact(ps)
+                tracer.block(streams)
+                if live:
+                    sp.set(survivors_per_pass=[
+                        float(jnp.sum(ts.valid)) for ts in streams],
+                        overflow=bool(streams[0].overflow))
+            houts = []
+            for ts in streams:
+                with tracer.span("ctu", {"pass": ts.index}) as sp:
+                    hout = self.ctu(ps, ts)
+                    tracer.block(hout)
+                    if live and hout.counters:
+                        sp.set(**{k: float(v)
+                                  for k, v in hout.counters.items()
+                                  if jnp.ndim(v) == 0})
+                houts.append(hout)
+            counters = self._merge_hout_counters(houts)
+            if self.test.method == "cat":
+                counters["cat_mask_bytes"] = jnp.asarray(
+                    float(cat_mask_elems(ps.grid, ps.proj.depth.shape[0],
+                                         self.stream.k_max, self.dataflow)),
+                    jnp.float32)
+            out, blend_counters, alive_parts = self._blend_passes(
+                ps, houts, tracer)
+            with tracer.span("finalize") as sp:
+                counters.update(blend_counters)
+                if self.test.method == "cat":
+                    eff: dict = {}
+                    for ts, hout, alive in zip(streams, houts, alive_parts):
+                        for key, v in self._effective_counters(
+                                ps, ts, hout, alive).items():
+                            eff[key] = v if key not in eff else eff[key] + v
+                    counters.update(eff)
+                # How many passes actually carried entries (>= 1 even on an
+                # empty frame, so the counter always reads as a pass count).
+                counters["spill_passes"] = jnp.maximum(
+                    sum(jnp.any(h.valid) for h in houts),
+                    1).astype(jnp.float32)
+                tracer.block((out, counters))
+                if live:
+                    sp.set(spill_passes=float(counters["spill_passes"]),
+                           overflow=bool(out.overflow))
+                    root.set(**{k: float(counters[k]) for k in
+                                ("processed_per_pixel", "blended_per_pixel",
+                                 "vru_pairs", "spill_passes")
+                                if k in counters and
+                                jnp.ndim(counters[k]) == 0})
+                enforce_overflow_policy(out.overflow, self.stream.overflow,
+                                        k_max=self.stream.k_max,
+                                        n_passes=self.n_passes)
         return out, counters
 
     def render(self, scene: GaussianScene, camera) -> raster.RenderOut:

@@ -15,6 +15,8 @@ counters into the pipeline's `RenderOut` + counters-dict convention.
 """
 from __future__ import annotations
 
+import contextlib
+
 import jax
 import jax.numpy as jnp
 
@@ -173,7 +175,7 @@ def render_tiles_fused(proj, grid, lists, valid, entry_mask=None,
 def render_tiles_fused_passes(proj, grid, passes,
                               background: float = 0.0,
                               overflow: jax.Array | bool = False,
-                              interpret: bool = True):
+                              interpret: bool = True, *, span_cb=None):
     """Fused-kernel blend over one or more compacted spill passes.
 
     passes: sequence of (lists (T, K), valid, entry_mask) — consecutive
@@ -201,15 +203,23 @@ def render_tiles_fused_passes(proj, grid, passes,
     `alpha` is derived as 1 - transmittance — the identity sum(T_excl·a) =
     1 - prod(1-a) holds telescopically inside the kernel too, so it equals
     the blended accumulation exactly up to the terminated tail (< T_EPS).
+
+    span_cb: optional `span_cb(pass_index)` returning a context manager —
+    the renderer passes the active tracer's `blend[pass=i]` span so the
+    fused pass loop shows up in the host-side span tree (obs is never
+    imported here; a None default keeps the kernel layer standalone).
     """
     state = None
     alive_parts = []
     kproc = jnp.zeros((), jnp.float32)
     kblocks_total = 0
-    for lists, valid, entry_mask in passes:
-        fb = blend_tiles_fused_pallas(proj, grid, lists, valid, entry_mask,
-                                      init=state, interpret=interpret)
-        state = (fb.trans, fb.rgb, fb.processed, fb.blended)
+    for i, (lists, valid, entry_mask) in enumerate(passes):
+        with (span_cb(i) if span_cb is not None
+              else contextlib.nullcontext()):
+            fb = blend_tiles_fused_pallas(proj, grid, lists, valid,
+                                          entry_mask, init=state,
+                                          interpret=interpret)
+            state = (fb.trans, fb.rgb, fb.processed, fb.blended)
         alive_parts.append(fb.entry_alive)
         kproc = kproc + jnp.sum(fb.kblocks_processed).astype(jnp.float32)
         kblocks_total += fb.kblocks_total

@@ -1,0 +1,30 @@
+"""Observability for the render pipeline: span tracing, a process-wide
+metrics registry, and exporters.
+
+    trace    — `Tracer` (nested host-side spans around the plan stages and
+               the serving engine's jitted dispatches; NoopTracer default =
+               zero cost when disabled), `use_tracer`, `current`
+    metrics  — `MetricsRegistry` (counters/gauges/histograms with label
+               sets, Prometheus text exposition), `get_registry`
+    export   — JSONL span logs, Chrome trace-event JSON for Perfetto,
+               metrics file dump, guarded `jax.profiler.trace` pass-through
+
+See docs/observability.md for the span taxonomy and the metrics catalog.
+"""
+from repro.obs.trace import (Span, Tracer, NoopTracer, current, set_tracer,
+                             use_tracer, is_traced)
+from repro.obs.metrics import (MetricsRegistry, Counter, Gauge, Histogram,
+                               get_registry)
+from repro.obs.export import (span_records, write_jsonl, read_jsonl,
+                              chrome_trace, write_chrome_trace,
+                              prometheus_text, write_metrics,
+                              jax_profiler_trace)
+
+__all__ = [
+    "Span", "Tracer", "NoopTracer", "current", "set_tracer", "use_tracer",
+    "is_traced",
+    "MetricsRegistry", "Counter", "Gauge", "Histogram", "get_registry",
+    "span_records", "write_jsonl", "read_jsonl", "chrome_trace",
+    "write_chrome_trace", "prometheus_text", "write_metrics",
+    "jax_profiler_trace",
+]

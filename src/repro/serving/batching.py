@@ -18,6 +18,8 @@ import time
 from concurrent.futures import Future
 from typing import Optional
 
+import numpy as np
+
 from repro.core import Camera
 from repro.serving.engine import RenderEngine, RenderRequest, FrameResult
 
@@ -105,4 +107,17 @@ class MicroBatcher:
                         total_s=t_done - p.t_submit,
                     ))
                 served += len(chunk)
+                self._publish_batch(chunk, t_dispatch, frames[0].render_s)
         return served
+
+    def _publish_batch(self, chunk, t_dispatch: float, render_s: float):
+        """Per-batch queue-wait vs render split into the metrics registry —
+        the knob that says whether latency is paid waiting for a flush tick
+        or inside the compiled render (see docs/observability.md)."""
+        reg = self.engine.telemetry.registry
+        queue_s = float(np.mean([t_dispatch - p.t_submit for p in chunk]))
+        reg.histogram("serve_queue_wait_seconds",
+                      "Mean submit->dispatch wait per batch"
+                      ).observe(queue_s)
+        reg.histogram("serve_render_seconds",
+                      "Render wall per dispatched batch").observe(render_s)

@@ -60,6 +60,7 @@ from repro.core import (GaussianScene, Camera, pad_scene, stack_cameras,
                         Renderer, RenderPlan, RenderConfig, OverflowPolicy,
                         frame_counters, measure_k_max, as_plan)
 from repro.core.renderer import enforce_overflow_policy, next_pow2
+from repro.obs import trace as obs_trace
 from repro.serving import sharding as shd
 from repro.serving.telemetry import Telemetry
 
@@ -202,6 +203,12 @@ class RenderEngine:
         entry = _SceneEntry(scene=padded, n_real=n_real, n_bucket=n_bucket,
                             k_max=k_max if k_max is not None else n_bucket)
         self._scenes[name] = entry
+        reg = self.telemetry.registry
+        reg.gauge("engine_scene_k_max", "Per-scene Stage-1 list capacity "
+                  "(probe-measured or given; scene bucket when defaulted)",
+                  ("scene",)).set(entry.k_max, scene=name)
+        reg.gauge("engine_scene_gaussians", "Registered (real) Gaussian "
+                  "count per scene", ("scene",)).set(n_real, scene=name)
         return entry
 
     def scene(self, name: str) -> GaussianScene:
@@ -252,14 +259,23 @@ class RenderEngine:
         return RenderConfig.from_plan(self.plan_for(name, height, width))
 
     def _render_fn(self, n_bucket: int, plan: RenderPlan, bucket: int):
+        """Returns (jitted fn, compiled: bool) — compiled=True on a cache
+        miss, i.e. this call will trace + compile when first invoked."""
         key = (n_bucket, plan, bucket)
         fn = self._cache.get(key)
-        if fn is None:
+        compiled = fn is None
+        if compiled:
             self.compile_count += 1
             fn = jax.jit(
                 lambda scene, cams: plan.render_batch_with_stats(scene, cams))
             self._cache[key] = fn
-        return fn
+            reg = self.telemetry.registry
+            reg.counter("engine_compiles_total",
+                        "Jit-cache misses (traces + compiles)").inc()
+            reg.gauge("engine_jit_cache_size",
+                      "Compiled executables held by the engine"
+                      ).set(len(self._cache))
+        return fn, compiled
 
     # -- rendering ----------------------------------------------------------
 
@@ -296,27 +312,44 @@ class RenderEngine:
         if self.mesh is not None:
             cams = shd.shard_frames(cams, self.mesh)
 
+        tracer = obs_trace.current()
         retries = 0
         t0 = time.perf_counter()   # spans retries: render_s is the wall the
-        while True:                # batch actually cost, failed passes incl.
-            plan = self.plan_for(name, height, width)
-            fn = self._render_fn(entry.n_bucket, plan, bucket)
-            out, counters = jax.block_until_ready(fn(entry.scene, cams))
-            dt = time.perf_counter() - t0
-            frame_overflow = np.asarray(out.overflow)[:n]
-            overflow_frames = int(frame_overflow.sum())
-            spill = plan.stream.overflow is OverflowPolicy.SPILL
-            capacity = plan.stream.k_max * plan.stream.max_spill_passes
-            if overflow_frames and spill and capacity < entry.n_bucket:
-                # Off-probe traffic exhausted the spill capacity: double the
-                # scene's pass bucket (it sticks) and re-render — SPILL
-                # frames never ship clamped.
-                self._spill_boost[name] = \
-                    2 * self._spill_boost.get(name, 1)
-                self.spill_retries += 1
-                retries += 1
-                continue
-            break
+        with tracer.span("engine.render_batch",
+                         {"scene": name, "batch": n, "bucket": bucket,
+                          "res": f"{width}x{height}"}) as batch_span:
+            while True:            # batch actually cost, failed passes incl.
+                plan = self.plan_for(name, height, width)
+                fn, compiled = self._render_fn(entry.n_bucket, plan, bucket)
+                # Under an enabled tracer a cache miss nests the plan's
+                # stage spans (traced=True) below this one — that is the
+                # compile side of the compile-vs-execute split; a cache hit
+                # is pure execute (no stage spans re-enter Python).
+                with tracer.span("jit_render",
+                                 {"compile": compiled,
+                                  "n_passes": plan.stream.max_spill_passes,
+                                  "k_max": plan.stream.k_max}):
+                    out, counters = jax.block_until_ready(
+                        fn(entry.scene, cams))
+                dt = time.perf_counter() - t0
+                frame_overflow = np.asarray(out.overflow)[:n]
+                overflow_frames = int(frame_overflow.sum())
+                spill = plan.stream.overflow is OverflowPolicy.SPILL
+                capacity = plan.stream.k_max * plan.stream.max_spill_passes
+                if overflow_frames and spill and capacity < entry.n_bucket:
+                    # Off-probe traffic exhausted the spill capacity:
+                    # double the scene's pass bucket (it sticks) and
+                    # re-render — SPILL frames never ship clamped.
+                    self._spill_boost[name] = \
+                        2 * self._spill_boost.get(name, 1)
+                    self.spill_retries += 1
+                    retries += 1
+                    continue
+                break
+            if tracer.enabled:
+                batch_span.set(retries=retries,
+                               overflow_frames=overflow_frames,
+                               wall_s=dt)
 
         # Drop padding frames, then report the *real* Gaussian count — the
         # perf model's preprocessing/DRAM terms should not charge for inert

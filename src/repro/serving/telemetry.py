@@ -6,16 +6,25 @@ its per-frame FLICKER counters; `snapshot()` folds the rolling window into
 p50/p95/p99 request latency, host frames/sec, and — through
 `core.perfmodel` — the FPS the FLICKER ASIC would sustain on the same
 per-frame workload (the serving-level analogue of the paper's Fig. 10).
+
+Every `record_batch` also publishes into a `repro.obs.metrics` registry
+(the process default unless one is passed in), so the rolling window's
+process-wide complement — lifetime totals, latency histograms — is
+scrapeable in Prometheus text format alongside the engine-level metrics
+(`RenderEngine` publishes jit-cache size / compiles / per-scene k_max into
+the same registry). See docs/observability.md for the catalog.
 """
 from __future__ import annotations
 
 import collections
 import dataclasses
 import time
+from typing import Optional
 
 import numpy as np
 
 from repro.core import perfmodel as pm
+from repro.obs import metrics as obs_metrics
 
 
 @dataclasses.dataclass(frozen=True)
@@ -33,8 +42,11 @@ class BatchRecord:
 class Telemetry:
     """Rolling window over the last `window` batches."""
 
-    def __init__(self, window: int = 256, hw: pm.HwConfig = pm.FLICKER_HW):
+    def __init__(self, window: int = 256, hw: pm.HwConfig = pm.FLICKER_HW,
+                 registry: Optional[obs_metrics.MetricsRegistry] = None):
         self.hw = hw
+        self.registry = (registry if registry is not None
+                         else obs_metrics.get_registry())
         self._records: collections.deque[BatchRecord] = \
             collections.deque(maxlen=window)
         self.total_frames = 0
@@ -78,7 +90,34 @@ class Telemetry:
         self.total_batches += 1
         self.total_overflow_frames += overflow_frames
         self.total_spill_retries += spill_retries
+        self._publish(rec, height, width)
         return rec
+
+    def _publish(self, rec: BatchRecord, height: int, width: int):
+        """Mirror the batch into the metrics registry (lifetime view)."""
+        reg, res = self.registry, f"{width}x{height}"
+        reg.counter("render_batches_total", "Batches rendered",
+                    ("res",)).inc(res=res)
+        reg.counter("render_frames_total", "Frames rendered (real, "
+                    "excluding bucket padding)", ("res",)
+                    ).inc(rec.batch_size, res=res)
+        reg.counter("render_overflow_frames_total",
+                    "Frames whose Stage-1 lists overflowed k_max"
+                    ).inc(rec.overflow_frames)
+        reg.counter("render_spill_retries_total",
+                    "SPILL re-renders after capacity exhaustion "
+                    "(each one a recompile at a doubled pass bucket)"
+                    ).inc(rec.spill_retries)
+        reg.histogram("render_batch_latency_seconds",
+                      "Wall-clock per rendered batch", ("res",)
+                      ).observe(rec.latency_s, res=res)
+        reg.gauge("render_modeled_fps",
+                  "Modeled FLICKER FPS of the most recent batch"
+                  ).set(rec.modeled_fps)
+        if "spill_passes" in rec.counters:
+            reg.gauge("render_spill_passes",
+                      "Mean spill passes used by the most recent batch"
+                      ).set(rec.counters["spill_passes"])
 
     def snapshot(self) -> dict:
         """Fold the window into a stats dict (all python scalars)."""
@@ -99,7 +138,12 @@ class Telemetry:
         # but idle/compile time before the window does not).
         span = max(recs[-1].t_done - (recs[0].t_done - recs[0].latency_s),
                    1e-9)
-        keys = recs[0].counters.keys()
+        # Aggregate over the UNION of counter keys across the window: a
+        # counter that first appears mid-window (e.g. `spill_passes` after
+        # an engine swap, or any newly added additive counter) must not be
+        # silently dropped just because the window's oldest record predates
+        # it. Records that lack a key contribute 0 to its mean.
+        keys = sorted(set().union(*(r.counters.keys() for r in recs)))
         agg = {k: float(np.mean([r.counters.get(k, 0.0) for r in recs]))
                for k in keys}
         return dict(

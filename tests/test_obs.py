@@ -1,0 +1,310 @@
+"""Observability: span tracing, metrics registry, exporters, bench_diff.
+
+The contract under test (see docs/observability.md): an enabled tracer
+wrapping an eager `render_with_stats` yields the span tree
+`render -> preprocess, stage1_compact, ctu[pass=i], blend[pass=i],
+finalize` with per-stage workload attribution that sums to the frame's
+counters; a disabled (Noop) tracer records nothing and leaves the images
+bit-identical; the serving engine's `jit_render` spans carry the
+compile-vs-execute split; and the metrics registry exposes valid
+Prometheus text.
+"""
+import importlib.util
+import json
+import pathlib
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (Renderer, GridConfig, TestConfig, StreamConfig,
+                        OverflowPolicy, SamplingMode, MIXED,
+                        default_camera, orbit_camera)
+from repro.obs import (Tracer, NoopTracer, use_tracer, current,
+                       MetricsRegistry, chrome_trace, span_records,
+                       write_jsonl, read_jsonl)
+from repro.serving import RenderEngine, RenderRequest
+from repro.serving.telemetry import Telemetry
+
+SIZE = 32
+
+
+def spill_renderer(k_max=64, passes=3):
+    return Renderer(
+        grid=GridConfig(SIZE, SIZE),
+        test=TestConfig(method="cat", mode=SamplingMode.SMOOTH_FOCUSED,
+                        precision=MIXED),
+        stream=StreamConfig(k_max=k_max, overflow=OverflowPolicy.SPILL,
+                            max_spill_passes=passes))
+
+
+@pytest.fixture(scope="module")
+def spill_scene():
+    from repro.core import random_scene
+    return random_scene(jax.random.PRNGKey(3), 700,
+                        scale_range=(-2.5, -2.0), stretch=4.0,
+                        opacity_range=(-2.0, 3.5))
+
+
+@pytest.fixture(scope="module")
+def cam():
+    return default_camera(SIZE, SIZE)
+
+
+# -- span tree ---------------------------------------------------------------
+
+def test_span_tree_shape_and_order(spill_scene, cam):
+    r = spill_renderer()
+    with use_tracer(Tracer()) as t:
+        r.render_with_stats(spill_scene, cam)
+    (root,) = t.roots
+    assert root.name == "render"
+    n_passes = int(root.attrs["n_passes"])
+    assert n_passes >= 2          # the point of a SPILL smoke scene
+    names = [c.name for c in root.children]
+    assert names == (["preprocess", "stage1_compact"]
+                     + ["ctu"] * n_passes + ["blend"] * n_passes
+                     + ["finalize"])
+    assert [c.attrs["pass"] for c in root.find("ctu")] == \
+        list(range(n_passes))
+    assert [c.attrs["pass"] for c in root.find("blend")] == \
+        list(range(n_passes))
+    # parent/child ids are consistent
+    for c in root.children:
+        assert c.parent_id == root.span_id
+    # every span closed with a non-negative wall
+    for s in root.walk():
+        assert s.t1 >= s.t0
+
+
+def test_counter_delta_attribution(spill_scene, cam):
+    r = spill_renderer()
+    with use_tracer(Tracer()) as t:
+        out, counters = r.render_with_stats(spill_scene, cam)
+    (root,) = t.roots
+    # per-pass CTU work sums to the frame's vru_pairs counter
+    vru = sum(s.attrs["vru_pairs"] for s in root.find("ctu"))
+    assert vru == pytest.approx(float(counters["vru_pairs"]), rel=1e-6)
+    # per-pass blend deltas telescope to the frame totals
+    proc = sum(s.attrs["processed_delta"] for s in root.find("blend"))
+    blend = sum(s.attrs["blended_delta"] for s in root.find("blend"))
+    assert proc == pytest.approx(float(jnp.sum(out.processed_per_pixel)),
+                                 rel=1e-6)
+    assert blend == pytest.approx(float(jnp.sum(out.blended_per_pixel)),
+                                  rel=1e-6)
+    # root carries the per-pixel rollups
+    px = out.image.shape[0] * out.image.shape[1]
+    assert root.attrs["processed_per_pixel"] == \
+        pytest.approx(proc / px, rel=1e-5)
+
+
+def test_plan_first_call_fires_once_per_plan(spill_scene, cam):
+    r1, r2 = spill_renderer(), spill_renderer(k_max=96, passes=2)
+    with use_tracer(Tracer()) as t:
+        r1.render_with_stats(spill_scene, cam)
+        r1.render_with_stats(spill_scene, cam)
+        r2.render_with_stats(spill_scene, cam)
+    firsts = [root.attrs["plan_first_call"] for root in t.roots]
+    assert firsts == [True, False, True]
+
+
+def test_disabled_tracer_is_noop_and_bit_identical(spill_scene, cam):
+    r = spill_renderer()
+    assert isinstance(current(), NoopTracer)   # default state
+    out_plain, c_plain = r.render_with_stats(spill_scene, cam)
+
+    noop = NoopTracer()
+    with use_tracer(noop):
+        out_noop, c_noop = r.render_with_stats(spill_scene, cam)
+    assert noop.spans() == []
+
+    with use_tracer(Tracer()) as t:
+        out_traced, c_traced = r.render_with_stats(spill_scene, cam)
+    assert len(t.spans()) > 0
+
+    np.testing.assert_array_equal(np.asarray(out_plain.image),
+                                  np.asarray(out_noop.image))
+    np.testing.assert_array_equal(np.asarray(out_plain.image),
+                                  np.asarray(out_traced.image))
+    for k in c_plain:
+        np.testing.assert_array_equal(np.asarray(c_plain[k]),
+                                      np.asarray(c_traced[k]))
+
+
+def test_tracer_restored_after_use(spill_scene, cam):
+    before = current()
+    with use_tracer(Tracer()):
+        pass
+    assert current() is before
+
+
+# -- serving: compile-vs-execute split ---------------------------------------
+
+def test_engine_compile_split_and_metrics(spill_scene):
+    reg = MetricsRegistry()
+    eng = RenderEngine(Renderer(), max_batch=2,
+                       telemetry=Telemetry(registry=reg))
+    eng.register_scene("s", spill_scene)
+    reqs = [RenderRequest("s", orbit_camera(0.3, SIZE, SIZE)),
+            RenderRequest("s", orbit_camera(0.9, SIZE, SIZE))]
+    with use_tracer(Tracer()) as t:
+        eng.render_batch(reqs)
+        eng.render_batch(reqs)
+    batches = [r for r in t.roots if r.name == "engine.render_batch"]
+    assert len(batches) == 2
+    jits = [b.find("jit_render")[0] for b in batches]
+    assert [j.attrs["compile"] for j in jits] == [True, False]
+    # compile side: jit tracing re-enters the staged pipeline, so the stage
+    # spans nest under the compiling dispatch with traced=True
+    compile_stages = jits[0].find("render")
+    assert compile_stages and compile_stages[0].attrs["traced"] is True
+    # execute side: a cache hit never re-enters Python
+    assert jits[1].children == []
+    # engine metrics landed in the isolated registry
+    assert reg.counter("engine_compiles_total").value() == 1.0
+    assert reg.gauge("engine_jit_cache_size").value() == 1.0
+    assert reg.counter("render_batches_total", labelnames=("res",)) \
+        .value(res=f"{SIZE}x{SIZE}") == 2.0
+    assert reg.counter("render_frames_total", labelnames=("res",)) \
+        .value(res=f"{SIZE}x{SIZE}") == 4.0
+
+
+# -- metrics registry --------------------------------------------------------
+
+def test_metrics_exposition_parseable():
+    reg = MetricsRegistry()
+    reg.counter("c_total", "a counter", ("res",)).inc(3, res="32x32")
+    reg.gauge("g", "a gauge").set(-2.5)
+    h = reg.histogram("h_seconds", "a histogram", buckets=(0.1, 1.0))
+    h.observe(0.05)
+    h.observe(0.5)
+    h.observe(50.0)
+    text = reg.expose()
+    # every non-comment line is `name{labels} value` with a float value
+    seen = set()
+    for line in text.strip().splitlines():
+        if line.startswith("#"):
+            continue
+        name_part, value = line.rsplit(" ", 1)
+        float(value)
+        seen.add(name_part.split("{")[0])
+    assert seen == {"c_total", "g", "h_seconds_bucket", "h_seconds_sum",
+                    "h_seconds_count"}
+    assert 'c_total{res="32x32"} 3.0' in text
+    # cumulative buckets: 0.1 -> 1, 1.0 -> 2, +Inf -> count (3)
+    assert 'h_seconds_bucket{le="0.1"} 1' in text
+    assert 'h_seconds_bucket{le="1.0"} 2' in text
+    assert 'h_seconds_bucket{le="+Inf"} 3' in text
+    assert "h_seconds_count 3" in text
+
+
+def test_metrics_reregistration_guard():
+    reg = MetricsRegistry()
+    reg.counter("m", "first", ("a",))
+    assert reg.counter("m", "same type+labels", ("a",)) is reg.get("m")
+    with pytest.raises(ValueError):
+        reg.gauge("m")                      # type mismatch
+    with pytest.raises(ValueError):
+        reg.counter("m", labelnames=("b",))  # label mismatch
+    with pytest.raises(ValueError):
+        reg.counter("n").inc(-1)            # counters only go up
+
+
+def test_telemetry_snapshot_counter_union():
+    """Regression: counters first appearing mid-window must survive
+    `snapshot()` aggregation (it used to iterate only the oldest record's
+    keys)."""
+    tel = Telemetry(window=8, registry=MetricsRegistry())
+    tel.record_batch(batch_size=1, bucket_size=1, latency_s=0.01,
+                     counters=dict(processed_per_pixel=[2.0]),
+                     height=SIZE, width=SIZE)
+    tel.record_batch(batch_size=1, bucket_size=1, latency_s=0.01,
+                     counters=dict(processed_per_pixel=[4.0],
+                                   spill_passes=[3.0]),
+                     height=SIZE, width=SIZE)
+    snap = tel.snapshot()
+    assert snap["counters"]["processed_per_pixel"] == pytest.approx(3.0)
+    # present in only the NEWER record: mean over the window with 0-fill
+    assert snap["counters"]["spill_passes"] == pytest.approx(1.5)
+    assert snap["spill_passes"] == pytest.approx(1.5)
+
+
+# -- exporters ---------------------------------------------------------------
+
+def test_chrome_trace_and_jsonl_roundtrip(spill_scene, cam, tmp_path):
+    r = spill_renderer()
+    with use_tracer(Tracer()) as t:
+        r.render_with_stats(spill_scene, cam)
+    records = span_records(t)
+    trace = chrome_trace(t)
+    events = trace["traceEvents"]
+    assert len(events) == len(records) == len(t.spans())
+    assert all(e["ph"] == "X" for e in events)
+    assert min(e["ts"] for e in events) == 0.0     # rebased to t=0
+    assert {e["name"] for e in events} >= \
+        {"render", "preprocess", "stage1_compact", "ctu", "blend",
+         "finalize"}
+    json.dumps(trace)                              # fully serializable
+
+    p = tmp_path / "spans.jsonl"
+    write_jsonl(t, p)
+    back = read_jsonl(p)
+    assert [r["name"] for r in back] == [r["name"] for r in records]
+    # chrome_trace accepts the pre-flattened records too
+    assert len(chrome_trace(back)["traceEvents"]) == len(events)
+
+
+# -- bench_diff --------------------------------------------------------------
+
+def _load_bench_diff():
+    path = pathlib.Path(__file__).resolve().parents[1] / "tools" / \
+        "bench_diff.py"
+    spec = importlib.util.spec_from_file_location("bench_diff", path)
+    mod = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(mod)
+    return mod
+
+
+def _artifact(wall=1.0, proc=10.0, k_max=64):
+    return {
+        "points": [{
+            "n": 4096, "res": 128,
+            "stream": {"feasible": True, "k_max": k_max, "wall_s": wall,
+                       "processed_per_pixel": proc, "vru_pairs": 100.0,
+                       "mask_bytes": 1024, "overflow": False},
+        }],
+        "spill_smoke": {"n": 512, "k_max": 8, "bit_identical": True,
+                        "spill_passes": 2},
+    }
+
+
+def test_bench_diff_self_and_regressions(tmp_path, capsys):
+    bd = _load_bench_diff()
+    base = tmp_path / "base.json"
+    base.write_text(json.dumps(_artifact()))
+
+    def run(cand_dict, *extra):
+        cand = tmp_path / "cand.json"
+        cand.write_text(json.dumps(cand_dict))
+        return bd.main([str(base), str(cand), *extra])
+
+    assert run(_artifact()) == 0                        # self-diff clean
+    assert run(_artifact(proc=15.0)) == 1               # counter drift
+    assert run(_artifact(wall=5.0)) == 1                # 5x wall blowup
+    assert run(_artifact(wall=5.0), "--wall-tol", "10") == 0
+    assert run(_artifact(proc=10.4), "--counter-tol", "0.05") == 0
+    assert run(_artifact(k_max=128)) == 1               # k_max is exact
+    out = capsys.readouterr().out
+    assert "REGRESSED" in out and "k_max" in out
+
+    # candidate missing the point: skipped by default, fatal on demand
+    empty = {"points": [], "spill_smoke": None}
+    assert run(empty) == 0
+    assert run(empty, "--require-all") == 1
+
+    # feasible -> infeasible is a regression
+    infeasible = _artifact()
+    infeasible["points"][0]["stream"] = {"feasible": False,
+                                         "mask_bytes": 1024}
+    assert run(infeasible) == 1

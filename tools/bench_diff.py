@@ -1,0 +1,192 @@
+#!/usr/bin/env python
+"""Diff two BENCH_scaling.json-shaped artifacts point-by-point.
+
+Makes perf claims in PRs checkable: CI renders a fresh `--quick` sweep and
+diffs it against the committed `BENCH_scaling.json` — workload counters
+(processed_per_pixel, vru_pairs, mask_bytes, k_max, overflow) must match
+exactly (they are deterministic functions of scene + plan; a drift means
+the pipeline's *work* changed, not the machine), while wall times get a
+generous relative tolerance (they measure the runner, not the code).
+
+    python tools/bench_diff.py BASELINE.json CANDIDATE.json
+        [--wall-tol 1.0]      # fail if cand wall > base * (1 + tol)
+        [--counter-tol 0.0]   # relative tolerance on workload counters
+        [--require-all]       # baseline points missing from the candidate
+                              # are failures (default: skipped with a note)
+
+Points are matched on (n, res) and compared per dataflow; a point present
+in only one artifact is skipped unless --require-all (a `--quick` candidate
+legitimately covers a subset of the committed full sweep). The spill-smoke
+and hd1080 sections are compared when both artifacts carry them at the
+same configuration. Exit status: 0 = no regressions, 1 = regressions
+(plus a readable table either way).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+EXACT_METRICS = ("mask_bytes", "k_max")
+COUNTER_METRICS = ("processed_per_pixel", "vru_pairs")
+
+
+class Diff:
+    """Accumulates per-metric comparisons and renders the table."""
+
+    def __init__(self, wall_tol: float, counter_tol: float):
+        self.wall_tol = wall_tol
+        self.counter_tol = counter_tol
+        self.rows: list[tuple] = []          # (where, metric, base, cand,
+        self.regressions = 0                 #  status)
+        self.notes: list[str] = []
+
+    def note(self, msg: str):
+        self.notes.append(msg)
+
+    def _row(self, where, metric, base, cand, ok, improved=False):
+        status = "OK" if ok else "REGRESSED"
+        if ok and improved:
+            status = "improved"
+        self.rows.append((where, metric, base, cand, status))
+        if not ok:
+            self.regressions += 1
+
+    def wall(self, where: str, base: float, cand: float):
+        ok = cand <= base * (1.0 + self.wall_tol)
+        self._row(where, "wall_s", f"{base:.3f}", f"{cand:.3f}", ok,
+                  improved=cand < base * 0.8)
+
+    def counter(self, where: str, metric: str, base, cand,
+                tol: float | None = None):
+        tol = self.counter_tol if tol is None else tol
+        if isinstance(base, bool) or isinstance(cand, bool):
+            ok = bool(base) == bool(cand)
+        else:
+            ok = abs(float(cand) - float(base)) <= \
+                tol * max(abs(float(base)), 1.0)
+        self._row(where, metric, base, cand, ok)
+
+    def print_table(self):
+        if self.notes:
+            for msg in self.notes:
+                print(f"note: {msg}")
+            print()
+        w0 = max((len(r[0]) for r in self.rows), default=5)
+        w1 = max((len(r[1]) for r in self.rows), default=6)
+        print(f"{'point':<{w0}} {'metric':<{w1}} {'baseline':>14} "
+              f"{'candidate':>14} status")
+        for where, metric, base, cand, status in self.rows:
+            print(f"{where:<{w0}} {metric:<{w1}} {str(base):>14} "
+                  f"{str(cand):>14} {status}")
+        verdict = ("OK" if not self.regressions
+                   else f"{self.regressions} REGRESSION(S)")
+        print(f"\n{len(self.rows)} comparisons | wall tol "
+              f"+{100 * self.wall_tol:.0f}% | counter tol "
+              f"{self.counter_tol} | {verdict}")
+
+
+def index_points(artifact: dict) -> dict[tuple, dict]:
+    return {(p["n"], p["res"]): p for p in artifact.get("points", [])}
+
+
+def diff_point(d: Diff, where: str, base: dict, cand: dict):
+    """Compare one dataflow record (the {feasible, k_max, wall_s, ...}
+    dict) between artifacts."""
+    bf, cf = base.get("feasible"), cand.get("feasible")
+    if bf and not cf:
+        d.counter(where, "feasible", bf, cf, tol=0.0)
+        return
+    if not bf:
+        if cf:
+            d.note(f"{where}: infeasible -> feasible (improvement)")
+        d.counter(where, "mask_bytes", base.get("mask_bytes"),
+                  cand.get("mask_bytes"), tol=0.0)
+        return
+    for metric in EXACT_METRICS:
+        if metric in base and metric in cand:
+            d.counter(where, metric, base[metric], cand[metric], tol=0.0)
+    for metric in COUNTER_METRICS:
+        if metric in base and metric in cand:
+            d.counter(where, metric, base[metric], cand[metric])
+    if "overflow" in base and "overflow" in cand:
+        d.counter(where, "overflow", base["overflow"], cand["overflow"],
+                  tol=0.0)
+    if "wall_s" in base and "wall_s" in cand:
+        d.wall(where, base["wall_s"], cand["wall_s"])
+
+
+def diff_artifacts(base: dict, cand: dict, *, wall_tol: float,
+                   counter_tol: float, require_all: bool) -> Diff:
+    d = Diff(wall_tol, counter_tol)
+    bpts, cpts = index_points(base), index_points(cand)
+    for key in sorted(bpts):
+        where = f"n={key[0]}/res={key[1]}"
+        if key not in cpts:
+            if require_all:
+                d.counter(where, "present", True, False, tol=0.0)
+            else:
+                d.note(f"{where}: not in candidate (skipped)")
+            continue
+        for dataflow in ("dense", "stream"):
+            if dataflow in bpts[key] and dataflow in cpts[key]:
+                diff_point(d, f"{where}/{dataflow}",
+                           bpts[key][dataflow], cpts[key][dataflow])
+    for key in sorted(set(cpts) - set(bpts)):
+        d.note(f"n={key[0]}/res={key[1]}: only in candidate (new point)")
+
+    bs, cs = base.get("spill_smoke"), cand.get("spill_smoke")
+    if bs and cs:
+        d.counter("spill_smoke", "bit_identical", bs.get("bit_identical"),
+                  cs.get("bit_identical"), tol=0.0)
+        if (bs.get("n"), bs.get("k_max")) == (cs.get("n"), cs.get("k_max")):
+            d.counter("spill_smoke", "spill_passes", bs.get("spill_passes"),
+                      cs.get("spill_passes"), tol=0.0)
+
+    bh, ch = base.get("hd1080"), cand.get("hd1080")
+    if bh and ch:
+        if (bh.get("n"), bh.get("res"), bh.get("k_max_pass")) != \
+                (ch.get("n"), ch.get("res"), ch.get("k_max_pass")):
+            d.note("hd1080: different configurations "
+                   f"(n={bh.get('n')} vs n={ch.get('n')}) — skipped")
+        else:
+            for metric in ("spill_passes", "pass_bucket", "scene_k_max",
+                           "mask_bytes_per_pass", "overflow_frames",
+                           "spill_retries"):
+                if metric in bh and metric in ch:
+                    d.counter("hd1080", metric, bh[metric], ch[metric],
+                              tol=0.0)
+            if "wall_s" in bh and "wall_s" in ch:
+                d.wall("hd1080", bh["wall_s"], ch["wall_s"])
+    return d
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        description="Diff two BENCH_scaling.json artifacts.")
+    ap.add_argument("baseline")
+    ap.add_argument("candidate")
+    ap.add_argument("--wall-tol", type=float, default=1.0,
+                    help="relative wall-time regression tolerance "
+                         "(default 1.0 = candidate may be up to 2x slower)")
+    ap.add_argument("--counter-tol", type=float, default=0.0,
+                    help="relative tolerance on workload counters "
+                         "(default 0.0 = exact)")
+    ap.add_argument("--require-all", action="store_true",
+                    help="baseline points missing from the candidate are "
+                         "regressions")
+    args = ap.parse_args(argv)
+
+    with open(args.baseline) as f:
+        base = json.load(f)
+    with open(args.candidate) as f:
+        cand = json.load(f)
+    d = diff_artifacts(base, cand, wall_tol=args.wall_tol,
+                       counter_tol=args.counter_tol,
+                       require_all=args.require_all)
+    d.print_table()
+    return 1 if d.regressions else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
