@@ -28,8 +28,16 @@ Gaussian count (real 1920×1088 tiling) as a CI smoke; --spill-smoke
 renders a forced-overflow scene under SPILL and asserts bit-parity with
 the dense oracle, so the multi-pass loop is exercised on every PR.
 
+--trajectory / --trajectory-smoke add the frame-coherent serving rung: a
+smooth-orbit + jump-cut trajectory (`serving.workloads.trajectory_cameras`)
+served through `RenderEngine(incremental=True)` in CLAMP and SPILL modes,
+every frame bit-checked against full recompaction, with the coherence
+counters (tiles reused / recompacted, full recompactions, skip fractions)
+recorded per (n, res, mode) for `tools/bench_diff.py` to gate.
+
 Run:
     PYTHONPATH=src python benchmarks/scaling.py [--quick] [--spill-smoke]
+        [--trajectory | --trajectory-smoke]
         [--hd1080 | --hd1080-dry] [--out f.json]
 
 --quick restricts to N ≤ 32k and resolution ≤ 512² (CI-sized); the full
@@ -138,6 +146,116 @@ def run_spill_smoke() -> dict:
                 spill_passes=spill_passes, bit_identical=bit_identical)
 
 
+def run_trajectory(smoke: bool) -> list:
+    """The frame-coherent serving rung: a smooth orbit with one jump-cut
+    served through `RenderEngine(incremental=True)` in both CLAMP and SPILL
+    modes, bit-checked per frame against full recompaction.
+
+    Per mode the record carries the coherence counters (tiles_reused /
+    tiles_recompacted / full_recompactions — deterministic functions of
+    scene + trajectory + plan, diffed by tools/bench_diff.py on
+    (n, res, mode)) plus the two headline fractions:
+
+      skip_frac_smooth   Stage-1 tile compactions skipped across the smooth
+                         frames (asserted >= 0.5 — the payoff claim)
+      skip_frac_jump     the same across jump-cut frames (asserted == 0 —
+                         cuts are charged as full recompactions, never
+                         silently reused)
+    """
+    from repro.core import coherence as coh
+    from repro.serving.engine import RenderEngine, RenderRequest
+    from repro.serving.workloads import trajectory_cameras
+
+    if smoke:
+        n, res, frames, jumps, step = 512, 64, 10, (6,), 0.0015
+    else:
+        # Denser scene -> more candidates per tile -> a higher chance some
+        # member's AABB crosses a tile boundary each frame, so the full
+        # rung needs a proportionally finer orbit step to hold >= 50%
+        # smooth-segment reuse (client-side, this is just frame rate:
+        # 0.0006 rad/frame = one orbit in ~3 min at 60 fps).
+        n, res, frames, jumps, step = 4096, 128, 16, (8,), 0.0006
+    scene = make_scene(n)
+    cams = trajectory_cameras(frames, width=res, height=res, step=step,
+                              jump_frames=jumps)
+    # k_max measured over the trajectory itself (start / mid / end probes),
+    # not a generic pose: the orbit sweeps tile occupancies a single probe
+    # underestimates, and a CLAMP-mode overflow would silently degrade the
+    # parity contract to "both clamped the same way".
+    probes = [cams[0], cams[frames // 2], cams[-1]]
+    km = measure_k_max(scene, probes, cap=scene.n)
+    records = []
+    for mode in ("clamp", "spill"):
+        if mode == "clamp":
+            base = RenderPlan(grid=GridConfig(height=res, width=res),
+                              test=TestConfig(method="cat", precision=MIXED))
+        else:
+            # Per-pass chunk well under the measured bound so the SPILL
+            # multi-pass loop is really exercised along the trajectory.
+            base = RenderPlan(
+                grid=GridConfig(height=res, width=res),
+                test=TestConfig(method="cat", precision=MIXED),
+                stream=StreamConfig(k_max=max(km // 4, 4),
+                                    overflow=OverflowPolicy.SPILL,
+                                    max_spill_passes=2))
+        engine = RenderEngine(base, incremental=True)
+        engine.register_scene("traj", scene,
+                              k_max=km if mode == "clamp" else None,
+                              probe_cameras=None if mode == "clamp"
+                              else probes)
+        plan = engine.plan_for("traj", res, res)
+        entry = engine._scenes["traj"]
+        tiles = plan.grid.make().num_tiles
+
+        parity = True
+        reused_smooth = reused_jump = 0
+        walls = []
+        for i, cam in enumerate(cams):
+            frame, = engine.render_batch(
+                [RenderRequest("traj", cam, session="bench")])
+            # Reference: the identical plan with a cold cache every frame —
+            # always a full recompaction, bit-compared on the image.
+            ref_out, _, _ = coh.render_incremental(
+                plan, entry.scene, cam, None, enforce=False)
+            parity &= bool((np.asarray(frame.image)
+                            == np.asarray(ref_out.image)).all())
+            r = int(frame.counters["tiles_reused"])
+            if i in jumps:
+                reused_jump += r
+            elif i > 0:
+                reused_smooth += r
+                walls.append(frame.render_s)
+        snap = engine.telemetry.snapshot()
+        rec = dict(
+            n=n, res=res, mode=mode, frames=frames, tiles=tiles,
+            k_max=plan.stream.k_max,
+            spill_passes=(plan.stream.max_spill_passes
+                          if mode == "spill" else 1),
+            jump_frames=list(jumps),
+            tiles_reused=snap["total_tiles_reused"],
+            tiles_recompacted=snap["total_tiles_recompacted"],
+            full_recompactions=snap["total_full_recompactions"],
+            skip_frac_smooth=reused_smooth / (tiles * (frames - 1
+                                                       - len(jumps))),
+            skip_frac_jump=reused_jump / (tiles * len(jumps)),
+            parity=parity,
+            wall_s=float(np.mean(walls)),
+        )
+        assert parity, "incremental must bit-match full recompaction"
+        assert rec["tiles_reused"] + rec["tiles_recompacted"] \
+            == tiles * frames, "reused + recompacted must cover every tile"
+        assert rec["skip_frac_smooth"] >= 0.5, \
+            f"smooth-orbit reuse too low: {rec['skip_frac_smooth']:.2f}"
+        assert rec["skip_frac_jump"] == 0.0, \
+            "jump-cut frames must recompact everything"
+        print(f"trajectory[{mode}] N={n} res={res} {frames}f | reuse "
+              f"smooth {100 * rec['skip_frac_smooth']:.0f}% / jump "
+              f"{100 * rec['skip_frac_jump']:.0f}% | full recompactions "
+              f"{rec['full_recompactions']} | parity {parity}")
+        records.append(rec)
+    return records
+
+
 def run_hd1080(n_gaussians: int, k_max_pass: int, repeats: int) -> dict:
     """The 1080p serving rung: 1920×1088 through `serving.RenderEngine`
     under SPILL. Returns the JSON record (also asserts no overflow and no
@@ -205,6 +323,13 @@ def main():
     ap.add_argument("--spill-smoke", action="store_true",
                     help="forced-overflow SPILL render, bit-checked "
                          "against the dense oracle")
+    ap.add_argument("--trajectory", action="store_true",
+                    help="frame-coherent serving rung: smooth orbit + "
+                         "jump-cut through RenderEngine(incremental=True), "
+                         "bit-checked per frame against full recompaction")
+    ap.add_argument("--trajectory-smoke", action="store_true",
+                    help="CI-sized --trajectory (tiny scene, 10-frame "
+                         "orbit, one jump-cut)")
     ap.add_argument("--hd1080", action="store_true",
                     help="add the 1920x1088 / 512k-Gaussian serving rung "
                          "(tens of minutes on CPU)")
@@ -264,6 +389,13 @@ def main():
     )
     if args.spill_smoke:
         result["spill_smoke"] = run_spill_smoke()
+    if args.trajectory or args.trajectory_smoke:
+        traj = []
+        if args.trajectory_smoke:
+            traj += run_trajectory(smoke=True)
+        if args.trajectory:
+            traj += run_trajectory(smoke=False)
+        result["trajectory"] = traj
     if args.hd1080 or args.hd1080_dry:
         n_hd = 4096 if args.hd1080_dry else args.hd1080_gaussians
         # dry run: chunk well below the measured survivor bound so the CI

@@ -15,6 +15,9 @@ from repro.core.renderer import (Renderer, RenderPlan, GridConfig,
                                  StreamOverflowError, ProjectedScene,
                                  TileStream, StageSpec, measure_k_max,
                                  cat_mask_elems, frame_counters, as_plan)
+from repro.core.coherence import (FrameCache, CoherenceConfig,
+                                  render_incremental, tile_fingerprints,
+                                  tile_cover_rects, camera_delta)
 from repro.core.pipeline import (RenderConfig, render, render_with_stats,
                                  render_batch_with_stats,
                                  FLICKER_CONFIG, VANILLA_CONFIG,
@@ -35,6 +38,8 @@ __all__ = [
     "RasterConfig", "OverflowPolicy", "StreamOverflowWarning",
     "StreamOverflowError", "ProjectedScene", "TileStream", "StageSpec",
     "measure_k_max", "cat_mask_elems", "frame_counters", "as_plan",
+    "FrameCache", "CoherenceConfig", "render_incremental",
+    "tile_fingerprints", "tile_cover_rects", "camera_delta",
     "RenderConfig", "render", "render_with_stats",
     "render_batch_with_stats",
     "psnr", "ssim",

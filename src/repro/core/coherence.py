@@ -1,0 +1,467 @@
+"""Frame-coherent incremental rendering: reuse Stage-1 survivor streams.
+
+On smooth camera paths consecutive frames share almost all Stage-1
+survivors per tile, so re-running the AABB test + depth-sorted compaction
+from scratch every frame is the dominant redundant cost of the streaming
+pipeline (the insight of "No Redundancy, No Stall" — see PAPERS.md). This
+module persists the previous frame's per-tile compacted lists in a
+`FrameCache` and, on the next camera, recompacts *only the tiles whose
+candidate set changed*:
+
+fingerprint
+    For every in-frustum Gaussian the exact inclusive tile-index rectangle
+    its AABB covers is derived float-for-float from the same comparisons
+    `culling.aabb_mask` evaluates (`tile_cover_rects`), so "tile t's
+    candidate set" is exactly the set the fused compaction would build.
+    Each tile's set is summarized O(N + T) by a difference-array scatter +
+    2D prefix sum of three lanes: two independent 32-bit id hashes (summed
+    mod 2^32 over members — camera-independent, so a set is fingerprinted
+    identically from any viewpoint) and the exact member count.
+
+reuse
+    A tile whose fingerprint is unchanged *and* whose count fits the
+    plan's total capacity (k_max × passes) has the same member set as last
+    frame, unclamped; its fresh compacted list would be exactly those
+    members sorted by the new frame's global depth rank. So the cached row
+    is re-sorted by rank (`_resort_rows`) instead of recompacted — no
+    (tile, N) mask work. Tiles at/over capacity are always recompacted:
+    the clamped prefix depends on the order, not just the set.
+
+recompact
+    Changed tiles are gathered (count padded to a power-of-two bucket so
+    the jit cache stays small) and run through the same
+    `raster._compact_passes` chunked kernel as a full frame, then
+    scattered back into the cached rows.
+
+fallback
+    A camera jump past `CoherenceConfig.max_camera_jump`, a changed-tile
+    fraction past `max_changed_frac`, a plan/scene swap, or a cold cache
+    falls back to one full `stage1_compact` (counted as a
+    `full_recompactions` frame: tiles_recompacted = T, tiles_reused = 0).
+
+The contract (enforced by tests/test_coherence.py): the incremental frame
+is bit-identical to per-frame full recompaction — images, `entry_alive`,
+and every additive workload counter — across {CLAMP, SPILL} x {jnp,
+fused}, because the recompacted/resorted lists are exactly equal as
+integer arrays and the downstream CTU/blend consume nothing else. The
+only probabilistic element is the 64-bit hash pair: two different member
+sets collide with probability ~2^-64 per (tile, frame).
+
+Host/graph split: `render_incremental` runs the probe (fingerprint) as
+one small jitted program, decides reuse on the host, then dispatches one
+of two jitted render programs (incremental, keyed by the changed-tile
+bucket, or full). Every decision quantity lands on the active
+`obs.trace` tracer as a `stage1_incremental` span.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import raster
+from repro.core.camera import Camera
+from repro.core.culling import TileGrid
+from repro.core.gaussians import GaussianScene, Projected, project
+from repro.core.renderer import (RenderPlan, TileStream, next_pow2,
+                                 enforce_overflow_policy)
+from repro.obs import trace as obs_trace
+
+FINGERPRINT_LANES = 3      # hash lane A, hash lane B, exact member count
+
+
+@dataclasses.dataclass(frozen=True)
+class CoherenceConfig:
+    """Knobs of the incremental mode (thresholds are *policy*, not
+    correctness: any decision produces bit-identical frames — the knobs
+    only trade probe/recompaction work against reuse)."""
+    max_changed_frac: float = 0.5   # above: full recompaction is cheaper
+    max_camera_jump: float = 3.0    # ||ΔR||_F + ||Δposition||: a jump-cut
+    min_changed_bucket: int = 8     # floor of the pow2 changed-tile bucket
+
+
+# ---------------------------------------------------------------------------
+# Exact tile-cover rectangles (float-for-float vs culling.aabb_mask)
+# ---------------------------------------------------------------------------
+
+
+def _last_lt(v: jax.Array, size: int) -> jax.Array:
+    """Largest integer q with float32(q * size) < v, elementwise.
+
+    float32 division is correctly rounded, so floor(v / size) is off by at
+    most one from the true answer; the +-1 candidates are then checked
+    with the *authoritative* comparison — the exact expression
+    `aabb_mask` evaluates (int32 origin promoted to float32)."""
+    g = jnp.clip(jnp.floor(v / size), -(2 ** 24), 2 ** 24).astype(jnp.int32)
+
+    def lt(q):
+        return (q * size).astype(jnp.float32) < v
+
+    return jnp.where(lt(g + 1), g + 1, jnp.where(lt(g), g, g - 1))
+
+
+def _first_gt(w: jax.Array, size: int) -> jax.Array:
+    """Smallest integer p with float32(p * size) > w, elementwise."""
+    g = jnp.clip(jnp.floor(w / size), -(2 ** 24), 2 ** 24).astype(jnp.int32)
+
+    def gt(p):
+        return (p * size).astype(jnp.float32) > w
+
+    return jnp.where(gt(g), g, jnp.where(gt(g + 1), g + 1, g + 2))
+
+
+def tile_cover_rects(proj: Projected, grid: TileGrid):
+    """Per-Gaussian inclusive tile-index rectangle of Stage-1 AABB hits.
+
+    Returns (tx0, tx1, ty0, ty1, covered): int32 (N,) arrays clipped to the
+    grid plus a bool validity mask. Gaussian i hits tile (tx, ty) under
+    `culling.aabb_mask(proj, grid.tile_origins(), grid.tile)` iff
+    covered[i] and tx0 <= tx <= tx1 and ty0 <= ty <= ty1 — exactly (the
+    boundary comparisons are evaluated with the same float32 expressions),
+    which is what lets the fingerprint claim set-equality, not an
+    approximation of it.
+    """
+    t = grid.tile
+    mx, my = proj.mean2d[:, 0], proj.mean2d[:, 1]
+    r = proj.radius
+    # aabb_mask: hit_x(tx) = (mx + r > tx*t) & (mx - r < tx*t + t)
+    tx_hi = _last_lt(mx + r, t)               # max tx with tx*t < mx + r
+    tx_lo = _first_gt(mx - r, t) - 1          # min tx with (tx+1)*t > mx - r
+    ty_hi = _last_lt(my + r, t)
+    ty_lo = _first_gt(my - r, t) - 1
+    covered = (proj.in_frustum
+               & (tx_lo <= tx_hi) & (ty_lo <= ty_hi)
+               & (tx_hi >= 0) & (tx_lo <= grid.tiles_x - 1)
+               & (ty_hi >= 0) & (ty_lo <= grid.tiles_y - 1))
+    tx0 = jnp.clip(tx_lo, 0, grid.tiles_x - 1)
+    tx1 = jnp.clip(tx_hi, 0, grid.tiles_x - 1)
+    ty0 = jnp.clip(ty_lo, 0, grid.tiles_y - 1)
+    ty1 = jnp.clip(ty_hi, 0, grid.tiles_y - 1)
+    return tx0, tx1, ty0, ty1, covered
+
+
+def _id_hash_lanes(n: int) -> jax.Array:
+    """(N, 2) uint32 per-Gaussian hashes — a static function of the id, so
+    a tile's lane sums are camera-independent set summaries."""
+    i = jnp.arange(1, n + 1, dtype=jnp.uint32)
+
+    def mix(x):
+        x = x ^ (x >> 16)
+        x = x * jnp.uint32(0x7FEB352D)
+        x = x ^ (x >> 15)
+        x = x * jnp.uint32(0x846CA68B)
+        return x ^ (x >> 16)
+
+    return jnp.stack([mix(i), mix(i ^ jnp.uint32(0x9E3779B9))], axis=-1)
+
+
+def tile_fingerprints(proj: Projected, grid: TileGrid):
+    """Per-tile candidate-set fingerprints, O(N + T).
+
+    Returns (fp (T, 3) uint32, counts (T,) int32). fp lanes 0..1 are the
+    mod-2^32 sums of the member-id hashes, lane 2 the exact member count
+    (== `jnp.sum(aabb_mask(...), axis=1)` — also how the incremental path
+    gets its exact overflow flag). Built as a 2D difference array: each
+    Gaussian scatters +-h at the four corners of its tile-cover rect, and
+    a double prefix sum recovers the per-tile sums (inclusion-exclusion).
+    """
+    tx0, tx1, ty0, ty1, covered = tile_cover_rects(proj, grid)
+    n = proj.mean2d.shape[0]
+    lanes = jnp.concatenate(
+        [_id_hash_lanes(n), jnp.ones((n, 1), jnp.uint32)], axis=-1)
+    w = jnp.where(covered[:, None], lanes, jnp.uint32(0))     # (N, 3)
+    acc = jnp.zeros((grid.tiles_y + 1, grid.tiles_x + 1, FINGERPRINT_LANES),
+                    jnp.uint32)
+    acc = acc.at[ty0, tx0].add(w)
+    acc = acc.at[ty0, tx1 + 1].add(-w)        # uint32 wraparound is the point
+    acc = acc.at[ty1 + 1, tx0].add(-w)
+    acc = acc.at[ty1 + 1, tx1 + 1].add(w)
+    fp = jnp.cumsum(jnp.cumsum(acc, axis=0), axis=1)
+    fp = fp[:grid.tiles_y, :grid.tiles_x].reshape(grid.num_tiles,
+                                                  FINGERPRINT_LANES)
+    return fp, fp[:, 2].astype(jnp.int32)
+
+
+# ---------------------------------------------------------------------------
+# Reuse (re-sort cached rows by the new depth rank) + partial recompaction
+# ---------------------------------------------------------------------------
+
+
+def _resort_rows(proj: Projected, rows: jax.Array, valid: jax.Array):
+    """Re-sort cached per-tile id rows by the new frame's global depth rank.
+
+    A tile with an unchanged, unclamped member set compacts to exactly its
+    members sorted by position in `raster.depth_order` — so sorting the
+    cached ids by the new rank (invalid slots keyed past every rank)
+    reproduces the fresh list bit-for-bit, -1 padding included.
+    """
+    n = proj.mean2d.shape[0]
+    order = raster.depth_order(proj)
+    rank = jnp.zeros((n,), jnp.int32).at[order].set(
+        jnp.arange(n, dtype=jnp.int32))
+    key = jnp.where(valid, rank[rows.clip(0)], n)
+    perm = jnp.argsort(key, axis=-1, stable=True)
+    return (jnp.take_along_axis(rows, perm, axis=-1),
+            jnp.take_along_axis(valid, perm, axis=-1))
+
+
+def _recompact_changed(plan: RenderPlan, proj: Projected, grid: TileGrid,
+                       rows: jax.Array, valid: jax.Array,
+                       changed_ids: jax.Array):
+    """Run Stage-1 compaction for the changed tiles only and scatter the
+    results into the (resorted) cached rows.
+
+    changed_ids: (Cb,) int32 tile ids, padded with `grid.num_tiles`
+    (out-of-range -> dropped by the scatter). The compaction itself is the
+    same fused-AABB `raster._compact_passes` a full frame runs, just over
+    the gathered tile origins.
+    """
+    from repro.core.culling import aabb_mask
+    cb = changed_ids.shape[0]
+    n = proj.mean2d.shape[0]
+    k_max, passes = plan.stream.k_max, plan.n_passes
+    order = raster.depth_order(proj)
+    origins = grid.tile_origins()[changed_ids.clip(0, grid.num_tiles - 1)]
+    lists, vals, _ = raster._compact_passes(
+        lambda ob: aabb_mask(proj, ob, grid.tile), origins, cb, n,
+        order, k_max, passes)
+    new_rows = jnp.moveaxis(lists, 0, 1).reshape(cb, passes * k_max)
+    new_valid = jnp.moveaxis(vals, 0, 1).reshape(cb, passes * k_max)
+    rows = rows.at[changed_ids].set(new_rows, mode="drop")
+    valid = valid.at[changed_ids].set(new_valid, mode="drop")
+    return rows, valid
+
+
+def _rows_to_streams(plan: RenderPlan, rows: jax.Array, valid: jax.Array,
+                     overflow: jax.Array) -> tuple:
+    """(T, passes*K) concatenated rows -> the per-pass TileStream tuple
+    (inverse of the `_compact_passes` layout split)."""
+    t = rows.shape[0]
+    k_max, passes = plan.stream.k_max, plan.n_passes
+    lists = jnp.moveaxis(rows.reshape(t, passes, k_max), 1, 0)
+    vals = jnp.moveaxis(valid.reshape(t, passes, k_max), 1, 0)
+    return tuple(TileStream(lists[p], vals[p], overflow, index=p)
+                 for p in range(passes))
+
+
+def _streams_to_rows(streams) -> tuple[jax.Array, jax.Array]:
+    """Concatenate a frame's per-pass lists along K — the cacheable form."""
+    return (jnp.concatenate([ts.lists for ts in streams], axis=1),
+            jnp.concatenate([ts.valid for ts in streams], axis=1))
+
+
+# ---------------------------------------------------------------------------
+# Jitted program cache (keyed by the hashable plan)
+# ---------------------------------------------------------------------------
+
+_PROBE_FNS: dict = {}
+_FULL_FNS: dict = {}
+_INCR_FNS: dict = {}
+
+
+def _probe_fn(plan: RenderPlan):
+    fn = _PROBE_FNS.get(plan)
+    if fn is None:
+        def probe(scene, camera):
+            return tile_fingerprints(project(scene, camera),
+                                     plan.grid.make())
+        fn = _PROBE_FNS[plan] = jax.jit(probe)
+    return fn
+
+
+def _full_fn(plan: RenderPlan):
+    """Full recompaction render that additionally returns everything the
+    cache needs (rows, fingerprints). Same stage sequence and span tree as
+    `RenderPlan.render_with_stats`, so the frame is the full-recompaction
+    baseline itself, not a reimplementation of it."""
+    fn = _FULL_FNS.get(plan)
+    if fn is None:
+        def full(scene, camera):
+            tracer = obs_trace.current()
+            with tracer.span("render") as root:
+                if tracer.enabled:
+                    root.set(dataflow=plan.dataflow, incremental=False,
+                             traced=True)
+                with tracer.span("preprocess"):
+                    ps = plan.preprocess(scene, camera)
+                with tracer.span("stage1_compact"):
+                    streams = plan.stage1_compact(ps)
+                fp, counts = tile_fingerprints(ps.proj, ps.grid)
+                out, counters = plan._render_streams(ps, streams, tracer,
+                                                     root=root)
+            rows, valid = _streams_to_rows(streams)
+            return out, counters, rows, valid, fp, counts
+        fn = _FULL_FNS[plan] = jax.jit(full)
+    return fn
+
+
+def _incr_fn(plan: RenderPlan, c_bucket: int):
+    """Incremental render program: resort reused rows, recompact the
+    changed-tile bucket, run the shared CTU/blend tail."""
+    key = (plan, c_bucket)
+    fn = _INCR_FNS.get(key)
+    if fn is None:
+        def incr(scene, camera, rows, valid, changed_ids, overflow):
+            tracer = obs_trace.current()
+            with tracer.span("render") as root:
+                if tracer.enabled:
+                    root.set(dataflow=plan.dataflow, incremental=True,
+                             traced=True)
+                with tracer.span("preprocess"):
+                    ps = plan.preprocess(scene, camera)
+                with tracer.span("stage1_incremental",
+                                 {"c_bucket": c_bucket}):
+                    rows2, valid2 = _resort_rows(ps.proj, rows, valid)
+                    rows2, valid2 = _recompact_changed(
+                        plan, ps.proj, ps.grid, rows2, valid2, changed_ids)
+                    streams = _rows_to_streams(plan, rows2, valid2, overflow)
+                out, counters = plan._render_streams(ps, streams, tracer,
+                                                     root=root)
+            return out, counters, rows2, valid2
+        fn = _INCR_FNS[key] = jax.jit(incr)
+    return fn
+
+
+# ---------------------------------------------------------------------------
+# FrameCache + the host-side orchestrator
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class FrameCache:
+    """Previous-frame survivor streams + fingerprints for one (plan, scene)
+    stream of frames. Mutated in place by `render_incremental`; treat as
+    opaque. `plan`/`scene` double as the invalidation keys: a value-unequal plan
+    (resolution, k_max, spill pass bucket, backend...) or a different scene
+    object forces a full recompaction that re-seeds the cache."""
+    plan: RenderPlan
+    scene: GaussianScene
+    camera: Camera
+    rows: jax.Array           # (T, passes*k_max) int32, passes concat on K
+    valid: jax.Array          # (T, passes*k_max) bool
+    fp: np.ndarray            # (T, 3) uint32 candidate-set fingerprints
+    counts: np.ndarray        # (T,) int32 exact candidate counts
+    frames: int = 0           # frames served through this cache
+    tiles_reused: int = 0     # cumulative, == sum of per-frame counters
+    tiles_recompacted: int = 0
+    full_recompactions: int = 0
+
+
+def camera_delta(a: Camera, b: Camera) -> float:
+    """Scalar camera-motion metric: Frobenius distance of the rotations
+    plus euclidean distance of the optical centers (world units). Smooth
+    trajectories step well under 1; a jump-cut lands far past
+    `CoherenceConfig.max_camera_jump`."""
+    ra, rb = np.asarray(a.R_wc, np.float64), np.asarray(b.R_wc, np.float64)
+    ta, tb = np.asarray(a.t_wc, np.float64), np.asarray(b.t_wc, np.float64)
+    pa, pb = -ra.T @ ta, -rb.T @ tb
+    return float(np.linalg.norm(ra - rb) + np.linalg.norm(pa - pb))
+
+
+def _coherence_counters(counters: dict, reused: int, recompacted: int,
+                        full: bool) -> dict:
+    counters = dict(counters)
+    counters["tiles_reused"] = jnp.asarray(float(reused), jnp.float32)
+    counters["tiles_recompacted"] = jnp.asarray(float(recompacted),
+                                                jnp.float32)
+    counters["full_recompactions"] = jnp.asarray(1.0 if full else 0.0,
+                                                 jnp.float32)
+    return counters
+
+
+def render_incremental(plan: RenderPlan, scene: GaussianScene, camera,
+                       cache: Optional[FrameCache] = None,
+                       cfg: Optional[CoherenceConfig] = None, *,
+                       enforce: bool = True):
+    """Render one frame, reusing the cache's survivor streams where the
+    per-tile candidate sets are provably unchanged.
+
+    Returns (RenderOut, counters, FrameCache) — counters are the full
+    render_with_stats set plus `tiles_reused` / `tiles_recompacted`
+    (summing to the tile count every frame) and `full_recompactions`
+    (1.0 on fallback/cold frames, else 0.0). The returned cache is `cache`
+    updated in place when it matched, else a fresh one.
+
+    enforce: apply the plan's OverflowPolicy to the concrete overflow flag
+    (the serving engine passes False and applies it itself after its
+    spill-retry loop).
+    """
+    if cfg is None:
+        cfg = CoherenceConfig()
+    grid = plan.grid.make()
+    t = grid.num_tiles
+    cap = plan.stream.k_max * plan.n_passes
+    tracer = obs_trace.current()
+
+    matched = (cache is not None and cache.plan == plan
+               and cache.scene is scene)
+    jump = camera_delta(cache.camera, camera) if matched else float("inf")
+
+    with tracer.span("render_incremental",
+                     {"height": grid.height, "width": grid.width}) as root:
+        changed_idx = None
+        fp_np = counts_np = None
+        if matched and jump <= cfg.max_camera_jump:
+            fp, counts = _probe_fn(plan)(scene, camera)
+            fp_np = np.asarray(fp)
+            counts_np = np.asarray(counts)
+            # Unchanged fingerprint (count is a lane, so equal sets only)
+            # AND within capacity: at/over cap the kept prefix depends on
+            # the depth order, which the fingerprint deliberately ignores.
+            changed = ((fp_np != cache.fp).any(axis=1)
+                       | (counts_np > cap))
+            changed_idx = np.nonzero(changed)[0]
+            if len(changed_idx) > cfg.max_changed_frac * t:
+                changed_idx = None            # cheaper to recompact fully
+
+        full = changed_idx is None
+        with tracer.span("stage1_incremental") as sp:
+            if tracer.enabled:
+                sp.set(full_recompaction=full, camera_jump=jump,
+                       tiles=t,
+                       tiles_recompacted=(t if full else len(changed_idx)),
+                       tiles_reused=(0 if full else t - len(changed_idx)))
+            if full:
+                out, counters, rows, valid, fp, counts = \
+                    jax.block_until_ready(_full_fn(plan)(scene, camera))
+                fp_np, counts_np = np.asarray(fp), np.asarray(counts)
+                reused, recompacted = 0, t
+            else:
+                c_bucket = max(next_pow2(max(len(changed_idx), 1)),
+                               cfg.min_changed_bucket)
+                c_bucket = min(c_bucket, next_pow2(t))
+                padded = np.full((c_bucket,), t, np.int32)
+                padded[:len(changed_idx)] = changed_idx
+                overflow = jnp.asarray(bool((counts_np > cap).any()))
+                out, counters, rows, valid = jax.block_until_ready(
+                    _incr_fn(plan, c_bucket)(
+                        scene, camera, cache.rows, cache.valid,
+                        jnp.asarray(padded), overflow))
+                reused, recompacted = t - len(changed_idx), len(changed_idx)
+
+        counters = _coherence_counters(counters, reused, recompacted, full)
+        if not matched:
+            cache = FrameCache(plan=plan, scene=scene, camera=camera,
+                               rows=rows, valid=valid, fp=fp_np,
+                               counts=counts_np)
+        else:
+            cache.camera = camera
+            cache.rows, cache.valid = rows, valid
+            cache.fp, cache.counts = fp_np, counts_np
+        cache.frames += 1
+        cache.tiles_reused += reused
+        cache.tiles_recompacted += recompacted
+        cache.full_recompactions += int(full)
+        if tracer.enabled:
+            root.set(full_recompaction=full, tiles_reused=reused,
+                     tiles_recompacted=recompacted)
+
+    if enforce:
+        enforce_overflow_policy(out.overflow, plan.stream.overflow,
+                                k_max=plan.stream.k_max,
+                                n_passes=plan.n_passes,
+                                context="incremental frame")
+    return out, counters, cache

@@ -500,55 +500,84 @@ class RenderPlan:
                     sp.set(survivors_per_pass=[
                         float(jnp.sum(ts.valid)) for ts in streams],
                         overflow=bool(streams[0].overflow))
-            houts = []
-            for ts in streams:
-                with tracer.span("ctu", {"pass": ts.index}) as sp:
-                    hout = self.ctu(ps, ts)
-                    tracer.block(hout)
-                    if live and hout.counters:
-                        sp.set(**{k: float(v)
-                                  for k, v in hout.counters.items()
-                                  if jnp.ndim(v) == 0})
-                houts.append(hout)
-            counters = self._merge_hout_counters(houts)
+            out, counters = self._render_streams(ps, streams, tracer,
+                                                 root=root)
+        return out, counters
+
+    def _render_streams(self, ps: ProjectedScene, streams, tracer,
+                        root=None):
+        """The shared post-Stage-1 tail: CTU per pass, counter merge, blend
+        fold, finalize. `render_with_stats` runs it after `stage1_compact`;
+        `core.coherence`'s incremental programs run it after rebuilding the
+        streams from a `FrameCache` — one body, so the two paths cannot
+        diverge. Returns (RenderOut, counters dict)."""
+        live = tracer.enabled and not obs_trace.is_traced(ps.proj)
+        houts = []
+        for ts in streams:
+            with tracer.span("ctu", {"pass": ts.index}) as sp:
+                hout = self.ctu(ps, ts)
+                tracer.block(hout)
+                if live and hout.counters:
+                    sp.set(**{k: float(v)
+                              for k, v in hout.counters.items()
+                              if jnp.ndim(v) == 0})
+            houts.append(hout)
+        counters = self._merge_hout_counters(houts)
+        if self.test.method == "cat":
+            counters["cat_mask_bytes"] = jnp.asarray(
+                float(cat_mask_elems(ps.grid, ps.proj.depth.shape[0],
+                                     self.stream.k_max, self.dataflow)),
+                jnp.float32)
+        out, blend_counters, alive_parts = self._blend_passes(
+            ps, houts, tracer)
+        with tracer.span("finalize") as sp:
+            counters.update(blend_counters)
             if self.test.method == "cat":
-                counters["cat_mask_bytes"] = jnp.asarray(
-                    float(cat_mask_elems(ps.grid, ps.proj.depth.shape[0],
-                                         self.stream.k_max, self.dataflow)),
-                    jnp.float32)
-            out, blend_counters, alive_parts = self._blend_passes(
-                ps, houts, tracer)
-            with tracer.span("finalize") as sp:
-                counters.update(blend_counters)
-                if self.test.method == "cat":
-                    eff: dict = {}
-                    for ts, hout, alive in zip(streams, houts, alive_parts):
-                        for key, v in self._effective_counters(
-                                ps, ts, hout, alive).items():
-                            eff[key] = v if key not in eff else eff[key] + v
-                    counters.update(eff)
-                # How many passes actually carried entries (>= 1 even on an
-                # empty frame, so the counter always reads as a pass count).
-                counters["spill_passes"] = jnp.maximum(
-                    sum(jnp.any(h.valid) for h in houts),
-                    1).astype(jnp.float32)
-                tracer.block((out, counters))
-                if live:
-                    sp.set(spill_passes=float(counters["spill_passes"]),
-                           overflow=bool(out.overflow))
+                eff: dict = {}
+                for ts, hout, alive in zip(streams, houts, alive_parts):
+                    for key, v in self._effective_counters(
+                            ps, ts, hout, alive).items():
+                        eff[key] = v if key not in eff else eff[key] + v
+                counters.update(eff)
+            # How many passes actually carried entries (>= 1 even on an
+            # empty frame, so the counter always reads as a pass count).
+            counters["spill_passes"] = jnp.maximum(
+                sum(jnp.any(h.valid) for h in houts),
+                1).astype(jnp.float32)
+            tracer.block((out, counters))
+            if live:
+                sp.set(spill_passes=float(counters["spill_passes"]),
+                       overflow=bool(out.overflow))
+                if root is not None:
                     root.set(**{k: float(counters[k]) for k in
                                 ("processed_per_pixel", "blended_per_pixel",
                                  "vru_pairs", "spill_passes")
                                 if k in counters and
                                 jnp.ndim(counters[k]) == 0})
-                enforce_overflow_policy(out.overflow, self.stream.overflow,
-                                        k_max=self.stream.k_max,
-                                        n_passes=self.n_passes)
+            enforce_overflow_policy(out.overflow, self.stream.overflow,
+                                    k_max=self.stream.k_max,
+                                    n_passes=self.n_passes)
         return out, counters
 
     def render(self, scene: GaussianScene, camera) -> raster.RenderOut:
         out, _ = self.render_with_stats(scene, camera)
         return out
+
+    def render_incremental(self, scene: GaussianScene, camera, cache=None,
+                           cfg=None, **kw):
+        """Frame-coherent render: reuse the previous frame's per-tile
+        survivor streams for every tile whose Stage-1 candidate set is
+        provably unchanged, recompacting only the rest (bit-identical to
+        `render_with_stats` under jit — see `core.coherence`).
+
+        cache: the `coherence.FrameCache` returned by the previous call
+        (None = cold start, a full recompaction that seeds one).
+        cfg: a `coherence.CoherenceConfig` (fallback thresholds).
+        Returns (RenderOut, counters, FrameCache).
+        """
+        from repro.core import coherence
+        return coherence.render_incremental(self, scene, camera, cache=cache,
+                                            cfg=cfg, **kw)
 
     def render_batch_with_stats(self, scene: GaussianScene, cameras):
         """Render a batch of camera poses of one scene in one vmapped call.
@@ -721,6 +750,11 @@ class Renderer:
 
     def render_with_stats(self, scene: GaussianScene, camera):
         return self.plan.render_with_stats(scene, camera)
+
+    def render_incremental(self, scene: GaussianScene, camera, cache=None,
+                           cfg=None, **kw):
+        return self.plan.render_incremental(scene, camera, cache=cache,
+                                            cfg=cfg, **kw)
 
     def render_batch_with_stats(self, scene: GaussianScene, cameras):
         return self.plan.render_batch_with_stats(scene, cameras)

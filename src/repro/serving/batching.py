@@ -62,10 +62,16 @@ class MicroBatcher:
         self._queue: list[_Pending] = []
         self._next_id = 0
 
-    def submit(self, scene: str, camera: Camera) -> Future:
-        """Enqueue one request; returns a Future[RequestResult]."""
+    def submit(self, scene: str, camera: Camera,
+               session: Optional[str] = None) -> Future:
+        """Enqueue one request; returns a Future[RequestResult].
+
+        session: opaque client-stream id for the engine's frame-coherent
+        incremental mode (`RenderEngine(incremental=True)`). Sessioned and
+        sessionless requests group into the same (scene, resolution) batch
+        window; the engine splits them at render time."""
         req = RenderRequest(scene=scene, camera=camera,
-                            request_id=self._next_id)
+                            request_id=self._next_id, session=session)
         self._next_id += 1
         fut: Future = Future()
         self._queue.append(_Pending(req, fut, time.perf_counter()))

@@ -79,10 +79,18 @@ def batch_bucket(n: int, max_batch: int) -> int:
 
 @dataclasses.dataclass(frozen=True)
 class RenderRequest:
-    """One camera pose against one registered scene."""
+    """One camera pose against one registered scene.
+
+    session: opaque client-stream id. On an engine built with
+    `incremental=True`, requests carrying a session render through the
+    frame-coherent path (`core.coherence`): the engine keeps one
+    `FrameCache` per session and reuses the previous frame's survivor
+    streams for unchanged tiles — bit-identical to the batched path's
+    full recompaction. Sessionless requests batch as before."""
     scene: str
     camera: Camera
     request_id: int = -1
+    session: Optional[str] = None
 
 
 @dataclasses.dataclass(frozen=True)
@@ -131,6 +139,16 @@ class RenderEngine:
         (the default survivor-stream pipeline; O(tiles·k_max) CAT memory,
         the only path that fits production scene sizes) or 'dense' (the
         O(regions×N) parity oracle). Part of the jit-cache key either way.
+    incremental: opt into the frame-coherent serving mode. Requests that
+        carry a `session` id render through `core.coherence` with a sticky
+        per-session `FrameCache` (unchanged tiles reuse the previous
+        frame's survivor streams; output stays bit-identical to the
+        batched full-recompaction path); sessionless requests batch as
+        before, so one batch window can mix both. Telemetry gains the
+        per-frame `tiles_reused` / `tiles_recompacted` /
+        `full_recompactions` counters and their lifetime totals.
+    coherence: a `core.CoherenceConfig` for the incremental mode's
+        fallback thresholds (None = defaults).
     """
 
     def __init__(self,
@@ -139,7 +157,9 @@ class RenderEngine:
                  telemetry: Optional[Telemetry] = None,
                  overflow: Union[OverflowPolicy, str, None] = None,
                  fused: Optional[bool] = None,
-                 dataflow: Optional[str] = None):
+                 dataflow: Optional[str] = None,
+                 incremental: bool = False,
+                 coherence=None):
         plan = RenderPlan() if base is None else as_plan(base)
         if fused is not None:
             plan = dataclasses.replace(
@@ -165,6 +185,12 @@ class RenderEngine:
         # plan covers the traffic that overflowed.
         self._spill_boost: dict[str, int] = {}
         self.spill_retries = 0
+        self.incremental = incremental
+        self.coherence = coherence
+        # Sticky per-session frame caches of the incremental mode (see
+        # core.coherence.FrameCache); scene swaps / plan changes invalidate
+        # them by value inside render_incremental, not here.
+        self._frame_caches: dict[str, object] = {}
 
     @property
     def base_config(self) -> RenderConfig:
@@ -281,9 +307,16 @@ class RenderEngine:
 
     def render_batch(self, requests: Sequence[RenderRequest]) \
             -> list[FrameResult]:
-        """Render a homogeneous batch (one scene, one resolution) in a
-        single vmapped+jitted call. Use `serving.batching.MicroBatcher` to
-        group mixed traffic into such batches."""
+        """Render a homogeneous batch (one scene, one resolution). Use
+        `serving.batching.MicroBatcher` to group mixed traffic into such
+        batches.
+
+        Sessionless requests render in a single vmapped+jitted call. On an
+        incremental engine, requests carrying a session id peel off to the
+        frame-coherent path (one `core.coherence` render each, in request
+        order, so consecutive frames of a session advance its cache even
+        within one batch window); results come back in request order
+        either way, each request served exactly once."""
         requests = list(requests)
         if not requests:
             return []
@@ -302,6 +335,26 @@ class RenderEngine:
             raise ValueError(f"batch of {len(requests)} exceeds max_batch="
                              f"{self.max_batch}; split it upstream")
 
+        coherent = ([i for i, r in enumerate(requests)
+                     if r.session is not None]
+                    if self.incremental else [])
+        if not coherent:
+            return self._render_batched(requests, name, height, width)
+        results: dict[int, FrameResult] = {}
+        plain = [i for i in range(len(requests))
+                 if requests[i].session is None]
+        if plain:
+            for i, fr in zip(plain, self._render_batched(
+                    [requests[i] for i in plain], name, height, width)):
+                results[i] = fr
+        for i in coherent:
+            results[i] = self._render_incremental_one(
+                requests[i], name, height, width)
+        return [results[i] for i in range(len(requests))]
+
+    def _render_batched(self, requests: Sequence[RenderRequest], name: str,
+                        height: int, width: int) -> list[FrameResult]:
+        """The vmapped+jitted batch path (homogeneity already validated)."""
         entry = self._scenes[name]
         n = len(requests)
         bucket = batch_bucket(n, self.max_batch)
@@ -386,3 +439,73 @@ class RenderEngine:
             )
             for i, r in enumerate(requests)
         ]
+
+    def _render_incremental_one(self, request: RenderRequest, name: str,
+                                height: int, width: int) -> FrameResult:
+        """Serve one sessioned frame through the frame-coherent path.
+
+        The session's `FrameCache` is looked up (and stored back) under the
+        request's session id; a scene swap or plan change (including a
+        SPILL pass-bucket double) invalidates it by value inside
+        `core.coherence.render_incremental`, which then serves a full
+        recompaction that re-seeds it. The SPILL retry loop mirrors the
+        batched path: a frame that exhausts its spill capacity doubles the
+        scene's pass bucket and re-renders, so incremental SPILL frames
+        never ship clamped either. Telemetry records the frame exactly
+        once (batch of 1), with the coherence counters attached.
+        """
+        from repro.core import coherence as coh
+        entry = self._scenes[name]
+        tracer = obs_trace.current()
+        retries = 0
+        t0 = time.perf_counter()
+        with tracer.span("engine.render_incremental",
+                         {"scene": name, "session": request.session,
+                          "res": f"{width}x{height}"}) as span:
+            while True:
+                plan = self.plan_for(name, height, width)
+                cache = self._frame_caches.get(request.session)
+                out, counters, cache = coh.render_incremental(
+                    plan, entry.scene, request.camera, cache,
+                    self.coherence, enforce=False)
+                self._frame_caches[request.session] = cache
+                overflow = bool(out.overflow)
+                spill = plan.stream.overflow is OverflowPolicy.SPILL
+                capacity = plan.stream.k_max * plan.stream.max_spill_passes
+                if overflow and spill and capacity < entry.n_bucket:
+                    self._spill_boost[name] = \
+                        2 * self._spill_boost.get(name, 1)
+                    self.spill_retries += 1
+                    retries += 1
+                    continue
+                break
+            dt = time.perf_counter() - t0
+            if tracer.enabled:
+                span.set(retries=retries, overflow=overflow, wall_s=dt,
+                         tiles_reused=float(counters["tiles_reused"]),
+                         tiles_recompacted=float(
+                             counters["tiles_recompacted"]),
+                         full_recompaction=bool(
+                             float(counters["full_recompactions"])))
+
+        counters = dict(counters)
+        if "n_gaussians" in counters:   # report the real count, like the
+            counters["n_gaussians"] = jax.numpy.asarray(   # batched path
+                float(entry.n_real), jax.numpy.float32)
+        rec = {k: np.asarray(v, np.float64).reshape(1)
+               for k, v in counters.items()}
+        self.telemetry.record_batch(batch_size=1, bucket_size=1,
+                                    latency_s=dt, counters=rec,
+                                    height=height, width=width,
+                                    overflow_frames=int(overflow),
+                                    spill_retries=retries)
+        if overflow:
+            enforce_overflow_policy(
+                True, plan.stream.overflow, k_max=plan.stream.k_max,
+                n_passes=plan.stream.max_spill_passes,
+                context=f"incremental session {request.session!r} of scene "
+                        f"{name!r} at {height}x{width}")
+        return FrameResult(
+            request=request, image=out.image, alpha=out.alpha,
+            counters=dict(counters), batch_size=1, bucket_size=1,
+            render_s=dt, overflow=overflow)

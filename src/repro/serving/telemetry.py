@@ -53,6 +53,12 @@ class Telemetry:
         self.total_batches = 0
         self.total_overflow_frames = 0
         self.total_spill_retries = 0
+        # Frame-coherence lifetime totals (incremental serving mode): summed
+        # from the per-frame tiles_reused / tiles_recompacted /
+        # full_recompactions counters whenever a batch carries them.
+        self.total_tiles_reused = 0
+        self.total_tiles_recompacted = 0
+        self.total_full_recompactions = 0
 
     def record_batch(self, *, batch_size: int, bucket_size: int,
                      latency_s: float, counters: dict,
@@ -90,6 +96,14 @@ class Telemetry:
         self.total_batches += 1
         self.total_overflow_frames += overflow_frames
         self.total_spill_retries += spill_retries
+        # Counter means × batch_size = the batch's total (coherence frames
+        # arrive as batches of 1, so this is exact, not an estimate).
+        self.total_tiles_reused += \
+            int(round(rec.counters.get("tiles_reused", 0.0) * batch_size))
+        self.total_tiles_recompacted += int(round(
+            rec.counters.get("tiles_recompacted", 0.0) * batch_size))
+        self.total_full_recompactions += int(round(
+            rec.counters.get("full_recompactions", 0.0) * batch_size))
         self._publish(rec, height, width)
         return rec
 
@@ -118,6 +132,18 @@ class Telemetry:
             reg.gauge("render_spill_passes",
                       "Mean spill passes used by the most recent batch"
                       ).set(rec.counters["spill_passes"])
+        for key, mname, help_ in (
+                ("tiles_reused", "render_tiles_reused_total",
+                 "Stage-1 tile compactions skipped by the frame-coherent "
+                 "incremental mode (survivor streams reused)"),
+                ("tiles_recompacted", "render_tiles_recompacted_total",
+                 "Tiles whose candidate set changed and were recompacted"),
+                ("full_recompactions", "render_full_recompactions_total",
+                 "Incremental frames that fell back to a full recompaction "
+                 "(cold cache, camera jump, or changed-tile fraction)")):
+            if key in rec.counters:
+                reg.counter(mname, help_).inc(
+                    rec.counters[key] * rec.batch_size)
 
     def snapshot(self) -> dict:
         """Fold the window into a stats dict (all python scalars)."""
@@ -129,6 +155,10 @@ class Telemetry:
                         total_overflow_frames=self.total_overflow_frames,
                         spill_passes=0.0, spill_retries=0,
                         total_spill_retries=self.total_spill_retries,
+                        total_tiles_reused=self.total_tiles_reused,
+                        total_tiles_recompacted=self.total_tiles_recompacted,
+                        total_full_recompactions=(
+                            self.total_full_recompactions),
                         counters={})
         lat_ms = np.array([r.latency_s for r in recs]) * 1e3
         frames = sum(r.batch_size for r in recs)
@@ -160,6 +190,9 @@ class Telemetry:
             spill_passes=agg.get("spill_passes", 0.0),
             spill_retries=sum(r.spill_retries for r in recs),
             total_spill_retries=self.total_spill_retries,
+            total_tiles_reused=self.total_tiles_reused,
+            total_tiles_recompacted=self.total_tiles_recompacted,
+            total_full_recompactions=self.total_full_recompactions,
             counters=agg,
         )
 

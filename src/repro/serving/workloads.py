@@ -67,6 +67,30 @@ def max_batch_for(height: int, width: int,
     return min(1 << (frames.bit_length() - 1), 64)
 
 
+def trajectory_cameras(n_frames: int, *, width: int = 128, height: int = 128,
+                       step: float = 2 * math.pi / 64,
+                       jump_frames=(), jump_offset: float = 2.0,
+                       start: float = 0.0, radius: float = 4.0,
+                       center=(0.0, 0.0, 4.0), fov_deg: float = 60.0) -> list:
+    """A client-like camera trajectory: a smooth orbit (azimuth advances by
+    `step` per frame) with jump-cuts injected at `jump_frames` — at each
+    such frame the azimuth additionally skips ahead by `jump_offset`
+    radians, the camera-path analogue of a scene cut. This is the workload
+    the frame-coherent serving mode (`RenderEngine(incremental=True)`) is
+    measured on: the smooth segments reuse almost every tile's survivor
+    stream, the cuts force (and must be charged as) full recompactions.
+    Deterministic, so benchmark counters diff exactly run-to-run."""
+    jumps = set(jump_frames)
+    cams, theta = [], start
+    for i in range(n_frames):
+        if i in jumps and i > 0:
+            theta += jump_offset
+        cams.append(orbit_camera(theta, width, height, radius=radius,
+                                 center=center, fov_deg=fov_deg))
+        theta += step
+    return cams
+
+
 def hd1080_cameras(n: int, *, width: int = HD1080_WIDTH,
                    height: int = HD1080_HEIGHT) -> list:
     """n orbit poses at the Full-HD resolution."""

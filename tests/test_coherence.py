@@ -1,0 +1,229 @@
+"""Frame-coherent incremental rendering (core.coherence) — the parity
+harness.
+
+The contract under test: `render_incremental` with a warm `FrameCache` is
+bit-identical to per-frame full recompaction — images, `entry_alive`, and
+every additive workload counter — across {CLAMP, SPILL} x {jnp, fused},
+because reused survivor rows are re-sorted to the new frame's global depth
+ranks and recompacted tiles run the very same Stage-1 compaction, so the
+CTU/blend stages consume exactly equal integer lists either way.
+
+Plus the policy edges: a jump-cut (camera_delta past the threshold) or a
+changed-tile fraction past `max_changed_frac` falls back to one full
+recompaction (charged to the `full_recompactions` counter, never silently
+reused); a plan or scene swap invalidates the cache by value; SPILL
+trajectories whose per-frame pass usage changes mid-stream keep parity.
+"""
+import dataclasses
+
+import numpy as np
+import pytest
+
+import jax
+
+from repro.core import (CoherenceConfig, GridConfig, OverflowPolicy,
+                        RasterConfig, RenderPlan, StreamConfig, TestConfig,
+                        camera_delta, orbit_camera, project, random_scene,
+                        render_incremental, tile_fingerprints)
+from repro.core.culling import aabb_mask
+from repro.core.precision import MIXED
+from repro.serving.workloads import trajectory_cameras
+
+# Compact screen footprints: the production regime frame coherence targets
+# (per-tile candidate sets change slowly under small camera steps).
+SCENE_KW = dict(scale_range=(-3.3, -2.7), stretch=3.0,
+                opacity_range=(-1.0, 3.0))
+RES = 64                         # 4x4 = 16 tiles
+STEP = 0.004                     # smooth-orbit step that actually reuses
+
+# Coherence counters are *about* the incremental mode, not the frame's
+# workload — everything else must match full recompaction exactly.
+COHERENCE_KEYS = {"tiles_reused", "tiles_recompacted", "full_recompactions"}
+
+
+def make_plan(policy: str, fused: bool = False) -> RenderPlan:
+    if policy == "spill":
+        stream = StreamConfig(k_max=32, overflow=OverflowPolicy.SPILL,
+                              max_spill_passes=8)
+    else:
+        stream = StreamConfig(k_max=256)     # generous: CLAMP never trips
+    return RenderPlan(grid=GridConfig(height=RES, width=RES),
+                      test=TestConfig(method="cat", precision=MIXED),
+                      stream=stream, raster=RasterConfig(fused=fused))
+
+
+def assert_frames_equal(out_i, c_i, out_f, c_f):
+    np.testing.assert_array_equal(np.asarray(out_i.image),
+                                  np.asarray(out_f.image))
+    np.testing.assert_array_equal(np.asarray(out_i.entry_alive),
+                                  np.asarray(out_f.entry_alive))
+    assert bool(out_i.overflow) == bool(out_f.overflow)
+    for k in set(c_f) - COHERENCE_KEYS:
+        np.testing.assert_array_equal(np.asarray(c_i[k]),
+                                      np.asarray(c_f[k]), err_msg=k)
+
+
+# ---------------------------------------------------------------------------
+# the headline contract
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("fused", [False, True], ids=["jnp", "fused"])
+@pytest.mark.parametrize("policy", ["clamp", "spill"])
+def test_incremental_bit_matches_full_along_trajectory(policy, fused):
+    """8 frames of smooth orbit + one jump-cut: every incremental frame is
+    bit-identical to a cold-cache (full recompaction) render, and the
+    smooth segment really reuses tiles (the parity is not vacuous)."""
+    scene = random_scene(jax.random.PRNGKey(0), 300, **SCENE_KW)
+    plan = make_plan(policy, fused)
+    cams = trajectory_cameras(8, width=RES, height=RES, step=STEP,
+                              jump_frames=(5,))
+    tiles = plan.grid.make().num_tiles
+    cache, reused_total = None, 0
+    for cam in cams:
+        out_i, c_i, cache = render_incremental(plan, scene, cam, cache)
+        out_f, c_f, _ = render_incremental(plan, scene, cam, None)
+        assert_frames_equal(out_i, c_i, out_f, c_f)
+        reused = int(c_i["tiles_reused"])
+        assert reused + int(c_i["tiles_recompacted"]) == tiles
+        reused_total += reused
+    assert reused_total > 0
+    assert cache.frames == len(cams)
+    assert cache.tiles_reused == reused_total
+
+
+# ---------------------------------------------------------------------------
+# fallback policy
+# ---------------------------------------------------------------------------
+
+def test_jump_cut_forces_full_recompaction():
+    """Smooth frames reuse; the jump-cut frame (camera_delta past the
+    threshold) recompacts everything and is charged as a full
+    recompaction."""
+    scene = random_scene(jax.random.PRNGKey(1), 300, **SCENE_KW)
+    plan = make_plan("clamp")
+    cfg = CoherenceConfig()
+    jump = 4
+    cams = trajectory_cameras(7, width=RES, height=RES, step=STEP,
+                              jump_frames=(jump,))
+    assert camera_delta(cams[jump - 1], cams[jump]) > cfg.max_camera_jump
+    assert camera_delta(cams[1], cams[2]) < cfg.max_camera_jump
+    tiles = plan.grid.make().num_tiles
+    cache = None
+    for i, cam in enumerate(cams):
+        _, c, cache = render_incremental(plan, scene, cam, cache, cfg)
+        if i in (0, jump):                  # cold cache / jump-cut
+            assert float(c["full_recompactions"]) == 1.0
+            assert int(c["tiles_reused"]) == 0
+            assert int(c["tiles_recompacted"]) == tiles
+        else:
+            assert float(c["full_recompactions"]) == 0.0
+            assert int(c["tiles_reused"]) > 0
+    assert cache.full_recompactions == 2
+
+
+def test_changed_frac_threshold_falls_back():
+    """max_changed_frac=0.0 makes any candidate-set change a full
+    recompaction — the threshold knob works, and the fallback path keeps
+    parity."""
+    scene = random_scene(jax.random.PRNGKey(2), 300, **SCENE_KW)
+    plan = make_plan("clamp")
+    strict = CoherenceConfig(max_changed_frac=0.0)
+    cams = trajectory_cameras(3, width=RES, height=RES, step=STEP)
+    cache = None
+    for cam in cams:
+        out_i, c_i, cache = render_incremental(plan, scene, cam, cache,
+                                               strict)
+        out_f, c_f, _ = render_incremental(plan, scene, cam, None)
+        assert_frames_equal(out_i, c_i, out_f, c_f)
+    # frame 0 is cold; frames 1-2 changed *something* at this density and
+    # the zero tolerance turned each into a full recompaction
+    assert cache.full_recompactions == 3
+    assert cache.tiles_reused == 0
+
+
+def test_scene_swap_invalidates_cache():
+    """Passing a different scene (or plan) with a warm cache must not reuse
+    anything from it: the frame is a full recompaction into a *fresh*
+    cache."""
+    a = random_scene(jax.random.PRNGKey(3), 300, **SCENE_KW)
+    b = random_scene(jax.random.PRNGKey(4), 300, **SCENE_KW)
+    plan = make_plan("clamp")
+    cam = orbit_camera(0.0, RES, RES)
+    _, _, cache_a = render_incremental(plan, a, cam, None)
+    _, _, cache_a = render_incremental(
+        plan, a, orbit_camera(STEP, RES, RES), cache_a)
+
+    out_b, c_b, cache_b = render_incremental(plan, b, cam, cache_a)
+    assert cache_b is not cache_a           # swap -> fresh cache
+    assert cache_b.scene is b
+    assert float(c_b["full_recompactions"]) == 1.0
+    out_ref, c_ref, _ = render_incremental(plan, b, cam, None)
+    assert_frames_equal(out_b, c_b, out_ref, c_ref)
+
+    # a plan swap (different k_max -> different compiled program and row
+    # capacity) invalidates the same way
+    wider = dataclasses.replace(plan, stream=StreamConfig(k_max=512))
+    _, c_w, cache_w = render_incremental(wider, a, cam, cache_a)
+    assert cache_w is not cache_a
+    assert cache_w.plan == wider
+    assert float(c_w["full_recompactions"]) == 1.0
+
+
+# ---------------------------------------------------------------------------
+# SPILL pass usage changing mid-trajectory
+# ---------------------------------------------------------------------------
+
+def test_spill_pass_usage_change_keeps_parity():
+    """A jump-cut lands the camera where per-tile survivor lists are longer
+    or shorter, so the spill_passes counter moves mid-trajectory; parity
+    must hold on every frame either side of the change."""
+    # Mixed footprints (demo-scene regime): occupancy swings with pose.
+    scene = random_scene(jax.random.PRNGKey(8), 300,
+                         scale_range=(-2.9, -2.4), stretch=4.0,
+                         opacity_range=(-1.0, 3.0))
+    plan = RenderPlan(grid=GridConfig(height=RES, width=RES),
+                      test=TestConfig(method="cat", precision=MIXED),
+                      stream=StreamConfig(k_max=8,
+                                          overflow=OverflowPolicy.SPILL,
+                                          max_spill_passes=64))
+    cams = trajectory_cameras(6, width=RES, height=RES, step=STEP,
+                              jump_frames=(3,), jump_offset=1.0)
+    cache, passes_seen = None, set()
+    for cam in cams:
+        out_i, c_i, cache = render_incremental(plan, scene, cam, cache)
+        out_f, c_f, _ = render_incremental(plan, scene, cam, None)
+        assert_frames_equal(out_i, c_i, out_f, c_f)
+        assert not bool(out_i.overflow)
+        passes_seen.add(float(c_i["spill_passes"]))
+    assert len(passes_seen) >= 2, \
+        "trajectory must actually change the spill pass usage"
+
+
+# ---------------------------------------------------------------------------
+# fingerprints
+# ---------------------------------------------------------------------------
+
+def test_fingerprint_counts_match_stage1_membership():
+    """The fingerprint's count lane is the exact per-tile candidate count —
+    the same sum Stage-1's aabb_mask produces — at several poses."""
+    scene = random_scene(jax.random.PRNGKey(9), 400, **SCENE_KW)
+    grid = GridConfig(height=RES, width=RES).make()
+    for theta in (0.0, 0.4, 2.1):
+        proj = project(scene, orbit_camera(theta, RES, RES))
+        _, counts = tile_fingerprints(proj, grid)
+        mask = aabb_mask(proj, grid.tile_origins().astype(np.float32),
+                         grid.tile)
+        np.testing.assert_array_equal(np.asarray(counts),
+                                      np.asarray(mask).sum(axis=1))
+
+
+def test_fingerprint_is_camera_stable_for_static_pose():
+    """Same scene + same camera twice -> identical fingerprints (they key
+    the reuse decision, so any nondeterminism would break everything)."""
+    scene = random_scene(jax.random.PRNGKey(10), 200, **SCENE_KW)
+    grid = GridConfig(height=RES, width=RES).make()
+    cam = orbit_camera(0.7, RES, RES)
+    fp1, c1 = tile_fingerprints(project(scene, cam), grid)
+    fp2, c2 = tile_fingerprints(project(scene, cam), grid)
+    np.testing.assert_array_equal(np.asarray(fp1), np.asarray(fp2))
+    np.testing.assert_array_equal(np.asarray(c1), np.asarray(c2))

@@ -431,6 +431,154 @@ def test_mesh_sharded_engine_matches(engine):
 
 
 # ---------------------------------------------------------------------------
+# frame-coherent incremental serving (sticky sessions)
+# ---------------------------------------------------------------------------
+
+# Compact footprints + a tiny orbit step: the regime where per-tile
+# candidate sets are stable frame-to-frame, so sticky sessions actually
+# reuse survivor streams (asserted below — the tests must not pass
+# vacuously through the full-recompaction fallback).
+COHERENT_KW = dict(scale_range=(-3.3, -2.7), stretch=3.0,
+                   opacity_range=(-1.0, 3.0))
+COHERENT_STEP = 0.001
+
+
+def coherent_engine(**kw):
+    # Private telemetry/registry per engine: the attribution assertions
+    # below read lifetime counter values, which the process-default
+    # registry would accumulate across tests.
+    from repro.obs.metrics import MetricsRegistry
+    from repro.serving.telemetry import Telemetry
+    eng = RenderEngine(CFG, max_batch=8, incremental=True,
+                       telemetry=Telemetry(registry=MetricsRegistry()), **kw)
+    eng.register_scene(
+        "s", random_scene(jax.random.PRNGKey(11), 300, **COHERENT_KW),
+        k_max=512)
+    return eng
+
+
+def smooth(i, res=32):
+    return orbit_camera(i * COHERENT_STEP, res, res)
+
+
+def test_sticky_incremental_sessions_through_microbatcher():
+    """A session's cache survives across flush ticks: later frames of a
+    smooth trajectory reuse tiles, only frame 0 is a full recompaction,
+    and every frame bit-matches a cold-cache (full recompaction) render."""
+    from repro.core import render_incremental
+    eng = coherent_engine()
+    plan = eng.plan_for("s", 32, 32)
+    tiles = plan.grid.make().num_tiles
+    mb = MicroBatcher(eng)
+    n_frames = 5
+    for i in range(n_frames):              # one flush per frame = sticky
+        fut = mb.submit("s", smooth(i), session="cli-1")
+        assert mb.flush() == 1
+        r = fut.result(timeout=0)
+        assert r.frame.batch_size == r.frame.bucket_size == 1
+        ref, _, _ = render_incremental(plan, eng.scene("s"), smooth(i),
+                                       None, enforce=False)
+        np.testing.assert_array_equal(np.asarray(r.image),
+                                      np.asarray(ref.image))
+        if i == 0:
+            assert float(r.counters["full_recompactions"]) == 1.0
+        else:
+            assert float(r.counters["full_recompactions"]) == 0.0
+            assert int(r.counters["tiles_reused"]) > 0
+        assert int(r.counters["tiles_reused"]) \
+            + int(r.counters["tiles_recompacted"]) == tiles
+    t = eng.telemetry
+    assert t.total_full_recompactions == 1
+    assert t.total_tiles_reused + t.total_tiles_recompacted \
+        == n_frames * tiles
+    assert t.total_tiles_reused > 0
+
+
+def test_mixed_coherent_incoherent_batch_window():
+    """Sessioned and sessionless requests share one flush window: results
+    come back in submission order, the sessionless pair batches (bucket 2),
+    the sessioned frames render incrementally (bucket 1), and two distinct
+    sessions keep distinct caches."""
+    eng = coherent_engine()
+    mb = MicroBatcher(eng)
+    futs = [mb.submit("s", smooth(0)),                     # plain
+            mb.submit("s", smooth(0), session="a"),
+            mb.submit("s", smooth(1)),                     # plain
+            mb.submit("s", smooth(1), session="b")]
+    assert mb.flush() == 4
+    rs = [f.result(timeout=0) for f in futs]
+    assert [r.frame.bucket_size for r in rs] == [2, 1, 2, 1]
+    assert [r.frame.request.session for r in rs] == [None, "a", None, "b"]
+    # both sessions are cold -> each paid its own full recompaction
+    assert all(float(rs[i].counters["full_recompactions"]) == 1.0
+               for i in (1, 3))
+    assert len(eng._frame_caches) == 2
+    # the incremental frame agrees with its batched twin (same plan, same
+    # camera, different execution path)
+    for plain, coh in ((0, 1), (2, 3)):
+        np.testing.assert_allclose(np.asarray(rs[plain].image),
+                                   np.asarray(rs[coh].image), atol=1e-6)
+
+
+def test_incremental_telemetry_attribution():
+    """The lifetime coherence totals and the metrics-registry counters both
+    equal the sum of the per-frame counters — batches of one make the
+    mean x batch_size folding exact."""
+    eng = coherent_engine()
+    sums = dict(tiles_reused=0, tiles_recompacted=0, full_recompactions=0)
+    for i in range(4):
+        r, = eng.render_batch(
+            [RenderRequest("s", smooth(i), session="cli")])
+        for k in sums:
+            sums[k] += int(r.counters[k])
+    t = eng.telemetry
+    assert t.total_tiles_reused == sums["tiles_reused"]
+    assert t.total_tiles_recompacted == sums["tiles_recompacted"]
+    assert t.total_full_recompactions == sums["full_recompactions"]
+    reg = t.registry
+    assert reg.get("render_tiles_reused_total").value() \
+        == sums["tiles_reused"]
+    assert reg.get("render_tiles_recompacted_total").value() \
+        == sums["tiles_recompacted"]
+    assert reg.get("render_full_recompactions_total").value() \
+        == sums["full_recompactions"]
+    snap = t.snapshot()
+    assert snap["total_tiles_reused"] == sums["tiles_reused"]
+    assert snap["frames"] == 4
+
+
+def test_incremental_fallback_frames_not_double_counted():
+    """A jump-cut frame is charged once: one full_recompactions increment,
+    its tiles all land in tiles_recompacted (none in tiles_reused), and the
+    per-frame invariant keeps the lifetime totals summing to exactly
+    frames x tiles — the fallback is never counted as both a full AND a
+    per-tile recompaction."""
+    eng = coherent_engine()
+    plan = eng.plan_for("s", 32, 32)
+    tiles = plan.grid.make().num_tiles
+    # frame 2 jumps out to theta=2.0, frame 3 jumps back to the smooth path
+    cams = [smooth(0), smooth(1), orbit_camera(2.0, 32, 32), smooth(2)]
+    for cam in cams:
+        eng.render_batch([RenderRequest("s", cam, session="cli")])
+    t = eng.telemetry
+    assert t.total_full_recompactions == 3      # cold + 2 jumps
+    assert t.total_tiles_reused + t.total_tiles_recompacted \
+        == len(cams) * tiles
+    assert t.total_tiles_recompacted >= 3 * tiles
+
+
+def test_incremental_sessions_isolated_from_sessionless_telemetry():
+    """Sessionless traffic through an incremental engine takes the batched
+    path untouched: no cache entries, no coherence counters."""
+    eng = coherent_engine()
+    eng.render_batch([RenderRequest("s", smooth(0)),
+                      RenderRequest("s", smooth(1))])
+    assert not eng._frame_caches
+    assert eng.telemetry.total_tiles_reused == 0
+    assert eng.telemetry.total_full_recompactions == 0
+
+
+# ---------------------------------------------------------------------------
 # telemetry
 # ---------------------------------------------------------------------------
 

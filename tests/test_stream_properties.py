@@ -5,22 +5,31 @@
 * SPILL parity: under randomly forced overflow (tiny k_max, random pass
   split), the multi-pass spill render is bit-identical to the dense oracle
   (images and workload counters) — the invariant tests/test_spill.py pins
-  with a seeded grid, here fuzzed over (seed, n, k_max).
+  with a seeded grid, here fuzzed over (seed, n, k_max);
+* frame-coherent incremental rendering: a trajectory served through one
+  `FrameCache` equals the same trajectory split at a random frame and
+  resumed cold (the cache is an accelerator, never a semantic), and
+  `tiles_reused + tiles_recompacted` covers the tile count on every frame
+  — fuzzed over (seed, n, split); tests/test_coherence.py pins the same
+  contract with fixed seeds.
 
 Skipped (whole module) when hypothesis is absent — same convention as
 test_cat.py; tests/test_stream.py and tests/test_spill.py cover the same
 properties with fixed seeds so the parity is exercised even without
 hypothesis.
 """
+import numpy as np
 import pytest
 hypothesis = pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 import jax
 
-from repro.core import default_camera, random_scene
+from repro.core import (GridConfig, RenderPlan, StreamConfig, TestConfig,
+                        default_camera, random_scene, render_incremental)
 from repro.core.cat import SamplingMode
 from repro.core.precision import FULL_FP32, MIXED
+from repro.serving.workloads import trajectory_cameras
 from test_stream import check_entry_cat_equals_dense_gathered
 from test_spill import check_spill_matches_dense_oracle
 
@@ -46,3 +55,41 @@ def test_spill_matches_dense_oracle_property(method, seed, n, k_max):
     passes = -(-n // k_max)
     check_spill_matches_dense_oracle(scene, cam, k_max=k_max, passes=passes,
                                      method=method)
+
+
+FRAMES = 6
+
+
+@settings(deadline=None, max_examples=4)
+@given(seed=st.integers(0, 2**31 - 1), n=st.integers(80, 300),
+       split=st.integers(1, FRAMES - 1))
+def test_incremental_invariant_to_split_resume_property(seed, n, split):
+    """Serving a trajectory through one warm cache == splitting it at any
+    frame and resuming with a cold cache: identical images frame-for-frame
+    (both sides bit-match full recompaction, so they bit-match each other).
+    Along the way, reused + recompacted must cover the tile count on every
+    frame of both runs."""
+    scene = random_scene(jax.random.PRNGKey(seed), n,
+                         scale_range=(-3.3, -2.7), stretch=3.0,
+                         opacity_range=(-1.0, 3.0))
+    plan = RenderPlan(grid=GridConfig(height=64, width=64),
+                      test=TestConfig(method="cat", precision=MIXED),
+                      stream=StreamConfig(k_max=512))
+    cams = trajectory_cameras(FRAMES, width=64, height=64, step=0.004)
+    tiles = plan.grid.make().num_tiles
+
+    def serve(cams, cache=None):
+        frames = []
+        for cam in cams:
+            out, c, cache = render_incremental(plan, scene, cam, cache)
+            assert int(c["tiles_reused"]) + int(c["tiles_recompacted"]) \
+                == tiles
+            frames.append(np.asarray(out.image))
+        return frames, cache
+
+    continuous, cache = serve(cams)
+    assert cache.frames == FRAMES
+    head, _ = serve(cams[:split])
+    tail, _ = serve(cams[split:])          # cold resume mid-trajectory
+    for a, b in zip(continuous, head + tail):
+        np.testing.assert_array_equal(a, b)

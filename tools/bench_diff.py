@@ -16,7 +16,10 @@ generous relative tolerance (they measure the runner, not the code).
 
 Points are matched on (n, res) and compared per dataflow; a point present
 in only one artifact is skipped unless --require-all (a `--quick` candidate
-legitimately covers a subset of the committed full sweep). The spill-smoke
+legitimately covers a subset of the committed full sweep). Trajectory
+(frame-coherence) points are matched on (n, res, mode) with the structural
+counters — frames, tiles, full_recompactions, per-frame parity — compared
+exactly and the tile-reuse counts under --counter-tol. The spill-smoke
 and hd1080 sections are compared when both artifacts carry them at the
 same configuration. Exit status: 0 = no regressions, 1 = regressions
 (plus a readable table either way).
@@ -134,6 +137,37 @@ def diff_artifacts(base: dict, cand: dict, *, wall_tol: float,
                            bpts[key][dataflow], cpts[key][dataflow])
     for key in sorted(set(cpts) - set(bpts)):
         d.note(f"n={key[0]}/res={key[1]}: only in candidate (new point)")
+
+    btr = {(p["n"], p["res"], p["mode"]): p
+           for p in base.get("trajectory", [])}
+    ctr = {(p["n"], p["res"], p["mode"]): p
+           for p in cand.get("trajectory", [])}
+    for key in sorted(btr):
+        where = f"traj/n={key[0]}/res={key[1]}/{key[2]}"
+        if key not in ctr:
+            if require_all:
+                d.counter(where, "present", True, False, tol=0.0)
+            else:
+                d.note(f"{where}: not in candidate (skipped)")
+            continue
+        b, c = btr[key], ctr[key]
+        # Structural facts of the rung — any drift means the workload
+        # itself changed, so these are exact regardless of --counter-tol.
+        for metric in ("frames", "tiles", "k_max", "spill_passes",
+                       "full_recompactions", "parity"):
+            if metric in b and metric in c:
+                d.counter(where, metric, b[metric], c[metric], tol=0.0)
+        # Reuse counts are deterministic too, but a near-tie projected AABB
+        # edge sitting on a tile boundary can flip one tile's fingerprint
+        # between CPUs — the shared --counter-tol absorbs exactly that.
+        for metric in ("tiles_reused", "tiles_recompacted"):
+            if metric in b and metric in c:
+                d.counter(where, metric, b[metric], c[metric])
+        if "wall_s" in b and "wall_s" in c:
+            d.wall(where, b["wall_s"], c["wall_s"])
+    for key in sorted(set(ctr) - set(btr)):
+        d.note(f"traj/n={key[0]}/res={key[1]}/{key[2]}: only in candidate "
+               "(new point)")
 
     bs, cs = base.get("spill_smoke"), cand.get("spill_smoke")
     if bs and cs:
