@@ -11,7 +11,8 @@ from repro.core.hierarchy import (hierarchical_test, stream_hierarchical_test,
                                   baseline_masks)
 from repro.core.renderer import (Renderer, RenderPlan, GridConfig,
                                  TestConfig, StreamConfig, RasterConfig,
-                                 OverflowPolicy, StreamOverflowWarning,
+                                 ShardConfig, OverflowPolicy,
+                                 StreamOverflowWarning,
                                  StreamOverflowError, ProjectedScene,
                                  TileStream, StageSpec, measure_k_max,
                                  cat_mask_elems, frame_counters, as_plan)
@@ -35,7 +36,7 @@ __all__ = [
     "hierarchical_test", "stream_hierarchical_test", "stream_entry_test",
     "StreamHierarchyOut", "baseline_masks",
     "Renderer", "RenderPlan", "GridConfig", "TestConfig", "StreamConfig",
-    "RasterConfig", "OverflowPolicy", "StreamOverflowWarning",
+    "RasterConfig", "ShardConfig", "OverflowPolicy", "StreamOverflowWarning",
     "StreamOverflowError", "ProjectedScene", "TileStream", "StageSpec",
     "measure_k_max", "cat_mask_elems", "frame_counters", "as_plan",
     "FrameCache", "CoherenceConfig", "render_incremental",

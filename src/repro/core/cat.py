@@ -27,7 +27,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.gaussians import Projected, classify_spiky
-from repro.core.culling import TileGrid, tile_divisor_chunk, map_tile_chunks
+from repro.core.culling import TileGrid, canonical_tile_block, map_tile_blocks
 from repro.core.precision import PrecisionScheme, FULL_FP32
 
 
@@ -171,15 +171,21 @@ def minitile_cat_mask(proj: Projected, grid: TileGrid,
 # Entry-indexed CAT (the survivor-stream dataflow)
 # ---------------------------------------------------------------------------
 
-ENTRY_CHUNK_ELEMS = 1 << 26   # bound on T*K*Mt*4 weight elements held live;
-#                               larger problems lax.map over tile chunks.
+ENTRY_CHUNK_ELEMS = 1 << 26   # bound on block*K*Mt*4 weight elements live
+#                               per lax.map slab.
+ENTRY_BLOCK_TILES = 256       # cap on the canonical CAT block (tiles/slab);
+#                               see canonical_tile_block — the block depends
+#                               only on (grid, K, Mt), never on the row
+#                               count, so sharded/subset CAT bit-matches the
+#                               full grid.
 
 
 def entry_cat_mask(proj: Projected, grid: TileGrid,
                    lists: jax.Array, valid: jax.Array,
                    mode: SamplingMode = SamplingMode.UNIFORM_DENSE,
                    prec: PrecisionScheme = FULL_FP32,
-                   spiky_threshold: float = 3.0) -> jax.Array:
+                   spiky_threshold: float = 3.0,
+                   tile_origins: jax.Array | None = None) -> jax.Array:
     """(T, K, minitiles_per_tile) bool: CAT evaluated only on compacted
     per-tile list entries — the stream-dataflow counterpart of
     `minitile_cat_mask`.
@@ -198,8 +204,13 @@ def entry_cat_mask(proj: Projected, grid: TileGrid,
     compacted pass and only that pass's O(T·k_max·Mt) weights/masks (plus
     the `ENTRY_CHUNK_ELEMS`-bounded chunk intermediates) are live at a
     time — the bounded CTU working set the spill policy guarantees.
+
+    tile_origins: optional (T, 2) int origins of the tiles the rows of
+    `lists` belong to — defaults to the full grid; a row subset evaluates
+    only those tiles (the tile-sharded / shard-recovery entry point).
     """
-    t_origins = grid.tile_origins().astype(jnp.float32)        # (T, 2)
+    t_origins = (grid.tile_origins() if tile_origins is None
+                 else tile_origins).astype(jnp.float32)        # (T, 2)
     local = grid.minitile_local_origins().astype(jnp.float32)  # (Mt, 2)
     m = float(grid.minitile - 1)
     p_top = t_origins[:, None, :] + (local + jnp.asarray([0.5, 0.5]))
@@ -231,10 +242,21 @@ def entry_cat_mask(proj: Projected, grid: TileGrid,
 
     t, k = lists.shape
     mt = local.shape[0]
-    chunk = tile_divisor_chunk(t, k * mt * 4, ENTRY_CHUNK_ELEMS)
-    return map_tile_chunks(eval_chunk,
-                           (p_top, p_bot, mu, conic, lhs, live, spiky),
-                           t, chunk)
+    operands = (p_top, p_bot, mu, conic, lhs, live, spiky)
+    # Route and block size must be functions of full-grid constants only
+    # (never of t, the row count of *this* call): the tile-sharding parity
+    # contract needs the full grid, each shard's slice, and recovery
+    # subsets to compile the identical program, or shape-dependent fusion
+    # flips near-tie `lhs > E*(1-slack)` comparisons by ~1 ulp. When the
+    # whole grid fits in one chunk, every row count takes the plain
+    # straight-line call (which is also what the dense path compiles to,
+    # keeping stream/dense CAT bit-parity testable); past the memory bound
+    # every row count takes the fixed-block lax.map route.
+    if grid.num_tiles * k * mt * 4 <= ENTRY_CHUNK_ELEMS:
+        return eval_chunk(*operands)
+    cap = min(ENTRY_BLOCK_TILES, 1 << (grid.num_tiles.bit_length() - 1))
+    block = canonical_tile_block(k * mt * 4, ENTRY_CHUNK_ELEMS, cap)
+    return map_tile_blocks(eval_chunk, operands, t, block)
 
 
 def leader_pixel_count(proj: Projected, grid: TileGrid, mode: SamplingMode,

@@ -158,7 +158,11 @@ def map_tile_chunks(fn, operands, t: int, chunk: int):
     is a plain call of `fn` on the full arrays; otherwise the tile axis is
     reshaped to (t/chunk, chunk, ...) and `fn` is `lax.map`ped over chunks,
     bounding live memory to one chunk's intermediates. `fn` must be
-    tile-elementwise (no cross-tile reductions) so both routes agree.
+    tile-elementwise (no cross-tile reductions) so both routes agree up to
+    floating-point association — XLA may fuse the two routes differently,
+    so near-tie float comparisons inside `fn` can flip between them. Use
+    `map_tile_blocks` where results must be bit-identical across different
+    row counts (the tile-sharding parity contract).
     """
     if chunk >= t:
         return fn(*operands)
@@ -166,6 +170,49 @@ def map_tile_chunks(fn, operands, t: int, chunk: int):
     stacked = tuple(x.reshape((nb, chunk) + x.shape[1:]) for x in operands)
     out = jax.lax.map(lambda xs: fn(*xs), stacked)
     return jax.tree.map(lambda x: x.reshape((t,) + x.shape[2:]), out)
+
+
+def canonical_tile_block(per_tile_elems: int, limit: int, cap: int) -> int:
+    """Largest power-of-two block <= `cap` with block*per_tile_elems <=
+    `limit` (min 1). By construction this is independent of how many tile
+    rows a particular call carries — derive `cap` from full-grid constants
+    (e.g. `num_tiles`), never from the row count, so the full grid, a
+    contiguous shard slice, and an arbitrary tile subset all pick the same
+    block and therefore compile the same `map_tile_blocks` body.
+    """
+    b = 1
+    while b * 2 <= cap and b * 2 * per_tile_elems <= limit:
+        b *= 2
+    return b
+
+
+def map_tile_blocks(fn, operands, t: int, block: int):
+    """Apply `fn` over the tile axis in fixed-shape blocks of `block` tiles.
+
+    Unlike `map_tile_chunks`, the block shape does not depend on `t`: the
+    tile axis is zero-padded up to a multiple of `block`, `fn` is
+    `lax.map`ped over (block, ...) slabs (even when a single slab would
+    fit), and the padding rows are sliced off the result. Every call that
+    shares a `block` compiles the identical per-slab program, so per-row
+    results are bit-identical whether the rows arrive as the full grid, a
+    shard's contiguous slice, or a scattered subset — shape-dependent XLA
+    fusion otherwise flips near-tie float comparisons between row counts.
+    `fn` must be tile-elementwise (no cross-tile reductions, padding rows
+    must not poison real rows).
+
+    Always at least two slabs: XLA rewrites a trip-count-1 loop into an
+    inline call, which fuses differently from a real loop body — padding a
+    single-slab call up to two keeps the compiled body identical to the
+    multi-slab case.
+    """
+    nb = max(2, -(-t // block))
+    pad = nb * block - t
+    padded = tuple(
+        jnp.pad(x, ((0, pad),) + ((0, 0),) * (x.ndim - 1)) for x in operands)
+    stacked = tuple(x.reshape((nb, block) + x.shape[1:]) for x in padded)
+    out = jax.lax.map(lambda xs: fn(*xs), stacked)
+    return jax.tree.map(
+        lambda x: x.reshape((nb * block,) + x.shape[2:])[:t], out)
 
 
 def aabb_mask(proj: Projected, origins: jax.Array, size: int) -> jax.Array:

@@ -151,11 +151,19 @@ class StreamHierarchyOut(NamedTuple):
 
 
 def entry_subtile_mask(proj: Projected, grid: TileGrid,
-                       lists: jax.Array, valid: jax.Array) -> jax.Array:
+                       lists: jax.Array, valid: jax.Array,
+                       tile_origins: Optional[jax.Array] = None) -> jax.Array:
     """(T, K, subtiles_per_tile) bool: Stage-1 sub-tile AABB evaluated only
     on compacted entries. Equals the dense `aabb_mask` over sub-tiles
-    gathered at (tile's sub-tiles, lists[t, k]) for every valid entry."""
-    t_origins = grid.tile_origins()                      # (T, 2) int
+    gathered at (tile's sub-tiles, lists[t, k]) for every valid entry.
+
+    tile_origins: optional (T, 2) int origins of the tiles the rows of
+    `lists` belong to — defaults to the full grid. Passing a row subset
+    (with matching `lists`/`valid` rows) evaluates only those tiles, which
+    is how the tile-sharded and shard-recovery paths run this per block.
+    """
+    t_origins = (grid.tile_origins() if tile_origins is None
+                 else tile_origins)                      # (T, 2) int
     local = grid.subtile_local_origins()                 # (Sp, 2) int
     x0 = (t_origins[:, 0:1] + local[None, :, 0])[:, None, :]   # (T, 1, Sp)
     y0 = (t_origins[:, 1:2] + local[None, :, 1])[:, None, :]
@@ -206,6 +214,56 @@ def stream_hierarchical_test(
                              prec, spiky_threshold, cat_fn=cat_fn)
 
 
+def stream_entry_counters(proj: Projected, grid: TileGrid,
+                          lists: jax.Array, valid: jax.Array,
+                          sub_hits: jax.Array, mini_hits: jax.Array,
+                          mode: SamplingMode = SamplingMode.SMOOTH_FOCUSED,
+                          spiky_threshold: float = 3.0) -> dict:
+    """The stream CTU's workload counters from per-entry hit counts.
+
+    sub_hits/mini_hits: (T, K) int — per list entry, the number of sub-tile
+    (Stage-1) and mini-tile (CAT) hits. `stream_entry_test` computes them by
+    reducing the full per-entry masks; the tile-sharded render path computes
+    them per shard and gathers the int rows (exactly), then calls this with
+    the full arrays — so both paths evaluate the very same expressions on
+    the very same values and the counters stay bit-identical.
+    """
+    idx = lists.clip(0)
+    n_frustum = jnp.sum(proj.in_frustum)
+    n_listed = jnp.sum(valid)
+    ctu_pairs = jnp.sum(sub_hits)
+
+    spiky = classify_spiky(proj.axis_ratio, spiky_threshold)
+    if mode == SamplingMode.UNIFORM_DENSE:
+        prs_per_minitile = jnp.full(proj.depth.shape, 1.0)
+    elif mode == SamplingMode.UNIFORM_SPARSE:
+        prs_per_minitile = jnp.full(proj.depth.shape, 0.5)
+    elif mode == SamplingMode.SMOOTH_FOCUSED:
+        prs_per_minitile = jnp.where(spiky, 0.5, 1.0)
+    else:  # SPIKY_FOCUSED
+        prs_per_minitile = jnp.where(spiky, 1.0, 0.5)
+    mpsub = grid.minitiles_per_subtile
+    ctu_prs = jnp.sum(sub_hits * prs_per_minitile[idx]) * mpsub
+
+    return dict(
+        n_gaussians=jnp.asarray(proj.depth.shape[0], jnp.float32),
+        n_frustum=n_frustum.astype(jnp.float32),
+        ctu_pairs=ctu_pairs.astype(jnp.float32),
+        # Without Stage 1 the CTU tests every sub-tile of every stream entry.
+        ctu_pairs_no_stage1=(n_listed
+                             * grid.subtiles_per_tile).astype(jnp.float32),
+        ctu_prs=ctu_prs.astype(jnp.float32),
+        leader_tests_per_pair=leader_pixel_count(proj, grid, mode,
+                                                 spiky_threshold),
+        dup_tile=n_listed.astype(jnp.float32),
+        dup_subtile=ctu_pairs.astype(jnp.float32),
+        dup_minitile=jnp.sum(mini_hits).astype(jnp.float32),
+        vru_pairs=jnp.sum(mini_hits).astype(jnp.float32),
+        vru_pairs_tile_aabb=(n_listed
+                             * grid.minitiles_per_tile).astype(jnp.float32),
+    )
+
+
 def stream_entry_test(
         proj: Projected, grid: TileGrid,
         lists: jax.Array, valid: jax.Array, overflow: jax.Array,
@@ -235,41 +293,10 @@ def stream_entry_test(
     entry_mini = cat & gate & valid[:, :, None]
 
     # ---- workload counters (stream-derived, dense-equal) -------------------
-    idx = lists.clip(0)
-    n_frustum = jnp.sum(proj.in_frustum)
     sub_hits = jnp.sum(entry_sub, axis=-1)                    # (T, K) int
-    n_listed = jnp.sum(valid)
-    ctu_pairs = jnp.sum(sub_hits)
-
-    spiky = classify_spiky(proj.axis_ratio, spiky_threshold)
-    if mode == SamplingMode.UNIFORM_DENSE:
-        prs_per_minitile = jnp.full(proj.depth.shape, 1.0)
-    elif mode == SamplingMode.UNIFORM_SPARSE:
-        prs_per_minitile = jnp.full(proj.depth.shape, 0.5)
-    elif mode == SamplingMode.SMOOTH_FOCUSED:
-        prs_per_minitile = jnp.where(spiky, 0.5, 1.0)
-    else:  # SPIKY_FOCUSED
-        prs_per_minitile = jnp.where(spiky, 1.0, 0.5)
-    mpsub = grid.minitiles_per_subtile
-    ctu_prs = jnp.sum(sub_hits * prs_per_minitile[idx]) * mpsub
-
-    counters = dict(
-        n_gaussians=jnp.asarray(proj.depth.shape[0], jnp.float32),
-        n_frustum=n_frustum.astype(jnp.float32),
-        ctu_pairs=ctu_pairs.astype(jnp.float32),
-        # Without Stage 1 the CTU tests every sub-tile of every stream entry.
-        ctu_pairs_no_stage1=(n_listed
-                             * grid.subtiles_per_tile).astype(jnp.float32),
-        ctu_prs=ctu_prs.astype(jnp.float32),
-        leader_tests_per_pair=leader_pixel_count(proj, grid, mode,
-                                                 spiky_threshold),
-        dup_tile=n_listed.astype(jnp.float32),
-        dup_subtile=ctu_pairs.astype(jnp.float32),
-        dup_minitile=jnp.sum(entry_mini).astype(jnp.float32),
-        vru_pairs=jnp.sum(entry_mini).astype(jnp.float32),
-        vru_pairs_tile_aabb=(n_listed
-                             * grid.minitiles_per_tile).astype(jnp.float32),
-    )
+    mini_hits = jnp.sum(entry_mini, axis=-1)                  # (T, K) int
+    counters = stream_entry_counters(proj, grid, lists, valid, sub_hits,
+                                     mini_hits, mode, spiky_threshold)
     return StreamHierarchyOut(lists=lists, valid=valid,
                               entry_sub_mask=entry_sub,
                               entry_mini_mask=entry_mini,

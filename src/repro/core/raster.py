@@ -187,6 +187,16 @@ def untile(grid: TileGrid, x: jax.Array) -> jax.Array:
     return x.reshape(grid.height, grid.width, *c)
 
 
+def retile(grid: TileGrid, x: jax.Array) -> jax.Array:
+    """Inverse of `untile`: image-space (H, W, ...) back to per-tile rows
+    (T, P, ...) in the row-major within-tile pixel layout. Used to splice
+    re-rendered tile rows into an already-untiled frame (shard recovery)."""
+    c = x.shape[2:]
+    x = x.reshape(grid.tiles_y, grid.tile, grid.tiles_x, grid.tile, *c)
+    x = jnp.moveaxis(x, 1, 2)  # (ty, tx, tile, tile, ...)
+    return x.reshape(grid.num_tiles, grid.tile ** 2, *c)
+
+
 def _pixel_offsets(tile: int):
     dy, dx = jnp.meshgrid(jnp.arange(tile), jnp.arange(tile), indexing="ij")
     return (jnp.stack([dx.reshape(-1), dy.reshape(-1)], -1)
@@ -242,7 +252,8 @@ def init_blend_state(num_tiles: int, pixels_per_tile: int) -> BlendState:
 def blend_pass(proj: Projected, grid: TileGrid,
                lists: jax.Array, valid: jax.Array,
                entry_mask: Optional[jax.Array],
-               state: BlendState):
+               state: BlendState,
+               tile_origins: Optional[jax.Array] = None):
     """Fold one compacted pass's entries into the blend state.
 
     entry_mask: optional (T, K, minitiles_per_tile) per-entry CAT mask —
@@ -251,13 +262,20 @@ def blend_pass(proj: Projected, grid: TileGrid,
     blended by every pixel of the tile (AABB/OBB behavior). Dense
     (num_minitiles, N) masks convert via `entry_mask_from_dense`.
 
+    tile_origins: optional (T, 2) origins of the tiles the rows of `lists`
+    (and `state`) belong to — defaults to the full grid. Tiles blend
+    independently, so folding a row subset with its matching state rows
+    reproduces those rows of the full fold exactly (the tile-sharded and
+    shard-recovery paths rest on this).
+
     The fold is a `lax.scan` over the K list entries (front-to-back), one
     (T, P) step at a time — a strict left fold, so the per-step float-op
     sequence is independent of where the list is split into passes. That is
     the property that makes SPILL rendering bit-identical to the dense
     single-pass oracle. Returns (state', entry_alive (T, K) bool).
     """
-    tile_origins = grid.tile_origins().astype(jnp.float32)   # (T, 2)
+    tile_origins = (grid.tile_origins() if tile_origins is None
+                    else tile_origins).astype(jnp.float32)   # (T, 2)
     poffs = _pixel_offsets(grid.tile)                        # (P, 2)
     mt_in_tile = _minitile_index_in_tile(grid)               # (P,)
     pix = tile_origins[:, None, :] + poffs[None, :, :]       # (T, P, 2)

@@ -47,6 +47,7 @@ from __future__ import annotations
 
 import dataclasses
 import enum
+import math
 import warnings
 from typing import Optional
 
@@ -183,6 +184,36 @@ class RasterConfig:
         return "pallas" if self.fused else "jnp"
 
 
+@dataclasses.dataclass(frozen=True)
+class ShardConfig:
+    """Tile-axis device sharding of the post-Stage-1 pipeline.
+
+    With tile_shards > 1 the plan partitions the per-tile survivor streams
+    (`TileStream` rows, every spill pass) into `tile_shards` contiguous
+    blocks over the mesh axis the logical `axis` resolves to
+    (`distributed.sharding.resolve`; "tile" -> the `model` mesh axis) and
+    runs CTU + blend per shard under `shard_map`, gathering exactly once at
+    `raster.untile` — the multi-PRTU parallel datapath of the paper, mapped
+    onto devices. Tiles are independent after compaction, so the sharded
+    render is bit-identical to the single-device path on images,
+    `entry_alive` and every additive counter.
+
+    Requirements: the stream dataflow with the CAT method, a tile count
+    divisible by tile_shards, an active mesh (`distributed.sharding.use_mesh`
+    or `serving.RenderEngine(shard_tiles=...)`) whose resolved axis has size
+    tile_shards, and execution under `jax.jit` (shard_map with auto axes has
+    no eager path). Part of the plan hash, so the serving jit cache keys on
+    it like every other stage config.
+    """
+    tile_shards: int = 1
+    axis: str = "tile"
+
+    def __post_init__(self):
+        if self.tile_shards < 1:
+            raise ValueError(
+                f"tile_shards must be >= 1, got {self.tile_shards}")
+
+
 # ---------------------------------------------------------------------------
 # Stage I/O contracts
 # ---------------------------------------------------------------------------
@@ -249,11 +280,20 @@ class RenderPlan:
     stream: StreamConfig = StreamConfig()
     raster: RasterConfig = RasterConfig()
     dataflow: str = "stream"                  # stream | dense
+    shard: ShardConfig = ShardConfig()
 
     def __post_init__(self):
         if self.dataflow not in ("stream", "dense"):
             raise ValueError(f"unknown dataflow {self.dataflow!r} "
                              "(expected 'stream' or 'dense')")
+        if self.shard.tile_shards > 1:
+            if self.dataflow != "stream" or self.test.method != "cat":
+                raise ValueError(
+                    "tile sharding requires the stream dataflow with the "
+                    f"'cat' method (got dataflow={self.dataflow!r}, "
+                    f"method={self.test.method!r}) — the dense oracle and "
+                    "the baselines materialize (regions, N) masks that the "
+                    "per-tile partitioning cannot split")
 
     # -- stage callables ----------------------------------------------------
 
@@ -484,6 +524,7 @@ class RenderPlan:
                          k_max=self.stream.k_max, n_passes=self.n_passes,
                          overflow_policy=self.stream.overflow.value,
                          fused=self.raster.fused,
+                         tile_shards=self.shard.tile_shards,
                          height=self.grid.height, width=self.grid.width,
                          plan_first_call=tracer.mark_first(self),
                          traced=not live)
@@ -510,7 +551,12 @@ class RenderPlan:
         fold, finalize. `render_with_stats` runs it after `stage1_compact`;
         `core.coherence`'s incremental programs run it after rebuilding the
         streams from a `FrameCache` — one body, so the two paths cannot
-        diverge. Returns (RenderOut, counters dict)."""
+        diverge. With `ShardConfig.tile_shards > 1` the tail runs
+        tile-sharded over the active mesh (`_render_streams_sharded`,
+        bit-identical output). Returns (RenderOut, counters dict)."""
+        if self.shard.tile_shards > 1:
+            return self._render_streams_sharded(ps, streams, tracer,
+                                                root=root)
         live = tracer.enabled and not obs_trace.is_traced(ps.proj)
         houts = []
         for ts in streams:
@@ -558,6 +604,288 @@ class RenderPlan:
                                     k_max=self.stream.k_max,
                                     n_passes=self.n_passes)
         return out, counters
+
+    # -- tile-row primitives (single-shard body = single-device row subset) --
+
+    def _ctu_tile_rows(self, proj: Projected, grid, lists, valid,
+                       tile_origins):
+        """CTU on a block of tile rows: per-entry CAT mask + hit counts.
+
+        The per-shard body of the tile-sharded CTU and the row kernel of
+        `render_tile_subset` — the same math `hierarchy.stream_entry_test`
+        runs on the full grid, restricted to the rows whose origins are
+        given. Returns (entry_mini (B, K, Mt) bool, sub_hits (B, K) int32,
+        mini_hits (B, K) int32).
+        """
+        entry_sub = H.entry_subtile_mask(proj, grid, lists, valid,
+                                         tile_origins=tile_origins)
+        if self.test.backend == "pallas":
+            from repro.kernels import ops as kops
+            cat = kops.entry_cat_mask_pallas(
+                proj, grid, lists, valid, self.test.mode,
+                self.test.precision, self.test.spiky_threshold,
+                tile_origins=tile_origins)
+        else:
+            from repro.core.cat import entry_cat_mask
+            cat = entry_cat_mask(proj, grid, lists, valid, self.test.mode,
+                                 self.test.precision,
+                                 self.test.spiky_threshold,
+                                 tile_origins=tile_origins)
+        gate = entry_sub[:, :, grid.subtile_of_minitile_local()]
+        entry_mini = cat & gate & valid[:, :, None]
+        sub_hits = jnp.sum(entry_sub, axis=-1).astype(jnp.int32)
+        mini_hits = jnp.sum(entry_mini, axis=-1).astype(jnp.int32)
+        return entry_mini, sub_hits, mini_hits
+
+    def _blend_tile_rows(self, proj: Projected, grid, pass_rows,
+                         tile_origins):
+        """Blend fold over the spill passes on a block of tile rows.
+
+        pass_rows: [(lists, valid, entry_mini), ...] per pass, rows matching
+        `tile_origins`. Returns (state, alive_parts, kblock_rows):
+        state is the fused (trans, rgb, processed, blended) carry or the
+        unfused `raster.BlendState`; alive_parts is the per-pass (B, K)
+        entry_alive list; kblock_rows the per-pass (B,) kblocks_processed
+        list on the fused path (None unfused). Tiles blend independently,
+        so these rows equal the same rows of the full-grid fold exactly.
+        """
+        if self.raster.fused:
+            from repro.kernels import ops as kops
+            state, alive, kproc = None, [], []
+            for lists, valid, mini in pass_rows:
+                fb = kops.blend_tiles_fused_pallas(
+                    proj, grid, lists, valid, mini, init=state,
+                    tile_origins=tile_origins)
+                state = (fb.trans, fb.rgb, fb.processed, fb.blended)
+                alive.append(fb.entry_alive)
+                kproc.append(fb.kblocks_processed)
+            return state, alive, kproc
+        state = raster.init_blend_state(tile_origins.shape[0],
+                                        grid.tile ** 2)
+        alive = []
+        for lists, valid, mini in pass_rows:
+            state, a = raster.blend_pass(proj, grid, lists, valid, mini,
+                                         state, tile_origins=tile_origins)
+            alive.append(a)
+        return state, alive, None
+
+    def _render_streams_sharded(self, ps: ProjectedScene, streams, tracer,
+                                root=None):
+        """Tile-sharded post-Stage-1 tail: shard_map over the tile axis.
+
+        The per-tile survivor streams of every spill pass are partitioned
+        into `shard.tile_shards` contiguous row blocks over the mesh axis
+        the logical shard axis resolves to; each shard runs CTU -> blend on
+        its rows (the shard x pass grid), emitting its blend-state rows,
+        entry_alive rows and integer per-entry hit counts. One gather (a
+        replicate constraint — integers and per-tile floats move exactly)
+        then feeds the identical finalize arithmetic the single-device path
+        runs at `raster.untile`, and the counters are evaluated by the very
+        same expressions on the gathered hit counts
+        (`hierarchy.stream_entry_counters`) — which is why the sharded
+        render is bit-identical on images, entry_alive and every additive
+        counter.
+
+        Frame x tile composition: every mesh axis other than the shard axis
+        is left `auto`, so a vmapped frame batch sharded over "data" keeps
+        its placement while tiles split over "model". shard_map with auto
+        axes has no eager path — runs must be under `jax.jit` (the serving
+        engine always is).
+        """
+        from jax.experimental.shard_map import shard_map
+        from jax.sharding import NamedSharding, PartitionSpec as P
+        from repro.distributed import sharding as dshard
+
+        proj, grid = ps.proj, ps.grid
+        s = self.shard.tile_shards
+        mesh = dshard.active_mesh()
+        if mesh is None:
+            raise RuntimeError(
+                f"RenderPlan has shard.tile_shards={s} but no active mesh; "
+                "wrap the jitted render in "
+                "distributed.sharding.use_mesh(mesh) (serving.RenderEngine "
+                "does this when constructed with shard_tiles)")
+        axes = dshard.resolve((self.shard.axis,), mesh)[0]
+        axes_tuple = (axes,) if isinstance(axes, str) else tuple(axes)
+        axis_size = math.prod(mesh.shape[a] for a in axes_tuple)
+        if axis_size != s:
+            raise ValueError(
+                f"shard.tile_shards={s} but the mesh's "
+                f"{self.shard.axis!r} axis ({axes_tuple} on mesh "
+                f"{dict(mesh.shape)}) has size {axis_size}")
+        if grid.num_tiles % s != 0:
+            raise ValueError(
+                f"num_tiles={grid.num_tiles} is not divisible by "
+                f"tile_shards={s}")
+        if not isinstance(proj.depth, jax.core.Tracer):
+            raise RuntimeError(
+                "tile-sharded rendering must run under jax.jit: shard_map "
+                "with auto mesh axes has no eager execution path (wrap the "
+                "render in jax.jit, or use serving.RenderEngine which "
+                "always jits)")
+
+        n_passes = len(streams)
+        k = streams[0].lists.shape[1]
+        lists_all = jnp.stack([ts.lists for ts in streams])   # (n_p, T, K)
+        valid_all = jnp.stack([ts.valid for ts in streams])
+        t_origins = grid.tile_origins()                       # (T, 2) int
+        tile_spec, pass_spec = P(axes), P(None, axes)
+        auto = frozenset(mesh.axis_names) - set(axes_tuple)
+
+        def body(proj_s, t_orig, lists_s, valid_s):
+            pass_rows, subs, minis = [], [], []
+            for p in range(n_passes):
+                with tracer.span("ctu", {"pass": p, "sharded": True,
+                                         "tile_shards": s}):
+                    mini, sub_h, mini_h = self._ctu_tile_rows(
+                        proj_s, grid, lists_s[p], valid_s[p], t_orig)
+                pass_rows.append((lists_s[p], valid_s[p], mini))
+                subs.append(sub_h)
+                minis.append(mini_h)
+            with tracer.span("blend", {"sharded": True, "tile_shards": s,
+                                       "backend": self.raster.backend}):
+                state, alive, kproc = self._blend_tile_rows(
+                    proj_s, grid, pass_rows, t_orig)
+            out = dict(state=tuple(state), alive=jnp.stack(alive),
+                       sub_hits=jnp.stack(subs),
+                       mini_hits=jnp.stack(minis))
+            if kproc is not None:
+                out["kproc"] = jnp.stack(kproc)
+            return out
+
+        out_specs = dict(state=tile_spec, alive=pass_spec,
+                         sub_hits=pass_spec, mini_hits=pass_spec)
+        if self.raster.fused:
+            out_specs["kproc"] = pass_spec
+        shard_out = shard_map(
+            body, mesh=mesh,
+            in_specs=(P(), tile_spec, pass_spec, pass_spec),
+            out_specs=out_specs, check_rep=False, auto=auto)(
+                proj, t_origins, lists_all, valid_all)
+
+        # The single gather: replicate the per-shard rows (ints and
+        # independent per-tile floats — exact), then finalize and count on
+        # the full arrays with the same expressions as the unsharded path.
+        rep = NamedSharding(mesh, P())
+        shard_out = jax.tree.map(
+            lambda x: jax.lax.with_sharding_constraint(x, rep), shard_out)
+        sub_hits, mini_hits = shard_out["sub_hits"], shard_out["mini_hits"]
+        alive_parts = [shard_out["alive"][p] for p in range(n_passes)]
+        entry_alive = (alive_parts[0] if n_passes == 1
+                       else jnp.concatenate(alive_parts, axis=1))
+
+        pass_counters = [
+            H.stream_entry_counters(proj, grid, streams[p].lists,
+                                    streams[p].valid, sub_hits[p],
+                                    mini_hits[p], self.test.mode,
+                                    self.test.spiky_threshold)
+            for p in range(n_passes)]
+        counters = dict(pass_counters[0])
+        for c in pass_counters[1:]:
+            for key in H.ADDITIVE_COUNTER_KEYS:
+                counters[key] = counters[key] + c[key]
+        counters["cat_mask_bytes"] = jnp.asarray(
+            float(cat_mask_elems(grid, proj.depth.shape[0],
+                                 self.stream.k_max, self.dataflow)),
+            jnp.float32)
+
+        if self.raster.fused:
+            from repro.kernels import ops as kops
+            from repro.kernels import render as krender
+            kproc = jnp.sum(shard_out["kproc"]).astype(jnp.float32)
+            kb_total = n_passes * (-(-k // krender.K_BLK))
+            out, blend_counters = kops.finalize_fused_passes(
+                grid, shard_out["state"], self.raster.background,
+                streams[0].overflow, entry_alive, kproc, kb_total)
+        else:
+            state = raster.BlendState(*shard_out["state"])
+            out = raster.finalize_blend(grid, state, self.raster.background,
+                                        streams[0].overflow, entry_alive)
+            blend_counters = {"swept_per_pixel": jnp.asarray(
+                float(n_passes * k), jnp.float32)}
+        blend_counters["processed_per_pixel"] = jnp.mean(
+            out.processed_per_pixel)
+        blend_counters["blended_per_pixel"] = jnp.mean(
+            out.blended_per_pixel)
+
+        with tracer.span("finalize") as sp:
+            counters.update(blend_counters)
+            eff: dict = {}
+            for p in range(n_passes):
+                for key, v in self._effective_counters_from_hits(
+                        proj, streams[p].lists, sub_hits[p], mini_hits[p],
+                        alive_parts[p]).items():
+                    eff[key] = v if key not in eff else eff[key] + v
+            counters.update(eff)
+            counters["spill_passes"] = jnp.maximum(
+                sum(jnp.any(ts.valid) for ts in streams),
+                1).astype(jnp.float32)
+            # Shard-occupancy accounting: how evenly the survivor entries
+            # split over the shards (contiguous tile blocks). max == min is
+            # a perfectly balanced frame; the serving telemetry turns these
+            # into per-shard occupancy gauges.
+            per_shard = jnp.sum(
+                valid_all.reshape(n_passes, s, grid.num_tiles // s, k),
+                axis=(0, 2, 3))
+            counters["tile_shards"] = jnp.asarray(float(s), jnp.float32)
+            counters["shard_entries_max"] = jnp.max(per_shard).astype(
+                jnp.float32)
+            counters["shard_entries_min"] = jnp.min(per_shard).astype(
+                jnp.float32)
+            if tracer.enabled:
+                sp.set(tile_shards=s, sharded=True)
+            tracer.block((out, counters))
+            enforce_overflow_policy(out.overflow, self.stream.overflow,
+                                    k_max=self.stream.k_max,
+                                    n_passes=self.n_passes)
+        return out, counters
+
+    def render_tile_subset(self, scene: GaussianScene, camera, tile_ids):
+        """Single-device re-render of a subset of tiles (by row index).
+
+        The shard-recovery path: when a tile shard is lost mid-frame, the
+        survivors re-run exactly the lost rows — preprocess and Stage-1 are
+        recomputed (they were never sharded), then CTU + blend on the
+        selected rows only. Tiles are independent, so each returned row
+        equals the same row of the full render bit-for-bit, which is what
+        lets `distributed.fault.render_with_shard_recovery` splice them
+        into the healthy frame under a parity gate.
+
+        tile_ids: (B,) int tile indices. Returns a dict of per-tile rows —
+        image (B, P, 3), alpha (B, P), processed (B, P), blended (B, P)
+        (floats, post-background/finalize), entry_alive (B, n_passes*K).
+        """
+        if self.dataflow != "stream" or self.test.method != "cat":
+            raise ValueError(
+                "render_tile_subset requires the stream dataflow with the "
+                "'cat' method (the row-wise CTU has no dense/baseline form)")
+        ps = self.preprocess(scene, camera)
+        streams = self.stage1_compact(ps)
+        proj, grid = ps.proj, ps.grid
+        tile_ids = jnp.asarray(tile_ids, jnp.int32)
+        t_orig = grid.tile_origins()[tile_ids]
+        pass_rows = []
+        for ts in streams:
+            lists, valid = ts.lists[tile_ids], ts.valid[tile_ids]
+            mini, _, _ = self._ctu_tile_rows(proj, grid, lists, valid,
+                                             t_orig)
+            pass_rows.append((lists, valid, mini))
+        state, alive, _ = self._blend_tile_rows(proj, grid, pass_rows,
+                                                t_orig)
+        entry_alive = (alive[0] if len(alive) == 1
+                       else jnp.concatenate(alive, axis=1))
+        bg = self.raster.background
+        if self.raster.fused:
+            trans, rgb, processed, blended = state
+            acc = 1.0 - trans
+            rgb = rgb + bg * trans[:, :, None]
+        else:
+            rgb = state.rgb + bg * (1.0 - state.acc)[..., None]
+            acc = state.acc
+            processed = state.processed.astype(jnp.float32)
+            blended = state.blended.astype(jnp.float32)
+        return dict(image=rgb, alpha=acc, processed=processed,
+                    blended=blended, entry_alive=entry_alive)
 
     def render(self, scene: GaussianScene, camera) -> raster.RenderOut:
         out, _ = self.render_with_stats(scene, camera)
@@ -639,6 +967,26 @@ class RenderPlan:
             return jnp.where(spiky, 2.0, 4.0)
         return jnp.where(spiky, 4.0, 2.0)
 
+    def _effective_counters_from_hits(self, proj: Projected, lists,
+                                      sub_hits, mini_hits,
+                                      entry_alive) -> dict:
+        """Stream-dataflow effective counters from per-entry hit counts.
+
+        The (T, K) int hit counts are all the termination-aware accounting
+        needs; `_effective_counters` reduces the full per-entry masks down
+        to them, and the tile-sharded path gathers them from the shards —
+        one expression set, so the two paths stay bit-identical.
+        """
+        idx = lists.clip(0)                                  # (T, K)
+        live = entry_alive                                   # (T, K)
+        prs = self._prs_per_subtile(proj)[idx]               # (T, K)
+        return dict(
+            ctu_pairs_eff=jnp.sum(sub_hits * live).astype(jnp.float32),
+            ctu_prs_eff=jnp.sum(sub_hits * prs * live).astype(jnp.float32),
+            vru_pairs_eff=jnp.sum(mini_hits * live).astype(jnp.float32),
+            ctu_stream_len=jnp.sum(entry_alive).astype(jnp.float32),
+        )
+
     def _effective_counters(self, ps: ProjectedScene, ts: TileStream,
                             hout: H.StreamHierarchyOut, entry_alive) -> dict:
         """Termination-aware CTU/VRU workload (paper Fig. 6 semantics).
@@ -657,14 +1005,8 @@ class RenderPlan:
         if self.dataflow == "stream":
             sub_hits = jnp.sum(hout.entry_sub_mask, axis=-1)     # (T, K)
             mini_hits = jnp.sum(hout.entry_mini_mask, axis=-1)   # (T, K)
-            prs = prs_per_sub[idx]                               # (T, K)
-            return dict(
-                ctu_pairs_eff=jnp.sum(sub_hits * live).astype(jnp.float32),
-                ctu_prs_eff=jnp.sum(sub_hits * prs * live)
-                .astype(jnp.float32),
-                vru_pairs_eff=jnp.sum(mini_hits * live).astype(jnp.float32),
-                ctu_stream_len=jnp.sum(entry_alive).astype(jnp.float32),
-            )
+            return self._effective_counters_from_hits(
+                proj, hout.lists, sub_hits, mini_hits, entry_alive)
 
         # Dense oracle: per-tile grouped masks (T, subtiles_per_tile, N) etc.
         dense = ts.dense
@@ -720,13 +1062,15 @@ class Renderer:
                  test: Optional[TestConfig] = None,
                  stream: Optional[StreamConfig] = None,
                  raster: Optional[RasterConfig] = None,
-                 dataflow: str = "stream"):
+                 dataflow: str = "stream",
+                 shard: Optional[ShardConfig] = None):
         self.plan = RenderPlan(
             grid=grid if grid is not None else GridConfig(),
             test=test if test is not None else TestConfig(),
             stream=stream if stream is not None else StreamConfig(),
             raster=raster if raster is not None else RasterConfig(),
-            dataflow=dataflow)
+            dataflow=dataflow,
+            shard=shard if shard is not None else ShardConfig())
 
     @classmethod
     def from_plan(cls, plan: RenderPlan) -> "Renderer":

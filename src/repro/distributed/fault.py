@@ -11,6 +11,19 @@ Components (host-side control plane; the data plane is pure JAX):
   elastic_reshard  — re-shard a checkpoint to a different device count /
                      mesh (elastic scaling): params are resharded by
                      NamedSharding placement, optimizer state follows.
+
+Serving-side (tile-sharded rendering, `core.renderer.ShardConfig`):
+
+  ShardDropInjector          — test/chaos hook that marks tile shards as
+                               lost for the next frame.
+  render_with_shard_recovery — graceful degradation: render the frame
+                               tile-sharded, and if the injector reports a
+                               lost shard, re-render exactly that shard's
+                               tiles on the survivors
+                               (`RenderPlan.render_tile_subset`) and splice
+                               the rows back (`raster.retile`/`untile`)
+                               under a bit-parity gate — the frame completes
+                               instead of failing.
 """
 from __future__ import annotations
 
@@ -21,6 +34,7 @@ from collections import deque
 from typing import Optional
 
 import jax
+import jax.numpy as jnp
 import numpy as np
 
 from repro.checkpoint import ckpt
@@ -98,6 +112,123 @@ class StragglerMonitor:
     @property
     def median(self) -> float:
         return float(np.median(self.times)) if self.times else 0.0
+
+
+@dataclasses.dataclass
+class ShardDropInjector:
+    """Chaos hook for tile-sharded serving: marks shards as lost.
+
+    `take(n_shards)` is called by `render_with_shard_recovery` once per
+    frame and returns the shard indices to treat as dead for that frame.
+    With `once=True` (default) the drop fires on the first frame only —
+    the node comes back (or is replaced) and later frames run healthy,
+    which is the scenario the degradation test exercises.
+    """
+    drop: tuple[int, ...] = ()
+    once: bool = True
+    drops_injected: int = 0
+
+    def take(self, n_shards: int) -> tuple[int, ...]:
+        if not self.drop or (self.once and self.drops_injected > 0):
+            return ()
+        bad = [s for s in self.drop if not 0 <= s < n_shards]
+        if bad:
+            raise ValueError(
+                f"ShardDropInjector.drop {bad} out of range for "
+                f"{n_shards} tile shards")
+        self.drops_injected += 1
+        return tuple(self.drop)
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardRecoveryReport:
+    dropped_shards: tuple[int, ...]
+    tiles_recovered: int
+    parity_ok: bool
+
+
+def render_with_shard_recovery(plan, scene, camera, *, injector,
+                               mesh=None):
+    """Tile-sharded render with graceful degradation on shard loss.
+
+    Renders the frame with `plan` (which must carry
+    `ShardConfig(tile_shards > 1)`), then asks `injector` whether any
+    shard died. If so, the lost shard's contiguous tile block
+    [s*T/S, (s+1)*T/S) is re-rendered on the survivors via
+    `plan.render_tile_subset` and spliced back into the frame
+    (`raster.retile` → row scatter → `raster.untile`). Because tiles are
+    independent and the row-wise CTU/blend is bit-deterministic, the
+    recovered frame must equal the healthy one bit-for-bit — that parity
+    gate is enforced here (RuntimeError on mismatch: it would mean the
+    renderer is nondeterministic, not that recovery "roughly worked").
+
+    Returns (RenderOut, counters dict, ShardRecoveryReport). The counters
+    gain `shard_drops` and `tiles_recovered`.
+    """
+    from repro.core import raster
+    from repro.distributed import sharding as dshard
+
+    n_shards = plan.shard.tile_shards
+    if n_shards <= 1:
+        raise ValueError(
+            "render_with_shard_recovery requires a tile-sharded plan "
+            "(ShardConfig(tile_shards > 1)); got "
+            f"tile_shards={n_shards}")
+    mesh = mesh if mesh is not None else dshard.active_mesh()
+    with dshard.use_mesh(mesh):
+        healthy, counters = jax.jit(
+            lambda sc, cam: plan.render_with_stats(sc, cam))(scene, camera)
+    counters = dict(counters)
+    dropped = injector.take(n_shards)
+    if not dropped:
+        counters["shard_drops"] = jnp.float32(0.0)
+        counters["tiles_recovered"] = jnp.float32(0.0)
+        return healthy, counters, ShardRecoveryReport((), 0, True)
+
+    grid = plan.grid.make()
+    tiles_per_shard = grid.num_tiles // n_shards
+    lost = np.concatenate([
+        np.arange(s * tiles_per_shard, (s + 1) * tiles_per_shard)
+        for s in dropped]).astype(np.int32)
+    # Survivors re-run exactly the lost rows (single-device path — no
+    # mesh needed; preprocess/stage1 were never sharded to begin with).
+    rows = jax.jit(
+        lambda sc, cam, ids: plan.render_tile_subset(sc, cam, ids)
+    )(scene, camera, jnp.asarray(lost))
+
+    def splice(field, new_rows):
+        t = raster.retile(grid, field)
+        return raster.untile(grid, t.at[lost].set(new_rows))
+
+    recovered = raster.RenderOut(
+        image=splice(healthy.image, rows["image"]),
+        alpha=splice(healthy.alpha, rows["alpha"]),
+        processed_per_pixel=splice(healthy.processed_per_pixel,
+                                   rows["processed"]),
+        blended_per_pixel=splice(healthy.blended_per_pixel,
+                                 rows["blended"]),
+        overflow=healthy.overflow,
+        entry_alive=healthy.entry_alive.at[lost].set(rows["entry_alive"]),
+    )
+    pairs = [
+        ("image", recovered.image, healthy.image),
+        ("alpha", recovered.alpha, healthy.alpha),
+        ("processed_per_pixel", recovered.processed_per_pixel,
+         healthy.processed_per_pixel),
+        ("blended_per_pixel", recovered.blended_per_pixel,
+         healthy.blended_per_pixel),
+        ("entry_alive", recovered.entry_alive, healthy.entry_alive),
+    ]
+    bad = [name for name, a, b in pairs if not bool(jnp.array_equal(a, b))]
+    if bad:
+        raise RuntimeError(
+            "shard recovery parity gate failed: re-rendered tile rows "
+            f"differ from the healthy frame on {bad} — the row-wise "
+            "CTU/blend path is expected to be bit-deterministic")
+    counters["shard_drops"] = jnp.float32(len(dropped))
+    counters["tiles_recovered"] = jnp.float32(lost.size)
+    return recovered, counters, ShardRecoveryReport(
+        tuple(dropped), int(lost.size), True)
 
 
 def elastic_reshard(tree, target_mesh, spec_tree):

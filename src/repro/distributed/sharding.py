@@ -8,9 +8,14 @@ Logical names used throughout the model zoo:
     "model"  — tensor/expert parallel axis.
     "dp"     — batch: all data axes, including the pod axis.
     "sp"     — sequence-parallel shards of saved activations (model axis).
+    "tile"   — per-tile render work (serving). Resolves to the `model` mesh
+               axis so frame x tile sharding composes on one mesh: frames
+               split over "data", each frame's tiles over "model".
     None     — replicated.
 """
 from __future__ import annotations
+
+import contextlib
 
 import jax
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
@@ -36,7 +41,7 @@ def resolve(logical, mesh: Mesh, fsdp_over_pod: bool = False) -> P:
                 out.append(("pod", "data"))
             else:
                 out.append("data")
-        elif name == "model" or name == "sp":
+        elif name == "model" or name == "sp" or name == "tile":
             out.append("model")
         elif name == "dp":
             out.append(dp_axes(mesh))
@@ -54,3 +59,36 @@ def constrain(x, mesh: Mesh, *logical):
     if mesh is None:
         return x
     return jax.lax.with_sharding_constraint(x, named(mesh, logical))
+
+
+# --- active mesh -----------------------------------------------------------
+#
+# Renderer internals (core/renderer.py) are mesh-agnostic: a tile-sharded
+# RenderPlan discovers the mesh at trace time through this stack instead of
+# carrying a (unhashable) Mesh in the plan. The serving engine pushes its
+# mesh around every jitted call; tests and benchmarks use `use_mesh(...)`
+# directly.
+
+_ACTIVE_MESHES: list[Mesh] = []
+
+
+def active_mesh() -> Mesh | None:
+    """The innermost mesh pushed by `use_mesh`, or None."""
+    return _ACTIVE_MESHES[-1] if _ACTIVE_MESHES else None
+
+
+@contextlib.contextmanager
+def use_mesh(mesh: Mesh | None):
+    """Make `mesh` discoverable via `active_mesh()` for the duration.
+
+    A None mesh is a no-op context so callers can write
+    `with use_mesh(self.mesh):` unconditionally.
+    """
+    if mesh is None:
+        yield
+        return
+    _ACTIVE_MESHES.append(mesh)
+    try:
+        yield
+    finally:
+        _ACTIVE_MESHES.pop()

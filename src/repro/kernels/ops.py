@@ -61,25 +61,32 @@ def hierarchical_test_pallas(proj: Projected, grid: TileGrid,
 def entry_cat_mask_pallas(proj: Projected, grid: TileGrid, lists, valid,
                           mode: SamplingMode, prec: PrecisionScheme,
                           spiky_threshold: float = 3.0,
-                          interpret: bool = True) -> jax.Array:
+                          interpret: bool = True,
+                          tile_origins=None) -> jax.Array:
     """(T, K, Mt) bool entry CAT mask via the entry-stream PRTU kernel.
 
     Drop-in for `core.cat.entry_cat_mask`: per-entry features are gathered
     at the compacted lists (invalid/padded entries get lhs = -inf so the
     kernel rejects them), and the kernel grid runs over entries only —
     the Pallas realization of the paper's queue-fed CTU.
+
+    tile_origins: optional (T, 2) int origins of the tiles the rows of
+    `lists` belong to (defaults to the full grid) — the kernel already
+    takes origins as an explicit operand, so a row subset shards trivially.
     """
     local = grid.minitile_local_origins().astype(jnp.float32)  # (Mt, 2)
     m = float(grid.minitile - 1)
     p_top_l = local + jnp.asarray([0.5, 0.5])
     p_bot_l = local + jnp.asarray([m + 0.5, m + 0.5])
+    if tile_origins is None:
+        tile_origins = grid.tile_origins()
 
     idx = lists.clip(0)
     lhs = jnp.log(255.0 * jnp.maximum(proj.opacity, 1e-12))[idx]
     lhs = jnp.where(valid & proj.in_frustum[idx], lhs, -jnp.inf)
     spiky = classify_spiky(proj.axis_ratio, spiky_threshold)[idx]
     mask = prtu.prtu_entry_cat_mask(
-        p_top_l, p_bot_l, grid.tile_origins(), proj.mean2d[idx],
+        p_top_l, p_bot_l, tile_origins, proj.mean2d[idx],
         proj.conic[idx], lhs, spiky,
         mode=mode.value, coord_prec=prec.coord, delta_prec=prec.delta,
         mul_prec=prec.mul, acc_prec=prec.acc, slack=prec.slack,
@@ -92,9 +99,11 @@ def entry_cat_fn(mode: SamplingMode, prec: PrecisionScheme,
     """The `cat_fn` closure that routes an entry CAT evaluation through the
     Pallas entry-PRTU kernel — the single place the kernel routing lives.
     `core.renderer.RenderPlan.ctu` passes this to
-    `hierarchy.stream_entry_test` when `TestConfig.backend == "pallas"`."""
-    return lambda p, g, ls, v: entry_cat_mask_pallas(
-        p, g, ls, v, mode, prec, spiky_threshold, interpret)
+    `hierarchy.stream_entry_test` when `TestConfig.backend == "pallas"`;
+    the tile-sharded path calls it with per-shard rows + `tile_origins`."""
+    return lambda p, g, ls, v, tile_origins=None: entry_cat_mask_pallas(
+        p, g, ls, v, mode, prec, spiky_threshold, interpret,
+        tile_origins=tile_origins)
 
 
 def stream_hierarchical_test_pallas(proj: Projected, grid: TileGrid,
@@ -112,14 +121,18 @@ def stream_hierarchical_test_pallas(proj: Projected, grid: TileGrid,
 
 
 def gather_tile_features(proj: Projected, grid: TileGrid, lists, valid,
-                         entry_mask=None):
+                         entry_mask=None, tile_origins=None):
     """Build the kernel operand blocks from compacted per-tile lists.
 
     entry_mask: optional (T, K, Mt) per-entry CAT mask
     (`StreamHierarchyOut.entry_mini_mask`; dense masks convert via
-    `raster.entry_mask_from_dense`). Returns (pix (T,P,2), feat (T,K,8),
-    colors (T,K,3), valid_i8 (T,K), allow (T,K,Mt))."""
-    t_origins = grid.tile_origins().astype(jnp.float32)   # (T, 2)
+    `raster.entry_mask_from_dense`). tile_origins: optional (T, 2) int
+    origins of the tiles the rows of `lists` belong to (defaults to the
+    full grid; row subsets feed the tile-sharded/recovery blends). Returns
+    (pix (T,P,2), feat (T,K,8), colors (T,K,3), valid_i8 (T,K),
+    allow (T,K,Mt))."""
+    t_origins = (grid.tile_origins() if tile_origins is None
+                 else tile_origins).astype(jnp.float32)   # (T, 2)
     poffs = raster._pixel_offsets(grid.tile)              # (P, 2)
     pix = t_origins[:, None, :] + poffs[None, :, :]       # (T, P, 2)
 
@@ -152,9 +165,10 @@ def blend_tiles_reference(proj, grid, lists, valid, entry_mask=None):
 
 
 def blend_tiles_fused_pallas(proj, grid, lists, valid, entry_mask=None,
-                             init=None, interpret: bool = True) \
-        -> krender.FusedBlendOut:
-    ops = gather_tile_features(proj, grid, lists, valid, entry_mask)
+                             init=None, interpret: bool = True,
+                             tile_origins=None) -> krender.FusedBlendOut:
+    ops = gather_tile_features(proj, grid, lists, valid, entry_mask,
+                               tile_origins=tile_origins)
     return krender.blend_tiles_fused(*ops, init=init, interpret=interpret)
 
 
@@ -223,6 +237,22 @@ def render_tiles_fused_passes(proj, grid, passes,
         alive_parts.append(fb.entry_alive)
         kproc = kproc + jnp.sum(fb.kblocks_processed).astype(jnp.float32)
         kblocks_total += fb.kblocks_total
+    entry_alive = (alive_parts[0] if len(alive_parts) == 1
+                   else jnp.concatenate(alive_parts, axis=1))
+    return finalize_fused_passes(grid, state, background, overflow,
+                                 entry_alive, kproc, kblocks_total)
+
+
+def finalize_fused_passes(grid, state, background, overflow, entry_alive,
+                          kproc, kblocks_total):
+    """Assemble (RenderOut, counters) from the fused kernel's carried state.
+
+    state: the (trans, rgb, processed, blended) tile-major carry after the
+    last pass; kproc: summed kblocks_processed (float scalar);
+    kblocks_total: static per-tile K-block count summed over passes. Split
+    out of `render_tiles_fused_passes` so the tile-sharded render path can
+    gather per-shard state rows and finalize with the identical arithmetic.
+    """
     trans, rgb, processed, blended = state
     acc = 1.0 - trans
     rgb = rgb + background * trans[:, :, None]
@@ -232,8 +262,7 @@ def render_tiles_fused_passes(proj, grid, passes,
         processed_per_pixel=raster.untile(grid, processed),
         blended_per_pixel=raster.untile(grid, blended),
         overflow=jnp.asarray(overflow),
-        entry_alive=(alive_parts[0] if len(alive_parts) == 1
-                     else jnp.concatenate(alive_parts, axis=1)),
+        entry_alive=entry_alive,
     )
     counters = dict(
         kblocks_processed=kproc,

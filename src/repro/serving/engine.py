@@ -51,6 +51,7 @@ from __future__ import annotations
 
 import dataclasses
 import time
+from collections import OrderedDict
 from typing import Callable, Optional, Sequence, Union
 
 import jax
@@ -59,7 +60,9 @@ import numpy as np
 from repro.core import (GaussianScene, Camera, pad_scene, stack_cameras,
                         Renderer, RenderPlan, RenderConfig, OverflowPolicy,
                         frame_counters, measure_k_max, as_plan)
-from repro.core.renderer import enforce_overflow_policy, next_pow2
+from repro.core.renderer import (ShardConfig, enforce_overflow_policy,
+                                 next_pow2)
+from repro.distributed import sharding as dshard
 from repro.obs import trace as obs_trace
 from repro.serving import sharding as shd
 from repro.serving.telemetry import Telemetry
@@ -149,6 +152,18 @@ class RenderEngine:
         `full_recompactions` counters and their lifetime totals.
     coherence: a `core.CoherenceConfig` for the incremental mode's
         fallback thresholds (None = defaults).
+    shard_tiles: shard the *tile* axis of every frame over this many devices
+        (`core.renderer.ShardConfig`) — the single-frame latency lever, and
+        orthogonal to `mesh` frame sharding (frame x tile composes on one
+        mesh). When > 1 and no mesh is given, a `serving.sharding.tile_mesh`
+        is built; a given mesh must carry a model axis of exactly this size.
+        Output stays bit-identical to the single-device path.
+    jit_cache_size: LRU capacity of the compiled-executable cache. The
+        oldest-hit executable is evicted past this bound (recompiling on
+        next use) — `engine_jit_cache_evictions_total` counts evictions.
+    max_scenes: LRU capacity of the scene registry (None = unbounded).
+        Least-recently-served scenes are evicted past the bound and must be
+        re-registered; `engine_scene_evictions_total` counts evictions.
     """
 
     def __init__(self,
@@ -159,7 +174,10 @@ class RenderEngine:
                  fused: Optional[bool] = None,
                  dataflow: Optional[str] = None,
                  incremental: bool = False,
-                 coherence=None):
+                 coherence=None,
+                 shard_tiles: int = 1,
+                 jit_cache_size: int = 64,
+                 max_scenes: Optional[int] = None):
         plan = RenderPlan() if base is None else as_plan(base)
         if fused is not None:
             plan = dataclasses.replace(
@@ -172,14 +190,32 @@ class RenderEngine:
             plan = dataclasses.replace(
                 plan, stream=dataclasses.replace(
                     plan.stream, overflow=OverflowPolicy(overflow)))
+        if shard_tiles > 1:
+            plan = dataclasses.replace(
+                plan, shard=ShardConfig(tile_shards=shard_tiles))
+            if mesh is None:
+                mesh = shd.tile_mesh(shard_tiles)
+            elif mesh.shape.get("model", 1) != shard_tiles:
+                raise ValueError(
+                    f"shard_tiles={shard_tiles} needs a mesh whose 'model' "
+                    f"axis has that size; got {dict(mesh.shape)}")
         self.plan = plan
         self.mesh = mesh
         self.max_batch = max_batch
         self.pad_scenes = pad_scenes
         self.telemetry = telemetry if telemetry is not None else Telemetry()
-        self._scenes: dict[str, _SceneEntry] = {}
-        self._cache: dict[tuple, Callable] = {}
+        if jit_cache_size < 1:
+            raise ValueError(f"jit_cache_size must be >= 1, "
+                             f"got {jit_cache_size}")
+        if max_scenes is not None and max_scenes < 1:
+            raise ValueError(f"max_scenes must be >= 1, got {max_scenes}")
+        self.jit_cache_size = jit_cache_size
+        self.max_scenes = max_scenes
+        self._scenes: OrderedDict[str, _SceneEntry] = OrderedDict()
+        self._cache: OrderedDict[tuple, Callable] = OrderedDict()
         self.compile_count = 0
+        self.jit_cache_evictions = 0
+        self.scene_evictions = 0
         # Per-scene learned multiplier on the spill pass bucket: doubled
         # whenever a SPILL batch exhausts its capacity, so the scene's next
         # plan covers the traffic that overflowed.
@@ -229,7 +265,17 @@ class RenderEngine:
         entry = _SceneEntry(scene=padded, n_real=n_real, n_bucket=n_bucket,
                             k_max=k_max if k_max is not None else n_bucket)
         self._scenes[name] = entry
+        self._scenes.move_to_end(name)   # re-register refreshes LRU position
         reg = self.telemetry.registry
+        if self.max_scenes is not None:
+            while len(self._scenes) > self.max_scenes:
+                old, _ = self._scenes.popitem(last=False)
+                self._spill_boost.pop(old, None)
+                self.scene_evictions += 1
+                reg.counter(
+                    "engine_scene_evictions_total",
+                    "Scenes evicted from the registry (LRU past max_scenes)"
+                ).inc()
         reg.gauge("engine_scene_k_max", "Per-scene Stage-1 list capacity "
                   "(probe-measured or given; scene bucket when defaulted)",
                   ("scene",)).set(entry.k_max, scene=name)
@@ -242,6 +288,12 @@ class RenderEngine:
 
     def scene_names(self) -> list[str]:
         return list(self._scenes)
+
+    def _entry(self, name: str) -> _SceneEntry:
+        """Registry lookup that refreshes the scene's LRU position."""
+        entry = self._scenes[name]
+        self._scenes.move_to_end(name)
+        return entry
 
     # -- jit cache ----------------------------------------------------------
 
@@ -290,17 +342,26 @@ class RenderEngine:
         key = (n_bucket, plan, bucket)
         fn = self._cache.get(key)
         compiled = fn is None
+        reg = self.telemetry.registry
         if compiled:
             self.compile_count += 1
             fn = jax.jit(
                 lambda scene, cams: plan.render_batch_with_stats(scene, cams))
             self._cache[key] = fn
-            reg = self.telemetry.registry
             reg.counter("engine_compiles_total",
                         "Jit-cache misses (traces + compiles)").inc()
+            while len(self._cache) > self.jit_cache_size:
+                self._cache.popitem(last=False)
+                self.jit_cache_evictions += 1
+                reg.counter(
+                    "engine_jit_cache_evictions_total",
+                    "Executables evicted from the jit cache (LRU past "
+                    "jit_cache_size); next use recompiles").inc()
             reg.gauge("engine_jit_cache_size",
                       "Compiled executables held by the engine"
                       ).set(len(self._cache))
+        else:
+            self._cache.move_to_end(key)   # LRU touch on a cache hit
         return fn, compiled
 
     # -- rendering ----------------------------------------------------------
@@ -355,7 +416,7 @@ class RenderEngine:
     def _render_batched(self, requests: Sequence[RenderRequest], name: str,
                         height: int, width: int) -> list[FrameResult]:
         """The vmapped+jitted batch path (homogeneity already validated)."""
-        entry = self._scenes[name]
+        entry = self._entry(name)
         n = len(requests)
         bucket = batch_bucket(n, self.max_batch)
 
@@ -382,8 +443,9 @@ class RenderEngine:
                                  {"compile": compiled,
                                   "n_passes": plan.stream.max_spill_passes,
                                   "k_max": plan.stream.k_max}):
-                    out, counters = jax.block_until_ready(
-                        fn(entry.scene, cams))
+                    with dshard.use_mesh(self.mesh):
+                        out, counters = jax.block_until_ready(
+                            fn(entry.scene, cams))
                 dt = time.perf_counter() - t0
                 frame_overflow = np.asarray(out.overflow)[:n]
                 overflow_frames = int(frame_overflow.sum())
@@ -455,7 +517,7 @@ class RenderEngine:
         once (batch of 1), with the coherence counters attached.
         """
         from repro.core import coherence as coh
-        entry = self._scenes[name]
+        entry = self._entry(name)
         tracer = obs_trace.current()
         retries = 0
         t0 = time.perf_counter()
@@ -465,9 +527,10 @@ class RenderEngine:
             while True:
                 plan = self.plan_for(name, height, width)
                 cache = self._frame_caches.get(request.session)
-                out, counters, cache = coh.render_incremental(
-                    plan, entry.scene, request.camera, cache,
-                    self.coherence, enforce=False)
+                with dshard.use_mesh(self.mesh):
+                    out, counters, cache = coh.render_incremental(
+                        plan, entry.scene, request.camera, cache,
+                        self.coherence, enforce=False)
                 self._frame_caches[request.session] = cache
                 overflow = bool(out.overflow)
                 spill = plan.stream.overflow is OverflowPolicy.SPILL

@@ -132,6 +132,18 @@ class Telemetry:
             reg.gauge("render_spill_passes",
                       "Mean spill passes used by the most recent batch"
                       ).set(rec.counters["spill_passes"])
+        if "tile_shards" in rec.counters:
+            reg.gauge("render_tile_shards",
+                      "Tile shards the most recent batch rendered across"
+                      ).set(rec.counters["tile_shards"])
+            reg.gauge("render_shard_entries_max",
+                      "Survivor entries on the fullest tile shard (the "
+                      "critical-path shard) for the most recent batch"
+                      ).set(rec.counters.get("shard_entries_max", 0.0))
+            reg.gauge("render_shard_entries_min",
+                      "Survivor entries on the emptiest tile shard (load "
+                      "balance floor) for the most recent batch"
+                      ).set(rec.counters.get("shard_entries_min", 0.0))
         for key, mname, help_ in (
                 ("tiles_reused", "render_tiles_reused_total",
                  "Stage-1 tile compactions skipped by the frame-coherent "

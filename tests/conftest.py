@@ -1,12 +1,24 @@
 import dataclasses
+import os
 
-import jax
-import jax.numpy as jnp
-import pytest
+# Force 8 host CPU devices so the multi-device paths (tile/frame sharding,
+# shard-drop recovery) run for real in tier-1 instead of degenerating to a
+# single-device mesh. Must happen before jax initializes its backend, which
+# is why this sits above the `import jax` of this session-scoped conftest.
+# Respect an explicit device-count flag from the environment (CI sets one).
+if "xla_force_host_platform_device_count" not in os.environ.get(
+        "XLA_FLAGS", ""):
+    os.environ["XLA_FLAGS"] = (
+        os.environ.get("XLA_FLAGS", "")
+        + " --xla_force_host_platform_device_count=8").strip()
 
-from repro.core.gaussians import random_scene, project
-from repro.core.camera import default_camera
-from repro.core.culling import TileGrid
+import jax                   # noqa: E402  (env mutation must precede this)
+import jax.numpy as jnp      # noqa: E402
+import pytest                # noqa: E402
+
+from repro.core.gaussians import random_scene, project  # noqa: E402
+from repro.core.camera import default_camera            # noqa: E402
+from repro.core.culling import TileGrid                 # noqa: E402
 
 
 @pytest.fixture(scope="session")

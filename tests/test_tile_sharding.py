@@ -1,0 +1,302 @@
+"""Tile-sharded multi-device rendering (core.renderer.ShardConfig).
+
+The headline contract: sharding the tile axis over a mesh changes the
+*schedule*, never the *numbers* — sharded renders are bit-identical to the
+single-device path on images, entry_alive, and every counter, across
+{CLAMP, SPILL} x {jnp, fused} and both CTU backends. Plus: dropped-shard
+graceful degradation (distributed.fault), frame x tile composition through
+the engine, the shard_frames odd-batch regression, and the engine's LRU
+jit-cache / scene-registry eviction. The conftest forces 8 host devices so
+all of this runs for real in tier-1.
+"""
+import dataclasses
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import (OverflowPolicy, RenderPlan, ShardConfig,
+                        RenderConfig, orbit_camera, random_scene,
+                        stack_cameras)
+from repro.core.renderer import (GridConfig, RasterConfig, StreamConfig,
+                                 TestConfig)
+from repro.distributed import sharding as dshard
+from repro.distributed.fault import (ShardDropInjector,
+                                     render_with_shard_recovery)
+from repro.serving import RenderEngine, RenderRequest, register_demo_scenes
+from repro.serving import sharding as shd
+
+pytestmark = pytest.mark.skipif(
+    jax.device_count() < 4,
+    reason="needs >= 4 devices (conftest forces 8 host devices)")
+
+
+def make_plan(policy=OverflowPolicy.CLAMP, fused=False, backend="jnp",
+              shards=1):
+    return RenderPlan(
+        grid=GridConfig(64, 64),
+        test=TestConfig(backend=backend),
+        stream=StreamConfig(k_max=64, overflow=policy, max_spill_passes=3),
+        raster=RasterConfig(fused=fused),
+        shard=ShardConfig(tile_shards=shards))
+
+
+def assert_bit_identical(ref, out, ref_c, c):
+    for field in ("image", "alpha", "entry_alive", "processed_per_pixel",
+                  "blended_per_pixel"):
+        a, b = getattr(ref, field), getattr(out, field)
+        assert bool(jnp.array_equal(a, b)), field
+    bad = [k for k in ref_c if not bool(jnp.array_equal(ref_c[k], c[k]))]
+    assert not bad, f"counter mismatch: {bad}"
+
+
+# ---------------------------------------------------------------------------
+# bit-parity: sharded == single-device
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("policy", [OverflowPolicy.CLAMP,
+                                    OverflowPolicy.SPILL])
+@pytest.mark.parametrize("fused", [False, True])
+def test_sharded_parity(small_scene, cam64, policy, fused):
+    ref_plan = make_plan(policy, fused)
+    plan = dataclasses.replace(ref_plan, shard=ShardConfig(tile_shards=4))
+    ref, ref_c = jax.jit(ref_plan.render_with_stats)(small_scene, cam64)
+    with dshard.use_mesh(shd.tile_mesh(4)):
+        out, c = jax.jit(plan.render_with_stats)(small_scene, cam64)
+        jax.block_until_ready(out)
+    assert_bit_identical(ref, out, ref_c, c)
+    # Sharded renders report their occupancy on top of the shared counters.
+    assert float(c["tile_shards"]) == 4.0
+    assert c["shard_entries_max"] >= c["shard_entries_min"]
+
+
+def test_sharded_parity_pallas_backend(small_scene, cam64):
+    ref_plan = make_plan(backend="pallas")
+    plan = dataclasses.replace(ref_plan, shard=ShardConfig(tile_shards=2))
+    ref, ref_c = jax.jit(ref_plan.render_with_stats)(small_scene, cam64)
+    with dshard.use_mesh(shd.tile_mesh(2)):
+        out, c = jax.jit(plan.render_with_stats)(small_scene, cam64)
+    assert_bit_identical(ref, out, ref_c, c)
+
+
+def test_render_tile_subset_rows_match_full_render(small_scene, cam64):
+    """The recovery primitive: arbitrary row subsets re-render bit-equal."""
+    from repro.core import raster
+    plan = make_plan(OverflowPolicy.SPILL, fused=True)
+    ref, _ = jax.jit(plan.render_with_stats)(small_scene, cam64)
+    grid = plan.grid.make()
+    ids = jnp.asarray([0, 5, 17, 63])
+    rows = jax.jit(plan.render_tile_subset)(small_scene, cam64, ids)
+    assert bool(jnp.array_equal(rows["image"],
+                                raster.retile(grid, ref.image)[ids]))
+    assert bool(jnp.array_equal(rows["alpha"],
+                                raster.retile(grid, ref.alpha)[ids]))
+    assert bool(jnp.array_equal(rows["entry_alive"], ref.entry_alive[ids]))
+
+
+# ---------------------------------------------------------------------------
+# dropped-shard graceful degradation
+# ---------------------------------------------------------------------------
+
+def test_shard_drop_recovery(small_scene, cam64):
+    plan = make_plan(OverflowPolicy.SPILL, fused=True, shards=4)
+    mesh = shd.tile_mesh(4)
+    inj = ShardDropInjector(drop=(1, 3))
+    out, counters, report = render_with_shard_recovery(
+        plan, small_scene, cam64, injector=inj, mesh=mesh)
+    n_tiles = plan.grid.make().num_tiles
+    assert report.dropped_shards == (1, 3)
+    assert report.tiles_recovered == n_tiles // 2
+    assert report.parity_ok   # the gate raised otherwise
+    assert float(counters["shard_drops"]) == 2.0
+    assert float(counters["tiles_recovered"]) == n_tiles // 2
+    # once=True: the node is back for the next frame
+    out2, c2, report2 = render_with_shard_recovery(
+        plan, small_scene, cam64, injector=inj, mesh=mesh)
+    assert report2.dropped_shards == ()
+    assert float(c2["shard_drops"]) == 0.0
+    assert bool(jnp.array_equal(out.image, out2.image))
+
+
+def test_shard_drop_injector_validates():
+    inj = ShardDropInjector(drop=(7,))
+    with pytest.raises(ValueError, match="out of range"):
+        inj.take(4)
+    assert ShardDropInjector().take(4) == ()
+    with pytest.raises(ValueError, match="tile-sharded plan"):
+        render_with_shard_recovery(make_plan(), None, None,
+                                   injector=ShardDropInjector())
+
+
+# ---------------------------------------------------------------------------
+# error surfaces
+# ---------------------------------------------------------------------------
+
+def test_sharded_requires_mesh(small_scene, cam64):
+    plan = make_plan(shards=4)
+    with pytest.raises(RuntimeError, match="no active mesh"):
+        jax.jit(plan.render_with_stats)(small_scene, cam64)
+
+
+def test_sharded_requires_jit(small_scene, cam64):
+    plan = make_plan(shards=4)
+    with dshard.use_mesh(shd.tile_mesh(4)):
+        with pytest.raises(RuntimeError, match="under jax.jit"):
+            plan.render_with_stats(small_scene, cam64)
+
+
+def test_sharded_mesh_axis_size_mismatch(small_scene, cam64):
+    plan = make_plan(shards=4)
+    with dshard.use_mesh(shd.tile_mesh(2)):
+        with pytest.raises(ValueError, match="has size 2"):
+            jax.jit(plan.render_with_stats)(small_scene, cam64)
+
+
+def test_sharded_indivisible_tiles(small_scene, cam64):
+    plan = make_plan(shards=3)   # 64 tiles % 3 != 0
+    with dshard.use_mesh(shd.tile_mesh(3)):
+        with pytest.raises(ValueError, match="not divisible"):
+            jax.jit(plan.render_with_stats)(small_scene, cam64)
+
+
+def test_shard_config_validation():
+    with pytest.raises(ValueError, match="tile_shards"):
+        ShardConfig(tile_shards=0)
+    with pytest.raises(ValueError, match="stream dataflow"):
+        RenderPlan(dataflow="dense", shard=ShardConfig(tile_shards=2))
+    with pytest.raises(ValueError, match="stream dataflow"):
+        RenderPlan(test=TestConfig(method="obb"),
+                   shard=ShardConfig(tile_shards=2))
+
+
+def test_tile_mesh_needs_enough_devices():
+    with pytest.raises(ValueError, match="device_count"):
+        shd.tile_mesh(jax.device_count() + 1)
+
+
+# ---------------------------------------------------------------------------
+# shard_frames: odd batches shard (padded), not silently replicate
+# ---------------------------------------------------------------------------
+
+def test_shard_frames_pads_odd_batch():
+    mesh = shd.tile_mesh(1, frame_shards=2)
+    cams = stack_cameras([orbit_camera(2 * np.pi * i / 8, 32, 32)
+                          for i in range(3)])
+    placed = shd.shard_frames(cams, mesh)
+    leaves = [x for x in jax.tree.leaves(placed) if x.ndim > 0]
+    assert leaves
+    for orig, x in zip((y for y in jax.tree.leaves(cams) if y.ndim > 0),
+                       leaves):
+        assert x.shape[0] == 4                      # 3 padded to 4
+        assert not x.sharding.is_fully_replicated   # actually frame-sharded
+        assert bool(jnp.array_equal(x[:3], orig))   # real frames intact
+        assert bool(jnp.array_equal(x[3], orig[2]))  # pad repeats the last
+
+
+def test_shard_frames_exact_multiple_unpadded():
+    mesh = shd.tile_mesh(1, frame_shards=2)
+    cams = stack_cameras([orbit_camera(2 * np.pi * i / 8, 32, 32)
+                          for i in range(4)])
+    placed = shd.shard_frames(cams, mesh)
+    for x in jax.tree.leaves(placed):
+        if x.ndim > 0:
+            assert x.shape[0] == 4
+
+
+# ---------------------------------------------------------------------------
+# engine: frame x tile composition on one mesh
+# ---------------------------------------------------------------------------
+
+CFG32 = RenderConfig(height=32, width=32)
+
+
+def orbit(i, res=32):
+    return orbit_camera(2 * np.pi * i / 8, res, res)
+
+
+def test_engine_frame_by_tile_composition():
+    """2 frame shards x 2 tile shards on one mesh, odd batch of 3: every
+    frame matches the unsharded engine bit-for-bit."""
+    mesh = shd.tile_mesh(2, frame_shards=2)
+    eng = RenderEngine(CFG32, max_batch=8, shard_tiles=2, mesh=mesh)
+    ref = RenderEngine(CFG32, max_batch=8)
+    for e in (eng, ref):
+        register_demo_scenes(e, 0, sizes={"s": 300})
+    reqs = [RenderRequest("s", orbit(i)) for i in range(3)]
+    got = eng.render_batch(reqs)
+    want = ref.render_batch(reqs)
+    for g, w in zip(got, want):
+        assert bool(jnp.array_equal(g.image, w.image))
+        assert bool(jnp.array_equal(g.alpha, w.alpha))
+        for k in w.counters:
+            assert bool(jnp.array_equal(g.counters[k], w.counters[k])), k
+    assert float(got[0].counters["tile_shards"]) == 2.0
+
+
+def test_engine_shard_tiles_builds_default_mesh():
+    eng = RenderEngine(CFG32, shard_tiles=2)
+    assert eng.mesh is not None and eng.mesh.shape["model"] == 2
+    assert eng.plan.shard.tile_shards == 2
+
+
+def test_engine_shard_tiles_rejects_wrong_mesh():
+    with pytest.raises(ValueError, match="model"):
+        RenderEngine(CFG32, shard_tiles=4, mesh=shd.tile_mesh(2))
+
+
+# ---------------------------------------------------------------------------
+# engine LRU: jit cache + scene registry
+# ---------------------------------------------------------------------------
+
+def test_jit_cache_lru_eviction_and_recompile():
+    eng = RenderEngine(CFG32, max_batch=8, jit_cache_size=1)
+    register_demo_scenes(eng, 0, sizes={"s": 300})
+    eng.render_batch([RenderRequest("s", orbit(0))])
+    assert (eng.compile_count, eng.jit_cache_evictions) == (1, 0)
+    eng.render_batch([RenderRequest("s", orbit(1))])   # same key: cache hit
+    assert (eng.compile_count, eng.jit_cache_evictions) == (1, 0)
+    eng.render_batch([RenderRequest("s", orbit(0, res=16))])  # new key
+    assert (eng.compile_count, eng.jit_cache_evictions) == (2, 1)
+    eng.render_batch([RenderRequest("s", orbit(0))])   # evicted: recompiles
+    assert (eng.compile_count, eng.jit_cache_evictions) == (3, 2)
+    assert len(eng._cache) == 1
+    assert eng.telemetry.registry.counter(
+        "engine_jit_cache_evictions_total").value() == 2.0
+
+
+def test_jit_cache_lru_order_is_by_use():
+    eng = RenderEngine(CFG32, max_batch=8, jit_cache_size=2)
+    register_demo_scenes(eng, 0, sizes={"s": 300})
+    eng.render_batch([RenderRequest("s", orbit(0))])          # key A
+    eng.render_batch([RenderRequest("s", orbit(0, res=16))])  # key B
+    eng.render_batch([RenderRequest("s", orbit(1))])          # touch A
+    eng.render_batch([RenderRequest("s", orbit(0, res=64))])  # evicts B
+    assert eng.jit_cache_evictions == 1
+    c = eng.compile_count
+    eng.render_batch([RenderRequest("s", orbit(2))])   # A still cached
+    assert eng.compile_count == c
+
+
+def test_scene_registry_lru_eviction():
+    scenes = {f"s{i}": random_scene(jax.random.PRNGKey(i), 100)
+              for i in range(3)}
+    eng = RenderEngine(CFG32, max_batch=8, max_scenes=2)
+    eng.register_scene("s0", scenes["s0"])
+    eng.register_scene("s1", scenes["s1"])
+    eng.render_batch([RenderRequest("s0", orbit(0))])   # touch s0
+    eng.register_scene("s2", scenes["s2"])              # evicts s1 (LRU)
+    assert eng.scene_names() == ["s0", "s2"]
+    assert eng.scene_evictions == 1
+    assert eng.telemetry.registry.counter(
+        "engine_scene_evictions_total").value() == 1.0
+    with pytest.raises(KeyError):
+        eng.render_batch([RenderRequest("s1", orbit(0))])
+
+
+def test_engine_cap_validation():
+    with pytest.raises(ValueError, match="jit_cache_size"):
+        RenderEngine(CFG32, jit_cache_size=0)
+    with pytest.raises(ValueError, match="max_scenes"):
+        RenderEngine(CFG32, max_scenes=0)

@@ -19,9 +19,11 @@ in only one artifact is skipped unless --require-all (a `--quick` candidate
 legitimately covers a subset of the committed full sweep). Trajectory
 (frame-coherence) points are matched on (n, res, mode) with the structural
 counters — frames, tiles, full_recompactions, per-frame parity — compared
-exactly and the tile-reuse counts under --counter-tol. The spill-smoke
-and hd1080 sections are compared when both artifacts carry them at the
-same configuration. Exit status: 0 = no regressions, 1 = regressions
+exactly and the tile-reuse counts under --counter-tol. Tile-shard
+(latency-vs-shards) points are matched on (n, res) with parity and shard
+occupancy exact and both walls tolerant. The spill-smoke and hd1080
+sections are compared when both artifacts carry them at the same
+configuration. Exit status: 0 = no regressions, 1 = regressions
 (plus a readable table either way).
 """
 from __future__ import annotations
@@ -167,6 +169,47 @@ def diff_artifacts(base: dict, cand: dict, *, wall_tol: float,
             d.wall(where, b["wall_s"], c["wall_s"])
     for key in sorted(set(ctr) - set(btr)):
         d.note(f"traj/n={key[0]}/res={key[1]}/{key[2]}: only in candidate "
+               "(new point)")
+
+    bts = {(p["n"], p["res"]): p for p in base.get("tile_shard", [])}
+    cts = {(p["n"], p["res"]): p for p in cand.get("tile_shard", [])}
+    for key in sorted(bts):
+        where = f"tile_shard/n={key[0]}/res={key[1]}"
+        if key not in cts:
+            if require_all:
+                d.counter(where, "present", True, False, tol=0.0)
+            else:
+                d.note(f"{where}: not in candidate (skipped)")
+            continue
+        b, c = bts[key], cts[key]
+        # Structure (k_max, tiles, parity) is exact; survivor-entry counts
+        # ride the shared --counter-tol like the sweep's workload counters
+        # (near-tie mixed-precision CAT tests can flip a handful of entries
+        # between CPUs); walls — measured and modeled, the model scales off
+        # the measured 1-shard wall — stay under the tolerant wall gate.
+        for metric in ("k_max", "tiles"):
+            if metric in b and metric in c:
+                d.counter(where, metric, b[metric], c[metric], tol=0.0)
+        if "entries_total" in b and "entries_total" in c:
+            d.counter(where, "entries_total", b["entries_total"],
+                      c["entries_total"])
+        brows = {r["shards"]: r for r in b.get("shards", [])}
+        crows = {r["shards"]: r for r in c.get("shards", [])}
+        for s in sorted(brows):
+            if s not in crows:
+                d.counter(f"{where}/s={s}", "present", True, False, tol=0.0)
+                continue
+            br, cr = brows[s], crows[s]
+            d.counter(f"{where}/s={s}", "parity", br.get("parity"),
+                      cr.get("parity"), tol=0.0)
+            for metric in ("shard_entries_max", "shard_entries_min"):
+                if metric in br and metric in cr:
+                    d.counter(f"{where}/s={s}", metric, br[metric],
+                              cr[metric])
+            if "wall_s" in br and "wall_s" in cr:
+                d.wall(f"{where}/s={s}", br["wall_s"], cr["wall_s"])
+    for key in sorted(set(cts) - set(bts)):
+        d.note(f"tile_shard/n={key[0]}/res={key[1]}: only in candidate "
                "(new point)")
 
     bs, cs = base.get("spill_smoke"), cand.get("spill_smoke")
