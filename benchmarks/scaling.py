@@ -44,10 +44,20 @@ fullest shard's survivor-entry share — the bound a device-per-shard
 deployment sees) are recorded; the monotonic 1 -> 4 scaling claim is
 asserted on the modeled metric for res >= 512 points.
 
+--lod / --lod-smoke add the camera-dependent LOD rung (`repro.lod`): the
+scene is clustered offline with probe-accumulated contribution mass
+(`build_lod`), one camera is served through cluster selection + compact
+gather (`render_lod_with_stats`), and the result is gated against the full
+no-LOD stream render — PSNR >= 30 dB always, speedup >= 5x on the full 4M
+rung (where the no-LOD path carries ~selection_ratio^-1 more preprocess
+and Stage-1 work). Selection counters (clusters/Gaussians selected,
+bucket, k_max pair) are recorded for `tools/bench_diff.py` to diff.
+
 Run:
     PYTHONPATH=src python benchmarks/scaling.py [--quick] [--spill-smoke]
         [--trajectory | --trajectory-smoke]
         [--tile-shard | --tile-shard-smoke]
+        [--lod | --lod-smoke]
         [--hd1080 | --hd1080-dry] [--out f.json]
 
 --quick restricts to N ≤ 32k and resolution ≤ 512² (CI-sized); the full
@@ -355,6 +365,114 @@ def run_tile_shard(smoke: bool, repeats: int) -> list:
     return records
 
 
+def run_lod(smoke: bool, repeats: int) -> list:
+    """The camera-dependent LOD rung (`repro.lod`): build the cluster table
+    offline, then render one camera through selection + gather and compare
+    against the full no-LOD stream render of the same scene.
+
+    Full rung: 4M Gaussians at 512² under a 32° camera — the regime the
+    subsystem exists for (most of the scene outside the frustum, Stage-1
+    and preprocess dominated by raw N). Gates, asserted here and diffed by
+    tools/bench_diff.py:
+
+      psnr_db >= 30       LOD image vs the full render (the quality bound;
+                          in practice selection drops out-of-frustum and
+                          probe-zero-mass clusters, so it lands far above)
+      speedup  >= 5       full-render wall / LOD wall (full rung only — the
+                          no-LOD stream path is ~selection_ratio^-1 more
+                          preprocess + Stage-1 work)
+      selection_ratio < 1 the stage actually selects (smoke included;
+                          structural counters committed + diffed exactly)
+    """
+    import dataclasses as dc
+
+    from repro.core import orbit_camera, psnr, ssim
+    from repro.lod import (LODConfig, build_lod, measure_lod_k_max,
+                           select_clusters, selected_members,
+                           selection_bucket_for)
+
+    if smoke:
+        n, res, probe_res, fov = 32768, 128, 64, 32.0
+        cfg = LODConfig(num_clusters=256, probe_k_max=128, probe_passes=2,
+                        min_bucket=1024, min_footprint_px=1.0,
+                        mass_floor=1e-6)
+    else:
+        n, res, probe_res, fov = 1 << 22, 512, 128, 32.0
+        cfg = LODConfig(num_clusters=4096, probe_k_max=256, probe_passes=2,
+                        min_bucket=4096, min_footprint_px=1.0,
+                        mass_floor=1e-6)
+    extent = 10.0
+    scene = random_scene(jax.random.PRNGKey(n), n, extent=extent,
+                         scale_range=(-3.3, -2.7), stretch=3.0,
+                         opacity_range=(-1.0, 3.0))
+    cam = default_camera(res, res, fov_deg=fov)
+    # Probe set: the serve pose plus two nearby orbit poses, at a reduced
+    # probe resolution (the contribution-mass accumulation only needs the
+    # coarse occlusion structure, not serve-resolution detail).
+    probes = [default_camera(probe_res, probe_res, fov_deg=fov),
+              orbit_camera(0.06, probe_res, probe_res, fov_deg=fov),
+              orbit_camera(-0.06, probe_res, probe_res, fov_deg=fov)]
+    grid = GridConfig(height=res, width=res)
+
+    t0 = time.perf_counter()
+    lod = build_lod(scene, probes, cfg, grid=grid)
+    build_s = time.perf_counter() - t0
+    sel = select_clusters(lod, cam, cfg)
+    n_sel = int(selected_members(lod, sel))
+    bucket = selection_bucket_for(n_sel, cfg, lod.n_padded)
+    ratio = n_sel / n
+
+    k_full = measure_k_max(scene, [cam], grid=grid, cap=scene.n)
+    k_lod = measure_lod_k_max(lod, [cam], cfg, grid=grid)
+    full_plan = plan_for(res, k_full, "stream")
+    lod_plan = dc.replace(plan_for(res, k_lod, "stream"),
+                          lod=dc.replace(cfg, selection_bucket=bucket))
+
+    fn_full = jax.jit(lambda s: full_plan.render_with_stats(s, cam))
+    out_full, _ = jax.block_until_ready(fn_full(scene))   # compile + warm
+    t0 = time.perf_counter()
+    for _ in range(repeats):
+        out_full, _ = jax.block_until_ready(fn_full(scene))
+    wall_full = (time.perf_counter() - t0) / repeats
+
+    fn_lod = jax.jit(lambda l: lod_plan.render_lod_with_stats(l, cam))
+    out_lod, counters = jax.block_until_ready(fn_lod(lod))
+    t0 = time.perf_counter()
+    for _ in range(repeats):
+        out_lod, counters = jax.block_until_ready(fn_lod(lod))
+    wall_lod = (time.perf_counter() - t0) / repeats
+
+    quality = float(psnr(out_lod.image, out_full.image))
+    rec = dict(
+        n=n, res=res, smoke=smoke, fov_deg=fov, extent=extent,
+        clusters_total=lod.n_clusters,
+        clusters_selected=int(np.asarray(counters["lod_clusters_selected"])),
+        gaussians_selected=n_sel,
+        selection_ratio=ratio,
+        lod_bucket=bucket,
+        k_max_full=k_full, k_max_lod=k_lod,
+        build_s=build_s,
+        wall_full_s=wall_full, wall_lod_s=wall_lod,
+        speedup=wall_full / wall_lod,
+        psnr_db=quality,
+        ssim=float(ssim(out_lod.image, out_full.image)),
+    )
+    assert ratio < 1.0, "LOD rung must actually select a sub-scene"
+    assert quality >= 30.0, \
+        f"LOD quality bound violated: {quality:.1f} dB < 30 dB"
+    if not smoke:
+        assert rec["speedup"] >= 5.0, \
+            (f"LOD must beat the no-LOD stream path >= 5x at N={n}: "
+             f"{rec['speedup']:.2f}x")
+    print(f"lod{'[smoke]' if smoke else ''} N={n} res={res} | selected "
+          f"{rec['clusters_selected']}/{rec['clusters_total']} clusters = "
+          f"{n_sel} Gaussians ({100 * ratio:.1f}%, bucket {bucket}) | "
+          f"k_max {k_full} -> {k_lod} | wall {wall_full:.2f}s -> "
+          f"{wall_lod:.2f}s ({rec['speedup']:.1f}x) | PSNR vs full "
+          f"{quality:.1f} dB")
+    return [rec]
+
+
 def run_hd1080(n_gaussians: int, k_max_pass: int, repeats: int) -> dict:
     """The 1080p serving rung: 1920×1088 through `serving.RenderEngine`
     under SPILL. Returns the JSON record (also asserts no overflow and no
@@ -436,6 +554,14 @@ def main():
     ap.add_argument("--tile-shard-smoke", action="store_true",
                     help="CI-sized --tile-shard (one small point; parity "
                          "and occupancy recorded, scaling not gated)")
+    ap.add_argument("--lod", action="store_true",
+                    help="camera-dependent LOD rung: 4M Gaussians at 512^2 "
+                         "through repro.lod selection + gather, PSNR- and "
+                         "speedup-gated against the full stream render")
+    ap.add_argument("--lod-smoke", action="store_true",
+                    help="CI-sized --lod (32k scene at 128^2; selection "
+                         "active and the PSNR >= 30 dB gate asserted, "
+                         "speedup recorded but not gated)")
     ap.add_argument("--hd1080", action="store_true",
                     help="add the 1920x1088 / 512k-Gaussian serving rung "
                          "(tens of minutes on CPU)")
@@ -519,6 +645,13 @@ def main():
         if args.tile_shard:
             ts += run_tile_shard(smoke=False, repeats=args.repeats)
         result["tile_shard"] = ts
+    if args.lod or args.lod_smoke:
+        lodrecs = []
+        if args.lod_smoke:
+            lodrecs += run_lod(smoke=True, repeats=args.repeats)
+        if args.lod:
+            lodrecs += run_lod(smoke=False, repeats=args.repeats)
+        result["lod"] = lodrecs
     if args.hd1080 or args.hd1080_dry:
         n_hd = 4096 if args.hd1080_dry else args.hd1080_gaussians
         # dry run: chunk well below the measured survivor bound so the CI

@@ -23,6 +23,7 @@ from repro.core.pipeline import (RenderConfig, render, render_with_stats,
                                  render_batch_with_stats,
                                  FLICKER_CONFIG, VANILLA_CONFIG,
                                  GSCORE_CONFIG)
+from repro.core.io import SH_C0, load_ply, save_ply
 from repro.core.metrics import psnr, ssim
 from repro.core.precision import (PrecisionScheme, FULL_FP32, FULL_FP16,
                                   FULL_FP8, MIXED)
@@ -43,6 +44,7 @@ __all__ = [
     "tile_fingerprints", "tile_cover_rects", "camera_delta",
     "RenderConfig", "render", "render_with_stats",
     "render_batch_with_stats",
+    "SH_C0", "load_ply", "save_ply",
     "psnr", "ssim",
     "FLICKER_CONFIG", "VANILLA_CONFIG", "GSCORE_CONFIG",
     "PrecisionScheme", "FULL_FP32", "FULL_FP16", "FULL_FP8", "MIXED",

@@ -6,8 +6,13 @@ traffic: only the 10 geometric parameters of clusters that survive culling
 have their member Gaussians fetched; the 45 color/SH parameters are fetched
 only for Gaussians that additionally pass the intersection test.
 
-We use a fixed-iteration k-means (jit-able, deterministic) over Gaussian
-means; cluster bounding spheres cover member 3-sigma extents.
+We use a fixed-iteration k-means (deterministic under a fixed key) over
+Gaussian means; cluster bounding spheres cover member 3-sigma extents.
+Sized for multi-million-Gaussian scenes (the LOD build path): distances use
+the expanded |p|^2 - 2 p.c + |c|^2 form so assignment is one (block, C)
+matmul per point block, lax.map-chunked — nothing of shape (N, C, 3) ever
+materializes — and the center fit runs on a bounded subsample when N
+exceeds `FIT_SAMPLE` (the final assignment always covers every Gaussian).
 """
 from __future__ import annotations
 
@@ -21,6 +26,9 @@ from repro.core.gaussians import GaussianScene
 GEOM_PARAMS = 10   # mean(3) scale(3) quat(4)  -- fetched for culling
 COLOR_PARAMS = 45  # SH coeffs etc.            -- fetched lazily
 
+ASSIGN_BLOCK = 1 << 14   # points per chunked assignment block
+FIT_SAMPLE = 1 << 16     # center-fit subsample bound (assignment stays full)
+
 
 class Clustering(NamedTuple):
     centers: jax.Array      # (C, 3)
@@ -29,28 +37,55 @@ class Clustering(NamedTuple):
     counts: jax.Array       # (C,) members per cluster
 
 
+def _assign_block(pts: jax.Array, centers: jax.Array) -> jax.Array:
+    """(B, 3) points -> (B,) nearest-center ids via one (B, C) matmul."""
+    d2 = (jnp.sum(pts * pts, axis=1, keepdims=True)
+          - 2.0 * pts @ centers.T
+          + jnp.sum(centers * centers, axis=1)[None, :])
+    return jnp.argmin(d2, axis=1)
+
+
+def _assign_all(pts: jax.Array, centers: jax.Array,
+                block: int = ASSIGN_BLOCK) -> jax.Array:
+    """Chunked nearest-center assignment: (N,) ids, O(block x C) live."""
+    n = pts.shape[0]
+    if n <= block:
+        return _assign_block(pts, centers)
+    nb = -(-n // block)
+    pad = nb * block - n
+    p = (jnp.concatenate([pts, jnp.zeros((pad, 3), pts.dtype)])
+         if pad else pts)
+    a = jax.lax.map(lambda pb: _assign_block(pb, centers),
+                    p.reshape(nb, block, 3))
+    return a.reshape(-1)[:n]
+
+
 def kmeans_clusters(scene: GaussianScene, num_clusters: int,
                     iters: int = 8, key: jax.Array | None = None) -> Clustering:
     pts = scene.means                                   # (N, 3)
     n = pts.shape[0]
     if key is None:
         key = jax.random.PRNGKey(0)
-    idx = jax.random.choice(key, n, (num_clusters,), replace=False)
-    centers = pts[idx]
+    k_init, k_fit = jax.random.split(key)
+    if n > FIT_SAMPLE:
+        fit = pts[jax.random.choice(k_fit, n, (FIT_SAMPLE,), replace=False)]
+    else:
+        fit = pts
+    m = fit.shape[0]
+    idx = jax.random.choice(k_init, m, (num_clusters,), replace=False)
+    centers = fit[idx]
 
     def step(centers, _):
-        d2 = jnp.sum((pts[:, None, :] - centers[None, :, :]) ** 2, -1)
-        assign = jnp.argmin(d2, axis=1)                 # (N,)
-        sums = jax.ops.segment_sum(pts, assign, num_segments=num_clusters)
-        cnt = jax.ops.segment_sum(jnp.ones((n,)), assign,
+        assign = _assign_all(fit, centers)              # (m,)
+        sums = jax.ops.segment_sum(fit, assign, num_segments=num_clusters)
+        cnt = jax.ops.segment_sum(jnp.ones((m,)), assign,
                                   num_segments=num_clusters)
         new = jnp.where(cnt[:, None] > 0, sums / jnp.maximum(cnt[:, None], 1),
                         centers)
         return new, None
 
     centers, _ = jax.lax.scan(step, centers, None, length=iters)
-    d2 = jnp.sum((pts[:, None, :] - centers[None, :, :]) ** 2, -1)
-    assign = jnp.argmin(d2, axis=1)
+    assign = _assign_all(pts, centers)                  # every Gaussian
     counts = jax.ops.segment_sum(jnp.ones((n,)), assign,
                                  num_segments=num_clusters)
     reach = jnp.sqrt(jnp.sum((pts - centers[assign]) ** 2, -1))

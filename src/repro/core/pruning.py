@@ -5,6 +5,13 @@ training views — the transmittance-weighted alpha mass each Gaussian
 deposits — and removes the lowest-scoring fraction. The paper prunes, then
 fine-tunes 3K iterations; we expose both steps (fine-tuning via
 core.training.fit).
+
+The scores double as the LOD subsystem's per-cluster contribution mass
+(`repro.lod.build_lod` accumulates them over probe cameras), so the scoring
+loop is sized for multi-million-Gaussian scenes: Stage-1 masks come from the
+fused, tile-chunked compaction (`raster.compact_aabb_tile_lists` — no
+(T, N) mask ever materializes) and the per-tile weight accumulation maps
+over bounded tile blocks.
 """
 from __future__ import annotations
 
@@ -12,45 +19,81 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.gaussians import GaussianScene, project
-from repro.core.culling import TileGrid
+from repro.core.culling import TileGrid, tile_divisor_chunk
 from repro.core import raster
+
+# Bound on tiles x pixels x (k_max * passes) float elements the per-tile
+# weight accumulation holds live; larger problems lax.map over tile blocks.
+CONTRIB_CHUNK_ELEMS = 1 << 24
 
 
 def contribution_scores(scene: GaussianScene, cameras, grid: TileGrid,
-                        k_max: int = 2048) -> jax.Array:
-    """(N,) accumulated blending weight of each Gaussian over the cameras."""
+                        k_max: int = 2048, passes: int = 1) -> jax.Array:
+    """(N,) accumulated blending weight of each Gaussian over the cameras.
+
+    Overflow-aware: survivors past a tile's `k_max` are not dropped —
+    `passes` compacted lists per tile are scored (the pass-aware sibling of
+    `raster.compact_tile_lists`), with the per-pixel transmittance carried
+    across the passes so pass p's weights see exactly the absorption the
+    first p*k_max survivors produced. With `passes * k_max` covering the
+    longest survivor list the scores equal a single unbounded compaction's
+    (up to float association); a too-small total capacity only *under*-counts
+    tail Gaussians, it never misattributes mass.
+    """
     n = scene.n
     scores = jnp.zeros((n,))
+    poffs = raster._pixel_offsets(grid.tile)
+    pixels = poffs.shape[0]
     for cam in cameras:
         proj = project(scene, cam)
         order = raster.depth_order(proj)
-        tile_mask = raster.compact_tile_lists  # noqa: F841 (doc anchor)
-        from repro.core.culling import aabb_mask
-        mask = aabb_mask(proj, grid.tile_origins(), grid.tile)
-        lists, valid, _ = raster.compact_tile_lists(mask, order, k_max)
-
+        # Fused Stage-1 AABB + multi-pass compaction, tile-chunked: the
+        # (T, N) mask never materializes whole. lists: (passes, T, K).
+        lists, valid, _ = raster.compact_aabb_tile_lists(
+            proj, grid, order, k_max, passes)
         tile_origins = grid.tile_origins().astype(jnp.float32)
-        poffs = raster._pixel_offsets(grid.tile)
 
-        def one_tile(origin, lst, val):
-            g_mean = proj.mean2d[lst]
-            g_conic = proj.conic[lst]
-            g_op = proj.opacity[lst]
+        def one_tile(origin, lsts, vals):
+            """(passes, K) lists of one tile -> (passes, K) blend weights."""
             pix = origin[None, :] + poffs
-            d = pix[:, None, :] - g_mean[None, :, :]
-            E = (0.5 * (g_conic[None, :, 0] * d[..., 0] ** 2
-                        + g_conic[None, :, 2] * d[..., 1] ** 2)
-                 + g_conic[None, :, 1] * d[..., 0] * d[..., 1])
-            a = jnp.minimum(g_op[None, :] * jnp.exp(-E), raster.ALPHA_MAX)
-            a = jnp.where(val[None, :] & (a >= raster.ALPHA_MIN), a, 0.0)
-            T = jnp.cumprod(1.0 - a, axis=1)
-            T_excl = jnp.concatenate([jnp.ones_like(T[:, :1]), T[:, :-1]], 1)
-            w = jnp.sum(T_excl * a, axis=0)          # (K,) per-gaussian mass
-            return lst, w
+            t_carry = jnp.ones((pixels,))
+            ws = []
+            for p in range(passes):
+                g_mean = proj.mean2d[lsts[p]]
+                g_conic = proj.conic[lsts[p]]
+                g_op = proj.opacity[lsts[p]]
+                d = pix[:, None, :] - g_mean[None, :, :]
+                E = (0.5 * (g_conic[None, :, 0] * d[..., 0] ** 2
+                            + g_conic[None, :, 2] * d[..., 1] ** 2)
+                     + g_conic[None, :, 1] * d[..., 0] * d[..., 1])
+                a = jnp.minimum(g_op[None, :] * jnp.exp(-E), raster.ALPHA_MAX)
+                a = jnp.where(vals[p][None, :] & (a >= raster.ALPHA_MIN),
+                              a, 0.0)
+                T = jnp.cumprod(1.0 - a, axis=1)
+                T_excl = t_carry[:, None] * jnp.concatenate(
+                    [jnp.ones_like(T[:, :1]), T[:, :-1]], 1)
+                ws.append(jnp.sum(T_excl * a, axis=0))   # (K,) per-gaussian
+                t_carry = t_carry * T[:, -1]
+            return jnp.stack(ws)                         # (passes, K)
 
-        lsts, ws = jax.vmap(one_tile)(tile_origins, lists, valid)
-        scores = scores.at[lsts.reshape(-1).clip(0)].add(
-            jnp.where(lsts.reshape(-1) >= 0, ws.reshape(-1), 0.0))
+        t = grid.num_tiles
+        lists_t = jnp.moveaxis(lists, 0, 1)              # (T, passes, K)
+        valid_t = jnp.moveaxis(valid, 0, 1)
+        chunk = tile_divisor_chunk(t, pixels * k_max * passes,
+                                   CONTRIB_CHUNK_ELEMS)
+        if chunk >= t:
+            ws = jax.vmap(one_tile)(tile_origins, lists_t, valid_t)
+        else:
+            nb = t // chunk
+            ws = jax.lax.map(
+                lambda ops: jax.vmap(one_tile)(*ops),
+                (tile_origins.reshape(nb, chunk, 2),
+                 lists_t.reshape(nb, chunk, passes, k_max),
+                 valid_t.reshape(nb, chunk, passes, k_max)))
+            ws = ws.reshape(t, passes, k_max)
+        ids = lists_t.reshape(-1)
+        scores = scores.at[ids.clip(0)].add(
+            jnp.where(ids >= 0, ws.reshape(-1), 0.0))
     return scores
 
 

@@ -49,7 +49,11 @@ import dataclasses
 import enum
 import math
 import warnings
-from typing import Optional
+from typing import Optional, TYPE_CHECKING
+
+if TYPE_CHECKING:
+    from repro.lod.build import LODScene
+    from repro.lod.config import LODConfig
 
 import jax
 import jax.numpy as jnp
@@ -274,6 +278,12 @@ class RenderPlan:
     O(T·k_max·16) masks) or "dense" (the O(regions×N) parity oracle).
     Plans are value-equal frozen dataclasses, so a plan is directly usable
     as a jit-cache key (`serving.RenderEngine` does exactly that).
+
+    lod (default None) attaches the optional camera-dependent LOD stage
+    (`repro.lod.LODConfig`): `render_lod_with_stats` selects clusters and
+    gathers a pow2-bucketed sub-scene before Stage-1. With lod=None every
+    other entry point is bit-identical to a plan without the field — the
+    LOD stage only exists on the `render_lod_with_stats` path.
     """
     grid: GridConfig = GridConfig()
     test: TestConfig = TestConfig()
@@ -281,6 +291,7 @@ class RenderPlan:
     raster: RasterConfig = RasterConfig()
     dataflow: str = "stream"                  # stream | dense
     shard: ShardConfig = ShardConfig()
+    lod: Optional["LODConfig"] = None
 
     def __post_init__(self):
         if self.dataflow not in ("stream", "dense"):
@@ -929,6 +940,62 @@ class RenderPlan:
                                 n_passes=self.n_passes)
         return out, counters
 
+    def render_lod_with_stats(self, lod_scene: "LODScene", camera):
+        """Camera-dependent LOD render: select clusters, gather the compact
+        sub-scene, run the normal plan on it (a `stage0_lod` span in front
+        of the usual tree).
+
+        Requires `plan.lod` (an `repro.lod.LODConfig`) and a `LODScene`
+        from `repro.lod.build_lod`. The selection bucket — the static
+        gather capacity — comes from `lod.selection_bucket` when pinned
+        (the serving engine pins it per batch so it keys the jit cache;
+        pinning is mandatory under jit/vmap, where the selected count is
+        abstract) and is otherwise derived host-side from the selected
+        member count. Returns (RenderOut, counters) like
+        `render_with_stats` plus the selection counters
+        lod_clusters_total / lod_clusters_selected /
+        lod_gaussians_selected / lod_selection_ratio / lod_bucket.
+        """
+        cfg = self.lod
+        if cfg is None:
+            raise ValueError("render_lod_with_stats needs a plan with "
+                             "lod=LODConfig(...) (this plan has lod=None)")
+        from repro.lod.select import (gather_subscene, select_clusters,
+                                      selected_members, selection_bucket_for)
+        tracer = obs_trace.current()
+        live = not obs_trace.is_traced((lod_scene, camera))
+        with tracer.span("stage0_lod") as sp:
+            sel = select_clusters(lod_scene, camera, cfg)
+            n_sel = selected_members(lod_scene, sel)
+            if cfg.selection_bucket is not None:
+                bucket = cfg.selection_bucket
+            elif not live:
+                raise ValueError(
+                    "render_lod_with_stats under jit/vmap needs a pinned "
+                    "LODConfig.selection_bucket — the gather capacity is a "
+                    "static shape and cannot come from a traced count")
+            else:
+                bucket = selection_bucket_for(int(n_sel), cfg,
+                                              lod_scene.n_padded)
+            sub, _ = gather_subscene(lod_scene, sel, bucket)
+            tracer.block(sub)
+            if tracer.enabled:
+                sp.set(clusters_total=lod_scene.n_clusters, bucket=bucket,
+                       traced=not live)
+                if live:
+                    sp.set(clusters_selected=int(jnp.sum(sel)),
+                           gaussians_selected=int(n_sel))
+        out, counters = self.render_with_stats(sub, camera)
+        counters = dict(counters)
+        counters["lod_clusters_total"] = jnp.asarray(
+            float(lod_scene.n_clusters), jnp.float32)
+        counters["lod_clusters_selected"] = jnp.sum(sel).astype(jnp.float32)
+        counters["lod_gaussians_selected"] = n_sel.astype(jnp.float32)
+        counters["lod_selection_ratio"] = (
+            n_sel.astype(jnp.float32) / float(max(lod_scene.n_real, 1)))
+        counters["lod_bucket"] = jnp.asarray(float(bucket), jnp.float32)
+        return out, counters
+
     # -- introspection ------------------------------------------------------
 
     def stages(self) -> tuple[StageSpec, ...]:
@@ -1063,14 +1130,16 @@ class Renderer:
                  stream: Optional[StreamConfig] = None,
                  raster: Optional[RasterConfig] = None,
                  dataflow: str = "stream",
-                 shard: Optional[ShardConfig] = None):
+                 shard: Optional[ShardConfig] = None,
+                 lod: Optional["LODConfig"] = None):
         self.plan = RenderPlan(
             grid=grid if grid is not None else GridConfig(),
             test=test if test is not None else TestConfig(),
             stream=stream if stream is not None else StreamConfig(),
             raster=raster if raster is not None else RasterConfig(),
             dataflow=dataflow,
-            shard=shard if shard is not None else ShardConfig())
+            shard=shard if shard is not None else ShardConfig(),
+            lod=lod)
 
     @classmethod
     def from_plan(cls, plan: RenderPlan) -> "Renderer":
@@ -1086,7 +1155,7 @@ class Renderer:
 
     def replace(self, **kw) -> "Renderer":
         """New Renderer with plan fields replaced (grid/test/stream/raster/
-        dataflow)."""
+        dataflow/shard/lod)."""
         return Renderer.from_plan(dataclasses.replace(self.plan, **kw))
 
     def render(self, scene: GaussianScene, camera) -> raster.RenderOut:
@@ -1102,6 +1171,9 @@ class Renderer:
 
     def render_batch_with_stats(self, scene: GaussianScene, cameras):
         return self.plan.render_batch_with_stats(scene, cameras)
+
+    def render_lod_with_stats(self, lod_scene: "LODScene", camera):
+        return self.plan.render_lod_with_stats(lod_scene, camera)
 
     def __repr__(self):
         return f"Renderer({self.plan!r})"

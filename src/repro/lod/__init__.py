@@ -1,0 +1,23 @@
+"""Camera-dependent hierarchical LOD selection (pre-Stage-1 stage).
+
+The subsystem the paper's coarse-granularity culling implies for
+multi-million-Gaussian scenes: offline, `build_lod` clusters the scene
+("big Gaussians", §IV-A) and accumulates per-cluster contribution mass
+over a probe camera set (§V-A scores); online, `select_clusters` picks the
+clusters a camera actually needs (frustum + projected footprint +
+contribution bound) and `gather_subscene` compacts their members into a
+pow2-bucketed sub-scene that the existing `RenderPlan` stream pipeline
+renders unchanged. See docs/architecture.md (LOD stage) and
+docs/serving.md (`register_scene(lod=...)`).
+"""
+from repro.lod.build import LODScene, build_lod
+from repro.lod.config import LODConfig
+from repro.lod.select import (gather_subscene, measure_lod_k_max,
+                              member_mask, select_clusters,
+                              selected_members, selection_bucket_for)
+
+__all__ = [
+    "LODConfig", "LODScene", "build_lod",
+    "select_clusters", "member_mask", "selected_members",
+    "selection_bucket_for", "gather_subscene", "measure_lod_k_max",
+]

@@ -1,0 +1,113 @@
+"""Offline LOD build: cluster the scene, accumulate probe contribution mass.
+
+`build_lod` turns a `GaussianScene` plus a probe camera set into a
+`LODScene` — the cluster table (`core.clustering.kmeans_clusters` centers /
+bounding spheres) annotated with each cluster's contribution mass (the
+transmittance-weighted alpha each member deposits over the probes,
+`core.pruning.contribution_scores`), with the scene's Gaussians reordered so
+every cluster's members are contiguous and the whole member axis pow2-padded
+with inert Gaussians. Contiguity is the paper's §IV-A memory-access
+argument (one visible cluster = one contiguous fetch) and what makes the
+online gather (`repro.lod.select.gather_subscene`) a cumsum-compaction over
+a sorted axis; the pow2 padding means the selection output shapes are
+static for any selection bucket up to the padded size.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.clustering import kmeans_clusters
+from repro.core.gaussians import GaussianScene, pad_scene
+from repro.core.pruning import contribution_scores
+from repro.core.renderer import GridConfig, next_pow2
+from repro.lod.config import LODConfig
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class LODScene:
+    """Cluster table + cluster-contiguous, pow2-padded member scene.
+
+    scene.n is the pow2-padded member count; members `n_real..` are inert
+    padding (`core.gaussians.pad_scene`) assigned to no cluster
+    (member_cluster -1), so they can never be selected. For each cluster c,
+    members `starts[c] .. starts[c] + counts[c]` form one contiguous block.
+    """
+    scene: GaussianScene        # reordered + padded to pow2 member count
+    member_cluster: jax.Array   # (Npad,) int32 cluster id, -1 for padding
+    centers: jax.Array          # (C, 3) cluster centroids
+    radii: jax.Array            # (C,) bounding-sphere radii (3-sigma incl.)
+    counts: jax.Array           # (C,) int32 members per cluster
+    starts: jax.Array           # (C,) int32 member-block offsets
+    mass: jax.Array             # (C,) probe-accumulated contribution mass
+    n_real: int = dataclasses.field(metadata=dict(static=True))
+
+    @property
+    def n_clusters(self) -> int:
+        return self.centers.shape[0]
+
+    @property
+    def n_padded(self) -> int:
+        return self.scene.n
+
+
+def build_lod(scene: GaussianScene, probe_cameras,
+              cfg: LODConfig = LODConfig(), *,
+              grid: GridConfig = GridConfig(),
+              key: jax.Array | None = None) -> LODScene:
+    """Cluster `scene` and score the clusters over `probe_cameras`.
+
+    Offline, host-side (the reorder changes N layout — not jit-able by
+    design, like `pruning.prune`). `grid` supplies the tile shape used for
+    probe scoring; each probe camera's own resolution sizes its grid, and
+    probes may mix resolutions. Deterministic under a fixed `key`
+    (PRNGKey(0) when None).
+    """
+    probe_cameras = list(probe_cameras)
+    if not probe_cameras:
+        raise ValueError("build_lod needs at least one probe camera — "
+                         "cluster contribution mass is measured, not "
+                         "assumed (an empty probe set would zero every "
+                         "cluster's mass and select nothing)")
+    n = scene.n
+    c = min(cfg.num_clusters, n)
+    cl = kmeans_clusters(scene, c, iters=cfg.kmeans_iters, key=key)
+
+    # Per-Gaussian contribution mass over the probes, grouped by resolution
+    # so cameras sharing a grid shape share one scoring call.
+    by_res: dict[tuple, list] = {}
+    for cam in probe_cameras:
+        by_res.setdefault((cam.height, cam.width), []).append(cam)
+    scores = jnp.zeros((n,))
+    for (h, w), cams in sorted(by_res.items()):
+        g = grid.with_resolution(h, w).make()
+        scores = scores + contribution_scores(
+            scene, cams, g, k_max=cfg.probe_k_max, passes=cfg.probe_passes)
+    mass = jax.ops.segment_sum(scores, cl.assign, num_segments=c)
+
+    # Reorder members cluster-contiguous (stable: original depth-independent
+    # order preserved within a cluster), then pow2-pad with inert Gaussians
+    # outside every cluster.
+    assign = np.asarray(cl.assign)
+    order = np.argsort(assign, kind="stable")
+    reordered = jax.tree.map(lambda x: x[jnp.asarray(order)], scene)
+    counts = cl.counts.astype(jnp.int32)
+    starts = (jnp.cumsum(counts) - counts).astype(jnp.int32)
+    n_pad = next_pow2(n)
+    member_cluster = jnp.concatenate([
+        jnp.asarray(assign[order], jnp.int32),
+        jnp.full((n_pad - n,), -1, jnp.int32)])
+    return LODScene(
+        scene=pad_scene(reordered, n_pad),
+        member_cluster=member_cluster,
+        centers=cl.centers,
+        radii=cl.radii,
+        counts=counts,
+        starts=starts,
+        mass=mass,
+        n_real=n,
+    )

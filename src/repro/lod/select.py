@@ -1,0 +1,124 @@
+"""Online LOD selection: per-camera cluster picking + compact gather.
+
+`select_clusters` runs the coarse, cluster-granular tests the paper puts
+*before* the fine-grained per-Gaussian pipeline: the conservative
+sphere-vs-frustum cull (`core.clustering.cluster_frustum_cull`), a
+projected-footprint test (clusters whose bounding sphere lands below
+`min_footprint_px` pixels of radius are sub-pixel detail for this camera),
+and a contribution bound (clusters whose probe-accumulated mass is below
+`mass_floor` x total never contributed over the probe set — occluded or
+inert regions). `gather_subscene` then compacts the selected clusters'
+members — contiguous blocks, thanks to the build-time reorder — into a
+pow2-bucketed `GaussianScene` that flows through the existing `RenderPlan`
+stream pipeline unchanged; everything here is jit-able at a static bucket.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.clustering import Clustering, cluster_frustum_cull
+from repro.core.gaussians import GaussianScene
+from repro.core.renderer import GridConfig, measure_k_max, next_pow2
+from repro.lod.build import LODScene
+from repro.lod.config import LODConfig
+
+
+def select_clusters(lod: LODScene, camera, cfg: LODConfig) -> jax.Array:
+    """(C,) bool — clusters this camera renders.
+
+    frustum-visible AND projected footprint >= min_footprint_px AND
+    contribution mass >= mass_floor x total probe mass. All three tests are
+    cluster-granular (O(C), not O(N)) — the whole point of the stage.
+    """
+    cl = Clustering(lod.centers, lod.radii, lod.member_cluster, lod.counts)
+    visible = cluster_frustum_cull(cl, camera)
+    t = (camera.R_wc @ lod.centers.T).T + camera.t_wc
+    z = jnp.maximum(t[:, 2], camera.near)
+    focal = 0.5 * (camera.fx + camera.fy)
+    footprint_px = focal * lod.radii / z
+    total = jnp.sum(lod.mass)
+    enough_mass = lod.mass >= cfg.mass_floor * total
+    return visible & (footprint_px >= cfg.min_footprint_px) & enough_mass
+
+
+def member_mask(lod: LODScene, selected: jax.Array) -> jax.Array:
+    """(Npad,) bool — members of selected clusters (padding never selects)."""
+    cluster = lod.member_cluster
+    return jnp.where(cluster >= 0, selected[cluster.clip(0)], False)
+
+
+def selected_members(lod: LODScene, selected: jax.Array) -> jax.Array:
+    """() int32 — member count of the selected clusters."""
+    return jnp.sum(jnp.where(selected, lod.counts, 0)).astype(jnp.int32)
+
+
+def selection_bucket_for(count: int, cfg: LODConfig, cap: int) -> int:
+    """Pow2 gather capacity for a selected member count (host-side).
+
+    next_pow2(count), floored at cfg.min_bucket, capped at the padded
+    member count — the value the serving engine pins into
+    `LODConfig.selection_bucket` per batch (it keys the jit cache).
+    """
+    return min(max(next_pow2(max(int(count), 1)), cfg.min_bucket), cap)
+
+
+def gather_subscene(lod: LODScene, selected: jax.Array,
+                    bucket: int) -> tuple[GaussianScene, jax.Array]:
+    """Compact the selected clusters' members into a `bucket`-sized scene.
+
+    Returns (sub-scene of exactly `bucket` Gaussians, () int32 selected
+    member count). Selected members keep their cluster-contiguous build
+    order (the compaction preserves order over a sorted axis, so each
+    selected cluster is one contiguous block of the output); slots past the
+    selected count are inert padding (opacity logit -30, frustum-culled for
+    every camera, exactly like `core.gaussians.pad_scene`). Members past
+    `bucket` are dropped — the serving engine sizes the bucket from the
+    count first, so that only happens with an explicitly pinned
+    too-small `selection_bucket`.
+    """
+    if not 1 <= bucket <= lod.n_padded:
+        raise ValueError(f"selection bucket {bucket} outside "
+                         f"[1, {lod.n_padded}]")
+    mask = member_mask(lod, selected)                    # (Npad,)
+    n_pad = mask.shape[0]
+    pos = jnp.cumsum(mask) - 1
+    take = mask & (pos < bucket)
+    tgt = jnp.where(take, pos, bucket)                   # overflow slot
+    src = jnp.full((bucket + 1,), -1, jnp.int32)
+    src = src.at[tgt].set(
+        jnp.where(take, jnp.arange(n_pad), -1).astype(jnp.int32),
+        mode="drop")[:bucket]
+    valid = src >= 0
+    idx = src.clip(0)
+    sub = jax.tree.map(lambda x: x[idx], lod.scene)
+    sub = dataclasses.replace(
+        sub, opacity_logits=jnp.where(valid, sub.opacity_logits, -30.0))
+    return sub, jnp.sum(mask).astype(jnp.int32)
+
+
+def measure_lod_k_max(lod: LODScene, cameras, cfg: LODConfig, *,
+                      grid: GridConfig = GridConfig(),
+                      cap: int | None = None) -> int:
+    """Stage-1 survivor bound of the *selected* sub-scenes over the probes.
+
+    The LOD analogue of `core.renderer.measure_k_max`: for each probe
+    camera, run the selection + gather this camera would serve with and
+    measure the longest Stage-1 tile list of the resulting sub-scene.
+    Selection only removes Gaussians, so the bound is <= the full scene's —
+    usually far below it, which is where the downstream k_max (and with it
+    the blend sweep cost) adapts to the LOD stage.
+    """
+    cameras = list(cameras)
+    if not cameras:
+        raise ValueError("measure_lod_k_max needs at least one probe camera")
+    k = 1
+    for cam in cameras:
+        sel = select_clusters(lod, cam, cfg)
+        bucket = selection_bucket_for(
+            int(selected_members(lod, sel)), cfg, lod.n_padded)
+        sub, _ = gather_subscene(lod, sel, bucket)
+        k = max(k, measure_k_max(sub, [cam], grid=grid, cap=cap))
+    return k

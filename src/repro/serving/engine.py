@@ -115,6 +115,11 @@ class _SceneEntry:
     n_real: int
     n_bucket: int
     k_max: int
+    # LOD-registered scenes only (`register_scene(lod=...)`): the built
+    # cluster table + the selection config. `scene` is then the LOD build's
+    # cluster-contiguous padded member scene and `n_bucket` its padded count.
+    lod: Optional[object] = None          # repro.lod.LODScene
+    lod_cfg: Optional[object] = None      # repro.lod.LODConfig
 
 
 class RenderEngine:
@@ -237,8 +242,8 @@ class RenderEngine:
 
     def register_scene(self, name: str, scene: GaussianScene, *,
                        k_max: Optional[int] = None,
-                       probe_cameras: Optional[Sequence[Camera]] = None) \
-            -> _SceneEntry:
+                       probe_cameras: Optional[Sequence[Camera]] = None,
+                       lod=None) -> _SceneEntry:
         """Register (and bucket-pad) a scene under `name`.
 
         k_max: per-tile compacted list capacity for this scene. When None:
@@ -251,8 +256,46 @@ class RenderEngine:
         and "right-sized" (k_max = what Stage 1 actually produces);
         off-probe traffic that still overflows is handled by the engine's
         OverflowPolicy.
+
+        lod: a `repro.lod.LODConfig` to serve this scene through the
+        camera-dependent LOD stage. Requires `probe_cameras` — cluster
+        contribution mass (and the measured k_max, which then bounds the
+        *selected sub-scenes*, not the full scene) is measured over them.
+        The scene is clustered and reordered at registration
+        (`repro.lod.build_lod`); per batch the engine selects the union of
+        the cameras' clusters, gathers a pow2-bucketed compact sub-scene
+        and renders that — the selection bucket is pinned into the plan's
+        `LODConfig` and keys the jit cache like the spill pass bucket.
+        Not compatible with `incremental=True` (the coherence cache keys
+        on a fixed scene; LOD swaps the rendered scene per batch).
         """
         n_real = scene.n
+        if lod is not None:
+            from repro.lod import build_lod, measure_lod_k_max
+            if probe_cameras is None:
+                raise ValueError(
+                    "register_scene(lod=...) needs probe_cameras — cluster "
+                    "contribution mass is measured over them, not assumed")
+            if self.incremental:
+                raise ValueError(
+                    "LOD serving is not compatible with incremental=True: "
+                    "the frame-coherence cache keys on a fixed scene, but "
+                    "LOD swaps the rendered sub-scene per batch")
+            lod_scene = build_lod(scene, probe_cameras, lod,
+                                  grid=self.plan.grid)
+            if k_max is None:
+                k_max = measure_lod_k_max(lod_scene, probe_cameras, lod,
+                                          grid=self.plan.grid,
+                                          cap=lod_scene.n_padded)
+            entry = _SceneEntry(scene=lod_scene.scene, n_real=n_real,
+                                n_bucket=lod_scene.n_padded, k_max=k_max,
+                                lod=lod_scene, lod_cfg=lod)
+            self.telemetry.registry.gauge(
+                "engine_scene_lod_clusters",
+                "LOD cluster count per LOD-registered scene",
+                ("scene",)).set(lod_scene.n_clusters, scene=name)
+            self._scenes[name] = entry
+            return self._finish_register(name, entry)
         n_bucket = scene_bucket(n_real) if self.pad_scenes else n_real
         padded = pad_scene(scene, n_bucket)
         if k_max is None and probe_cameras is not None:
@@ -265,6 +308,10 @@ class RenderEngine:
         entry = _SceneEntry(scene=padded, n_real=n_real, n_bucket=n_bucket,
                             k_max=k_max if k_max is not None else n_bucket)
         self._scenes[name] = entry
+        return self._finish_register(name, entry)
+
+    def _finish_register(self, name: str, entry: _SceneEntry) -> _SceneEntry:
+        """Shared registration tail: LRU bookkeeping + registry gauges."""
         self._scenes.move_to_end(name)   # re-register refreshes LRU position
         reg = self.telemetry.registry
         if self.max_scenes is not None:
@@ -280,7 +327,7 @@ class RenderEngine:
                   "(probe-measured or given; scene bucket when defaulted)",
                   ("scene",)).set(entry.k_max, scene=name)
         reg.gauge("engine_scene_gaussians", "Registered (real) Gaussian "
-                  "count per scene", ("scene",)).set(n_real, scene=name)
+                  "count per scene", ("scene",)).set(entry.n_real, scene=name)
         return entry
 
     def scene(self, name: str) -> GaussianScene:
@@ -297,7 +344,8 @@ class RenderEngine:
 
     # -- jit cache ----------------------------------------------------------
 
-    def plan_for(self, name: str, height: int, width: int) -> RenderPlan:
+    def plan_for(self, name: str, height: int, width: int,
+                 lod_bucket: Optional[int] = None) -> RenderPlan:
         """The engine plan specialized to a scene's k_max and a resolution —
         exactly the jit-cache key component for this traffic.
 
@@ -307,6 +355,12 @@ class RenderEngine:
         chunk)), times any learned overflow boost, capped at the bucket
         that already covers every Gaussian in the scene (spilling further
         cannot be needed).
+
+        For an LOD-registered scene the plan carries the scene's
+        `LODConfig` with `selection_bucket` pinned to `lod_bucket` (the
+        batch's gather capacity) — the bucket thereby joins the jit-cache
+        key exactly like the spill pass bucket does; other scenes serve
+        with `plan.lod = None`.
         """
         entry = self._scenes[name]
         stream = self.plan.stream
@@ -327,10 +381,16 @@ class RenderEngine:
                                          max_spill_passes=passes)
         else:
             stream = dataclasses.replace(stream, k_max=entry.k_max)
+        lod_cfg = None
+        if entry.lod_cfg is not None:
+            lod_cfg = dataclasses.replace(
+                entry.lod_cfg,
+                selection_bucket=(lod_bucket if lod_bucket is not None
+                                  else entry.lod_cfg.selection_bucket))
         return dataclasses.replace(
             self.plan,
             grid=self.plan.grid.with_resolution(height, width),
-            stream=stream)
+            stream=stream, lod=lod_cfg)
 
     def config_for(self, name: str, height: int, width: int) -> RenderConfig:
         """Legacy flat view of `plan_for` (compat accessor)."""
@@ -428,13 +488,29 @@ class RenderEngine:
 
         tracer = obs_trace.current()
         retries = 0
+        scene_in, n_bucket = entry.scene, entry.n_bucket
+        lod_bucket = lod_sel = None
         t0 = time.perf_counter()   # spans retries: render_s is the wall the
         with tracer.span("engine.render_batch",
                          {"scene": name, "batch": n, "bucket": bucket,
                           "res": f"{width}x{height}"}) as batch_span:
+            if entry.lod is not None:
+                # Camera-dependent LOD: select per camera, gather the
+                # batch-union sub-scene once, render that. The gather
+                # capacity (lod_bucket) is pinned into the plan below so
+                # it keys the jit cache like the spill pass bucket.
+                with tracer.span("stage0_lod", {"scene": name}) as sp:
+                    scene_in, n_bucket, lod_sel = self._lod_gather(
+                        entry, [r.camera for r in requests])
+                    lod_bucket = n_bucket
+                    if tracer.enabled:
+                        sp.set(clusters_total=entry.lod.n_clusters,
+                               bucket=lod_bucket,
+                               gaussians_selected=lod_sel["union"])
             while True:            # batch actually cost, failed passes incl.
-                plan = self.plan_for(name, height, width)
-                fn, compiled = self._render_fn(entry.n_bucket, plan, bucket)
+                plan = self.plan_for(name, height, width,
+                                     lod_bucket=lod_bucket)
+                fn, compiled = self._render_fn(n_bucket, plan, bucket)
                 # Under an enabled tracer a cache miss nests the plan's
                 # stage spans (traced=True) below this one — that is the
                 # compile side of the compile-vs-execute split; a cache hit
@@ -445,13 +521,13 @@ class RenderEngine:
                                   "k_max": plan.stream.k_max}):
                     with dshard.use_mesh(self.mesh):
                         out, counters = jax.block_until_ready(
-                            fn(entry.scene, cams))
+                            fn(scene_in, cams))
                 dt = time.perf_counter() - t0
                 frame_overflow = np.asarray(out.overflow)[:n]
                 overflow_frames = int(frame_overflow.sum())
                 spill = plan.stream.overflow is OverflowPolicy.SPILL
                 capacity = plan.stream.k_max * plan.stream.max_spill_passes
-                if overflow_frames and spill and capacity < entry.n_bucket:
+                if overflow_frames and spill and capacity < n_bucket:
                     # Off-probe traffic exhausted the spill capacity:
                     # double the scene's pass bucket (it sticks) and
                     # re-render — SPILL frames never ship clamped.
@@ -473,6 +549,34 @@ class RenderEngine:
         if "n_gaussians" in counters:
             counters["n_gaussians"] = jax.numpy.full(
                 (n,), float(entry.n_real), jax.numpy.float32)
+        if lod_sel is not None:
+            # The batch rendered the selected union, not the full scene —
+            # charge the perf model for what was actually preprocessed, and
+            # attach the per-frame selection counters.
+            if "n_gaussians" in counters:
+                counters["n_gaussians"] = np.full(
+                    (n,), float(lod_sel["union"]), np.float32)
+            ratio = lod_sel["gaussians"] / max(entry.lod.n_real, 1)
+            counters["lod_clusters_total"] = np.full(
+                (n,), float(entry.lod.n_clusters), np.float32)
+            counters["lod_clusters_selected"] = lod_sel["clusters"]
+            counters["lod_gaussians_selected"] = lod_sel["gaussians"]
+            counters["lod_selection_ratio"] = ratio
+            counters["lod_bucket"] = np.full((n,), float(lod_bucket),
+                                             np.float32)
+            reg = self.telemetry.registry
+            reg.gauge("engine_lod_clusters_selected",
+                      "Clusters selected per LOD scene (last-batch mean)",
+                      ("scene",)).set(float(lod_sel["clusters"].mean()),
+                                      scene=name)
+            reg.gauge("engine_lod_gaussians_selected",
+                      "Gaussians selected per LOD scene (last-batch mean)",
+                      ("scene",)).set(float(lod_sel["gaussians"].mean()),
+                                      scene=name)
+            reg.gauge("engine_lod_selection_ratio",
+                      "Selected fraction of the scene's Gaussians per LOD "
+                      "scene (last-batch mean)",
+                      ("scene",)).set(float(ratio.mean()), scene=name)
 
         # Overflow accounting + policy (concrete flags now that the batch
         # has materialized — in-graph behavior is always clamping).
@@ -501,6 +605,38 @@ class RenderEngine:
             )
             for i, r in enumerate(requests)
         ]
+
+    def _lod_gather(self, entry: _SceneEntry, cameras):
+        """Select per camera, gather the union sub-scene for one batch.
+
+        Returns (sub-scene sized to the selection bucket — replicated when
+        a mesh is active, bucket, per-frame selection stats dict with
+        'clusters'/'gaussians' float arrays and the scalar 'union' member
+        count). Selection is cluster-granular (O(C) per camera), so running
+        it eagerly per frame is cheap next to the render itself.
+        """
+        from repro.lod import (gather_subscene, select_clusters,
+                               selected_members, selection_bucket_for)
+        cfg = entry.lod_cfg
+        sels = [select_clusters(entry.lod, cam, cfg) for cam in cameras]
+        union = sels[0]
+        for s in sels[1:]:
+            union = union | s
+        n_union = int(selected_members(entry.lod, union))
+        bucket = (cfg.selection_bucket if cfg.selection_bucket is not None
+                  else selection_bucket_for(n_union, cfg,
+                                            entry.lod.n_padded))
+        sub, _ = gather_subscene(entry.lod, union, bucket)
+        if self.mesh is not None:
+            sub = shd.replicate(sub, self.mesh)
+        stats = dict(
+            clusters=np.array([float(jax.numpy.sum(s)) for s in sels],
+                              np.float32),
+            gaussians=np.array(
+                [float(selected_members(entry.lod, s)) for s in sels],
+                np.float32),
+            union=n_union)
+        return sub, bucket, stats
 
     def _render_incremental_one(self, request: RenderRequest, name: str,
                                 height: int, width: int) -> FrameResult:

@@ -1,0 +1,394 @@
+"""Camera-dependent LOD subsystem (`repro.lod`) + the previously dormant
+modules it builds on.
+
+Covers: k-means determinism and full-coverage invariants, conservative
+cluster frustum culling, contribution-score / prune sanity (including the
+pass-aware overflow scoring), LOD build invariants (cluster-contiguous
+member blocks, inert pow2 padding, probe mass accounting), selection +
+gather correctness, the `render_lod_with_stats` quality/parity contract
+(select-all renders bit-identical to the plain path across {WARN, SPILL} x
+{jnp, fused}), and the serving engine's `register_scene(lod=...)` path
+(selection counters, jit-cache reuse keyed by the selection bucket,
+gauges, and the no-LOD default staying untouched).
+"""
+import dataclasses
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import (GridConfig, OverflowPolicy, RasterConfig, RenderPlan,
+                        StreamConfig, TestConfig, orbit_camera, psnr,
+                        random_scene)
+from repro.core.camera import default_camera
+from repro.core.clustering import cluster_frustum_cull, kmeans_clusters
+from repro.core.culling import TileGrid
+from repro.core.gaussians import ALPHA_MIN, project
+from repro.core.precision import MIXED
+from repro.core.pruning import contribution_scores, prune
+from repro.core.renderer import measure_k_max
+from repro.lod import (LODConfig, build_lod, gather_subscene,
+                       measure_lod_k_max, member_mask, select_clusters,
+                       selected_members, selection_bucket_for)
+
+RES = 32
+GRID = GridConfig(height=RES, width=RES)
+
+
+def lod_scene(n=900, seed=7, extent=8.0):
+    """Wide scene under a narrow camera: a real fraction of it lies outside
+    the frustum, so cluster selection has something to do."""
+    return random_scene(jax.random.PRNGKey(seed), n, extent=extent,
+                        scale_range=(-2.9, -2.2), stretch=3.0,
+                        opacity_range=(-1.0, 3.0))
+
+
+def narrow_cam(res=RES, fov=30.0):
+    return default_camera(res, res, fov_deg=fov)
+
+
+# ---------------------------------------------------------------------------
+# dormant-module coverage: kmeans / cull / scores / prune
+# ---------------------------------------------------------------------------
+
+def test_kmeans_deterministic_and_covering():
+    scene = lod_scene(600)
+    a = kmeans_clusters(scene, 32)
+    b = kmeans_clusters(scene, 32)          # default key is fixed
+    assert np.array_equal(np.asarray(a.assign), np.asarray(b.assign))
+    assert np.array_equal(np.asarray(a.centers), np.asarray(b.centers))
+    # full coverage: every Gaussian lands in a valid cluster, counts agree
+    assign = np.asarray(a.assign)
+    assert assign.min() >= 0 and assign.max() < 32
+    counts = np.bincount(assign, minlength=32)
+    assert np.array_equal(counts, np.asarray(a.counts).astype(int))
+    assert counts.sum() == 600
+    # a different key may move centers
+    c = kmeans_clusters(scene, 32, key=jax.random.PRNGKey(9))
+    assert np.asarray(c.centers).shape == (32, 3)
+
+
+def test_kmeans_radii_cover_members():
+    scene = lod_scene(500)
+    cl = kmeans_clusters(scene, 16)
+    reach = np.linalg.norm(
+        np.asarray(scene.means) - np.asarray(cl.centers)[cl.assign], axis=1)
+    sigma = 3.0 * np.exp(np.asarray(scene.log_scales).max(axis=1))
+    assert np.all(reach + sigma <= np.asarray(cl.radii)[cl.assign] + 1e-5)
+
+
+@pytest.mark.parametrize("seed", [0, 3])
+@pytest.mark.parametrize("fov", [22.0, 45.0])
+def test_cluster_cull_conservative(seed, fov):
+    """A culled cluster may never contain a per-Gaussian-visible member."""
+    scene = lod_scene(700, seed=seed)
+    cl = kmeans_clusters(scene, 48)
+    for theta in (0.0, 2.0):
+        cam = orbit_camera(theta, RES, RES, fov_deg=fov)
+        vis = np.asarray(cluster_frustum_cull(cl, cam))
+        in_frustum = np.asarray(project(scene, cam).in_frustum)
+        assert np.all(vis[np.asarray(cl.assign)] | ~in_frustum)
+        assert vis.sum() < 48               # narrow cam: something culled
+
+
+def test_contribution_scores_topk_sanity():
+    scene = lod_scene(400)
+    cam = narrow_cam()
+    scores = contribution_scores(scene, [cam], TileGrid(RES, RES), k_max=400)
+    s = np.asarray(scores)
+    assert s.shape == (400,) and np.all(s >= 0.0) and s.max() > 0.0
+    # out-of-frustum Gaussians deposit exactly nothing
+    out = ~np.asarray(project(scene, cam).in_frustum)
+    assert np.all(s[out] == 0.0)
+    pscene, kept = prune(scene, scores, keep_frac=0.25)
+    assert pscene.n == 100 and kept.shape == (100,)
+    # prune keeps exactly the top-k by score
+    assert s[np.asarray(kept)].min() >= np.sort(s)[-100:].min() - 1e-12
+    assert np.allclose(np.asarray(pscene.means),
+                       np.asarray(scene.means)[np.asarray(kept)])
+
+
+def test_contribution_scores_pass_partition():
+    """k_max overflow-awareness: one k_max=K pass scores ~= two K/2 passes
+    (the carried-transmittance pass loop sees the same absorption)."""
+    scene = lod_scene(300)
+    cam = narrow_cam()
+    grid = TileGrid(RES, RES)
+    one = contribution_scores(scene, [cam], grid, k_max=256, passes=1)
+    two = contribution_scores(scene, [cam], grid, k_max=128, passes=2)
+    assert np.allclose(np.asarray(one), np.asarray(two),
+                       rtol=1e-5, atol=1e-6)
+    # halving capacity WITHOUT passes only ever under-counts tail mass
+    half = contribution_scores(scene, [cam], grid, k_max=128, passes=1)
+    assert np.all(np.asarray(half) <= np.asarray(one) + 1e-5)
+
+
+# ---------------------------------------------------------------------------
+# build invariants
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def built():
+    scene = lod_scene(900)
+    cfg = LODConfig(num_clusters=24, probe_k_max=128, probe_passes=2,
+                    min_bucket=64)
+    probes = [narrow_cam(), orbit_camera(0.4, RES, RES, fov_deg=30.0)]
+    return scene, cfg, build_lod(scene, probes, cfg, grid=GRID)
+
+
+def test_build_contiguous_blocks(built):
+    scene, cfg, lod = built
+    mc = np.asarray(lod.member_cluster)
+    starts, counts = np.asarray(lod.starts), np.asarray(lod.counts)
+    for c in range(lod.n_clusters):
+        assert np.all(mc[starts[c]:starts[c] + counts[c]] == c)
+    assert counts.sum() == lod.n_real == scene.n
+    assert lod.n_padded == 1024 and lod.scene.n == 1024
+    # padding: outside every cluster and blend-inert
+    assert np.all(mc[lod.n_real:] == -1)
+    pad_op = np.asarray(
+        jax.nn.sigmoid(lod.scene.opacity_logits[lod.n_real:]))
+    assert np.all(pad_op < ALPHA_MIN)
+
+
+def test_build_preserves_members_and_mass(built):
+    scene, cfg, lod = built
+    # the reorder is a permutation of the original members
+    got = np.sort(np.asarray(lod.scene.means[:lod.n_real]), axis=0)
+    want = np.sort(np.asarray(scene.means), axis=0)
+    assert np.allclose(got, want)
+    mass = np.asarray(lod.mass)
+    assert mass.shape == (lod.n_clusters,) and np.all(mass >= 0.0)
+    assert mass.sum() > 0.0
+
+
+def test_build_requires_probes(built):
+    scene, cfg, _ = built
+    with pytest.raises(ValueError, match="probe camera"):
+        build_lod(scene, [], cfg, grid=GRID)
+
+
+def test_measure_lod_k_max_bounded(built):
+    scene, cfg, lod = built
+    cams = [narrow_cam()]
+    k_lod = measure_lod_k_max(lod, cams, cfg, grid=GRID)
+    k_full = measure_k_max(scene, cams, grid=GRID, cap=scene.n)
+    assert 1 <= k_lod <= max(k_full, 1)
+    with pytest.raises(ValueError, match="probe camera"):
+        measure_lod_k_max(lod, [], cfg, grid=GRID)
+
+
+# ---------------------------------------------------------------------------
+# selection + gather
+# ---------------------------------------------------------------------------
+
+def test_select_and_gather(built):
+    scene, cfg, lod = built
+    cam = narrow_cam()
+    sel = select_clusters(lod, cam, cfg)
+    assert sel.shape == (lod.n_clusters,) and sel.dtype == jnp.bool_
+    n_sel = int(selected_members(lod, sel))
+    sel_np = np.asarray(sel)
+    assert n_sel == int(np.asarray(lod.counts)[sel_np].sum())
+    assert 0 < n_sel < lod.n_real           # narrow cam: real selection
+
+    bucket = selection_bucket_for(n_sel, cfg, lod.n_padded)
+    assert bucket >= max(n_sel, cfg.min_bucket)
+    sub, count = gather_subscene(lod, sel, bucket)
+    assert sub.n == bucket and int(count) == n_sel
+    # gathered = exactly the members of selected clusters, in build order
+    mask = np.asarray(member_mask(lod, sel))
+    assert mask.sum() == n_sel and not mask[lod.n_real:].any()
+    want = np.asarray(lod.scene.means)[mask]
+    assert np.array_equal(np.asarray(sub.means[:n_sel]), want)
+    # slots past the count are blend-inert
+    tail_op = np.asarray(jax.nn.sigmoid(sub.opacity_logits[n_sel:]))
+    assert np.all(tail_op < ALPHA_MIN)
+
+
+def test_gather_bucket_validation(built):
+    _, cfg, lod = built
+    sel = jnp.ones((lod.n_clusters,), bool)
+    with pytest.raises(ValueError, match="bucket"):
+        gather_subscene(lod, sel, 0)
+    with pytest.raises(ValueError, match="bucket"):
+        gather_subscene(lod, sel, lod.n_padded * 2)
+    # a deliberately under-sized bucket drops the tail, never crashes
+    sub, count = gather_subscene(lod, sel, 64)
+    assert sub.n == 64 and int(count) == lod.n_real
+
+
+def test_selection_bucket_for():
+    cfg = LODConfig(min_bucket=256)
+    assert selection_bucket_for(1, cfg, 4096) == 256      # floored
+    assert selection_bucket_for(700, cfg, 4096) == 1024   # next pow2
+    assert selection_bucket_for(9000, cfg, 4096) == 4096  # capped
+
+
+def test_lod_config_validation():
+    with pytest.raises(ValueError, match="num_clusters"):
+        LODConfig(num_clusters=0)
+    with pytest.raises(ValueError, match="min_bucket"):
+        LODConfig(min_bucket=300)
+    with pytest.raises(ValueError, match="selection_bucket"):
+        LODConfig(selection_bucket=100)
+    with pytest.raises(ValueError, match="mass_floor"):
+        LODConfig(mass_floor=1.0)
+    # plans embed the config by value: equal configs, equal plans
+    assert RenderPlan(lod=LODConfig()) == RenderPlan(lod=LODConfig())
+    assert hash(RenderPlan(lod=LODConfig())) == \
+        hash(RenderPlan(lod=LODConfig()))
+
+
+def test_default_plan_has_no_lod_stage():
+    """The LOD stage is strictly opt-in: the default plan carries lod=None,
+    equals an explicit lod=None plan (same jit-cache key), and refuses the
+    LOD entry point instead of silently rendering something."""
+    assert RenderPlan() == RenderPlan(lod=None)
+    assert hash(RenderPlan()) == hash(RenderPlan(lod=None))
+    scene = lod_scene(100)
+    cfg = LODConfig(num_clusters=8, probe_k_max=64, probe_passes=1,
+                    min_bucket=64)
+    lod = build_lod(scene, [narrow_cam()], cfg, grid=GRID)
+    with pytest.raises(ValueError, match="lod=None"):
+        RenderPlan(grid=GRID).render_lod_with_stats(lod, narrow_cam())
+
+
+# ---------------------------------------------------------------------------
+# render parity + quality
+# ---------------------------------------------------------------------------
+
+def parity_plan(k_max, overflow, fused):
+    stream = (StreamConfig(k_max=k_max, overflow=OverflowPolicy.CLAMP)
+              if overflow == "clamp" else
+              StreamConfig(k_max=max(k_max // 4, 4),
+                           overflow=OverflowPolicy.SPILL,
+                           max_spill_passes=4))
+    return RenderPlan(grid=GRID, test=TestConfig(method="cat",
+                                                 precision=MIXED),
+                      stream=stream, raster=RasterConfig(fused=fused))
+
+
+@pytest.mark.parametrize("fused", [False, True], ids=["jnp", "fused"])
+@pytest.mark.parametrize("overflow", ["clamp", "spill"])
+def test_select_all_bit_identical(built, overflow, fused):
+    """With the footprint/mass tests disabled, selection = the conservative
+    cluster cull — every Gaussian that can touch a tile list survives, so
+    the LOD render must be BIT-identical to the plain render of the
+    original scene: culled members were in no tile list, and the depth
+    argsort produces the same survivor value sequence either way."""
+    scene, _, lod = built
+    cfg = dataclasses.replace(LODConfig(num_clusters=24, min_bucket=64),
+                              min_footprint_px=0.0, mass_floor=0.0)
+    cam = narrow_cam()
+    k = measure_k_max(scene, [cam], grid=GRID, cap=scene.n)
+    plan = parity_plan(k, overflow, fused)
+
+    sel = select_clusters(lod, cam, cfg)
+    n_sel = int(selected_members(lod, sel))
+    assert n_sel < lod.n_real               # the cull still drops clusters
+    bucket = selection_bucket_for(n_sel, cfg, lod.n_padded)
+    lplan = dataclasses.replace(
+        plan, lod=dataclasses.replace(cfg, selection_bucket=bucket))
+
+    out_ref, c_ref = jax.jit(
+        lambda s: plan.render_with_stats(s, cam))(scene)
+    out_lod, c_lod = jax.jit(
+        lambda l: lplan.render_lod_with_stats(l, cam))(lod)
+    assert np.array_equal(np.asarray(out_ref.image),
+                          np.asarray(out_lod.image))
+    assert np.array_equal(np.asarray(out_ref.alpha),
+                          np.asarray(out_lod.alpha))
+    assert np.array_equal(np.asarray(out_ref.entry_alive),
+                          np.asarray(out_lod.entry_alive))
+    for key in ("processed_per_pixel", "blended_per_pixel", "vru_pairs",
+                "spill_passes"):
+        assert float(c_ref[key]) == float(c_lod[key]), key
+    assert float(c_lod["lod_gaussians_selected"]) == n_sel
+
+
+def test_lod_render_quality_and_counters(built):
+    """Real selection (footprint + mass active): the LOD image stays within
+    the quality bound of the full render and the counters are attached."""
+    scene, cfg, lod = built
+    cam = narrow_cam()
+    k = measure_k_max(scene, [cam], grid=GRID, cap=scene.n)
+    plan = RenderPlan(grid=GRID, test=TestConfig(method="cat",
+                                                 precision=MIXED),
+                      stream=StreamConfig(k_max=k))
+    out_ref, _ = plan.render_with_stats(scene, cam)
+
+    sel = select_clusters(lod, cam, cfg)
+    bucket = selection_bucket_for(int(selected_members(lod, sel)), cfg,
+                                  lod.n_padded)
+    lplan = dataclasses.replace(
+        plan, lod=dataclasses.replace(cfg, selection_bucket=bucket))
+    out_lod, counters = lplan.render_lod_with_stats(lod, cam)
+    assert float(psnr(out_lod.image, out_ref.image)) >= 30.0
+    ratio = float(counters["lod_selection_ratio"])
+    assert 0.0 < ratio <= 1.0
+    assert float(counters["lod_bucket"]) == bucket
+    assert float(counters["lod_clusters_total"]) == lod.n_clusters
+
+
+def test_lod_render_traced_needs_pinned_bucket(built):
+    _, cfg, lod = built
+    plan = RenderPlan(grid=GRID, lod=cfg)       # selection_bucket=None
+    with pytest.raises(ValueError, match="selection_bucket"):
+        jax.jit(lambda l: plan.render_lod_with_stats(l, narrow_cam()))(lod)
+
+
+# ---------------------------------------------------------------------------
+# serving engine integration
+# ---------------------------------------------------------------------------
+
+def test_engine_lod_serving(built):
+    from repro.serving import RenderEngine, RenderRequest
+    scene, cfg, _ = built
+    probes = [narrow_cam(), orbit_camera(0.4, RES, RES, fov_deg=30.0)]
+    eng = RenderEngine(RenderPlan(grid=GRID), max_batch=4)
+    entry = eng.register_scene("city", scene, probe_cameras=probes, lod=cfg)
+    assert entry.lod is not None and entry.n_bucket == entry.lod.n_padded
+
+    reqs = [RenderRequest("city", orbit_camera(t, RES, RES, fov_deg=30.0), i)
+            for i, t in enumerate((0.0, 0.35))]
+    frames = eng.render_batch(reqs)
+    for fr in frames:
+        ratio = float(fr.counters["lod_selection_ratio"])
+        assert 0.0 < ratio < 1.0            # selection demonstrably active
+        assert float(fr.counters["lod_clusters_selected"]) <= \
+            float(fr.counters["lod_clusters_total"])
+        # the perf model is charged for the rendered union, not the scene
+        assert float(fr.counters["n_gaussians"]) <= entry.n_real
+    # same cameras -> same selection bucket -> jit-cache hit, bit-identical
+    before = eng.compile_count
+    frames2 = eng.render_batch(reqs)
+    assert eng.compile_count == before
+    assert np.array_equal(np.asarray(frames[0].image),
+                          np.asarray(frames2[0].image))
+    # per-scene gauges + telemetry counters made it out
+    text = eng.telemetry.registry.expose()
+    assert "engine_scene_lod_clusters" in text
+    assert "engine_lod_selection_ratio" in text
+    assert "render_lod_selection_ratio" in text
+    snap = eng.telemetry.snapshot()
+    assert 0.0 < snap["counters"]["lod_selection_ratio"] < 1.0
+    # a plain scene on the same engine serves with lod=None in its plan
+    eng.register_scene("plain", lod_scene(200, seed=11))
+    assert eng.plan_for("plain", RES, RES).lod is None
+    assert eng.plan_for("city", RES, RES,
+                        lod_bucket=256).lod.selection_bucket == 256
+
+
+def test_engine_lod_registration_errors(built):
+    from repro.serving import RenderEngine
+    scene, cfg, _ = built
+    eng = RenderEngine(RenderPlan(grid=GRID))
+    with pytest.raises(ValueError, match="probe_cameras"):
+        eng.register_scene("city", scene, lod=cfg)
+    inc = RenderEngine(RenderPlan(grid=GRID), incremental=True)
+    with pytest.raises(ValueError, match="incremental"):
+        inc.register_scene("city", scene, probe_cameras=[narrow_cam()],
+                           lod=cfg)

@@ -21,9 +21,12 @@ legitimately covers a subset of the committed full sweep). Trajectory
 counters — frames, tiles, full_recompactions, per-frame parity — compared
 exactly and the tile-reuse counts under --counter-tol. Tile-shard
 (latency-vs-shards) points are matched on (n, res) with parity and shard
-occupancy exact and both walls tolerant. The spill-smoke and hd1080
-sections are compared when both artifacts carry them at the same
-configuration. Exit status: 0 = no regressions, 1 = regressions
+occupancy exact and both walls tolerant. LOD (camera-dependent selection)
+points are matched on (n, res) with the selection structure — cluster
+counts, gather bucket, both k_max values — exact, the selected-member
+count and PSNR/SSIM under --counter-tol, and both walls tolerant. The
+spill-smoke and hd1080 sections are compared when both artifacts carry
+them at the same configuration. Exit status: 0 = no regressions, 1 = regressions
 (plus a readable table either way).
 """
 from __future__ import annotations
@@ -210,6 +213,38 @@ def diff_artifacts(base: dict, cand: dict, *, wall_tol: float,
                 d.wall(f"{where}/s={s}", br["wall_s"], cr["wall_s"])
     for key in sorted(set(cts) - set(bts)):
         d.note(f"tile_shard/n={key[0]}/res={key[1]}: only in candidate "
+               "(new point)")
+
+    bld = {(p["n"], p["res"]): p for p in base.get("lod", [])}
+    cld = {(p["n"], p["res"]): p for p in cand.get("lod", [])}
+    for key in sorted(bld):
+        where = f"lod/n={key[0]}/res={key[1]}"
+        if key not in cld:
+            if require_all:
+                d.counter(where, "present", True, False, tol=0.0)
+            else:
+                d.note(f"{where}: not in candidate (skipped)")
+            continue
+        b, c = bld[key], cld[key]
+        # Selection structure is deterministic (fixed-seed scene, fixed-key
+        # k-means, probe-measured mass): cluster counts, the gather bucket
+        # and both k_max values are exact. The selected-member count and
+        # the quality pair ride the shared --counter-tol (a near-tie
+        # footprint or mass threshold can flip one cluster between CPUs,
+        # shifting PSNR in the decimals); walls stay under the wall gate.
+        for metric in ("clusters_total", "clusters_selected", "lod_bucket",
+                       "k_max_full", "k_max_lod"):
+            if metric in b and metric in c:
+                d.counter(where, metric, b[metric], c[metric], tol=0.0)
+        for metric in ("gaussians_selected", "selection_ratio", "psnr_db",
+                       "ssim"):
+            if metric in b and metric in c:
+                d.counter(where, metric, b[metric], c[metric])
+        for metric in ("wall_full_s", "wall_lod_s"):
+            if metric in b and metric in c:
+                d.wall(f"{where}/{metric}", b[metric], c[metric])
+    for key in sorted(set(cld) - set(bld)):
+        d.note(f"lod/n={key[0]}/res={key[1]}: only in candidate "
                "(new point)")
 
     bs, cs = base.get("spill_smoke"), cand.get("spill_smoke")
