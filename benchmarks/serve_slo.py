@@ -1,0 +1,240 @@
+"""Deadline SLO benchmark for the continuous-batching scheduler.
+
+Replays the deterministic open-loop trace (`serving.workloads`) against a
+`serving.Scheduler` at two operating points and writes `BENCH_slo.json`:
+
+    sustained — offered load well under capacity (default 0.4x), with a
+        generous interactive deadline. The gate: **zero** INTERACTIVE
+        deadline misses. This is the regime the scheduler must make
+        boring — nothing sheds, nothing degrades, EDF just keeps the
+        queue short.
+    overload  — offered load past capacity (default 2.5x) with a tight
+        interactive deadline. The gates: the scheduler *sheds* (degrades
+        to the registered 16px fallback and/or rejects at admission,
+        total > 0), and the p99 of the interactive requests it *did*
+        admit stays within the deadline — overload hurts the traffic it
+        turns away, not the traffic it accepted.
+
+All load and deadline knobs are calibrated against the machine's own
+measured batch wall (capacity = max_batch / wall), so the boolean
+invariants hold on any runner while absolute latencies move with the
+hardware. `tools/bench_diff.py --section slo` therefore compares the
+trace structure (seed, request counts, fingerprint — deterministic) and
+the invariant booleans exactly, and the latency percentiles under the
+tolerant wall gate.
+
+    PYTHONPATH=src python benchmarks/serve_slo.py [--smoke] [--out PATH]
+
+`--smoke` is the CI profile (shorter traces, same invariants) and the
+profile the committed BENCH_slo.json is generated with, so the CI run
+diffs structurally exact against it. Exit status 1 if any invariant
+fails on this run (the same conditions bench_diff would then flag).
+"""
+from __future__ import annotations
+
+import argparse
+import gc
+import json
+import sys
+import time
+
+import numpy as np
+
+from repro.core import orbit_camera
+from repro.serving import (AdmissionRejected, RenderEngine, RenderRequest,
+                           Scheduler, open_loop_trace,
+                           register_demo_scenes, replay_open_loop,
+                           trace_fingerprint)
+
+FULL_RES = (32, 32)     # (height, width) of the offered traffic
+FB_RES = (16, 16)       # registered degrade fallback
+MAX_BATCH = 8
+SEED = 7
+
+
+def warm_and_calibrate(engine: RenderEngine, scenes: list[str]) -> dict:
+    """Compile every (resolution, batch-bucket) executable the replay can
+    dispatch (arrival chunks are 1..MAX_BATCH, padded to pow2 buckets —
+    an un-warmed bucket would bill its compile to some request's
+    latency), then measure the steady-state full-batch wall per
+    resolution. Returns {(scene, h, w): wall_s} predictor seeds."""
+    walls = {}
+    for h, w in (FULL_RES, FB_RES):
+        for scene in scenes:
+            bs = 1
+            while bs <= MAX_BATCH:
+                engine.render_batch(
+                    [RenderRequest(scene, orbit_camera(
+                        2 * np.pi * i / bs, w, h)) for i in range(bs)])
+                bs *= 2
+        reqs = [RenderRequest(scenes[0], orbit_camera(
+            2 * np.pi * i / MAX_BATCH, w, h)) for i in range(MAX_BATCH)]
+        t0 = time.perf_counter()
+        repeats = 5
+        for _ in range(repeats):
+            engine.render_batch(reqs)
+        wall = (time.perf_counter() - t0) / repeats
+        for scene in scenes:
+            walls[(scene, h, w)] = wall
+    return walls
+
+
+def pct_ms(lat_s: list[float], q: float) -> float:
+    return round(float(np.percentile(lat_s, q)) * 1e3, 3) if lat_s else 0.0
+
+
+def run_phase(engine: RenderEngine, scenes: list[str], walls: dict, *,
+              mode: str, n_requests: int, load: float,
+              deadline_s: float) -> dict:
+    """One operating point: fresh scheduler (seeded predictor so admission
+    is calibrated from request #1), deterministic trace, open-loop replay
+    at `load` x measured capacity."""
+    # headroom 0.6 (stricter than the library default): the p99-within-SLO
+    # gate must hold on noisy shared-CPU runners where mid-run walls can
+    # drift 1.4-1.5x between admission and dispatch — the reserve is the
+    # only lever that covers a slowdown the predictor hasn't seen yet.
+    sched = Scheduler(engine, max_batch=MAX_BATCH, admission_headroom=0.6)
+    sched.register_fallback(*FULL_RES, *FB_RES)
+    for key, wall in walls.items():
+        sched.predictor.seed(key, wall)
+
+    trace = open_loop_trace(
+        n_requests, seed=SEED, scenes=scenes, resolutions=(FULL_RES,),
+        interactive_deadline_s=deadline_s, n_sessions=4)
+    full_wall = walls[(scenes[0], *FULL_RES)]
+    capacity_rps = MAX_BATCH / full_wall
+    rate = load * capacity_rps
+
+    # A CPython major collection mid-replay is a 100-200 ms stall — half a
+    # deadline billed to whichever requests were queued, which is runner
+    # noise, not scheduler behavior. Collect up front, pause the collector
+    # for the timed window (allocations here are short-lived arrays; the
+    # freed-on-exit garbage is bounded by the trace length).
+    gc.collect()
+    gc.disable()
+    try:
+        t0 = time.perf_counter()
+        out = replay_open_loop(sched, trace, rate_rps=rate)
+        duration = time.perf_counter() - t0
+    finally:
+        gc.enable()
+
+    tiers: dict[str, dict] = {}
+    rejected = 0
+    for arrival, fut in out:
+        try:
+            r = fut.result()
+        except AdmissionRejected:
+            rejected += 1
+            continue
+        t = tiers.setdefault(arrival.tier,
+                             dict(lat=[], misses=0, degraded=0))
+        t["lat"].append(r.total_s)
+        t["misses"] += int(r.deadline_missed)
+        t["degraded"] += int(r.degraded)
+
+    n_admitted = sum(len(t["lat"]) for t in tiers.values())
+    degraded = sum(t["degraded"] for t in tiers.values())
+    inter = tiers.get("interactive", dict(lat=[], misses=0, degraded=0))
+    point = dict(
+        mode=mode,
+        # structure — deterministic given (seed, n), diffed exactly
+        seed=SEED, load=load, n_requests=n_requests,
+        n_interactive=sum(a.tier == "interactive" for a, _ in out),
+        n_batch=sum(a.tier == "batch" for a, _ in out),
+        trace_fingerprint=trace_fingerprint(trace),
+        # calibration + outcome — machine-relative, diffed tolerantly
+        batch_wall_ms=round(full_wall * 1e3, 3),
+        deadline_ms=round(deadline_s * 1e3, 3),
+        offered_rps=round(rate, 2),
+        attained_rps=round(n_admitted / duration, 2),
+        degraded=degraded, rejected=rejected,
+        shed_frac=round((degraded + rejected) / n_requests, 4),
+        tiers={name: dict(count=len(t["lat"]), misses=t["misses"],
+                          p50_ms=pct_ms(t["lat"], 50),
+                          p95_ms=pct_ms(t["lat"], 95),
+                          p99_ms=pct_ms(t["lat"], 99))
+               for name, t in sorted(tiers.items())},
+    )
+    # the SLO invariants the artifact gates on (booleans -> exact diff)
+    if mode == "sustained":
+        point["zero_interactive_misses"] = inter["misses"] == 0
+        point["no_shedding"] = (degraded + rejected) == 0
+    else:
+        point["sheds_under_overload"] = (degraded + rejected) > 0
+        point["admitted_interactive_p99_within_slo"] = \
+            pct_ms(inter["lat"], 99) <= deadline_s * 1e3
+    assert sched.degraded == degraded and sched.rejected == rejected
+    return point
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--gaussians", type=int, default=256)
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI / committed-artifact profile: shorter traces, "
+                         "identical invariants")
+    ap.add_argument("--out", default="BENCH_slo.json")
+    args = ap.parse_args(argv)
+
+    engine = RenderEngine(max_batch=MAX_BATCH)
+    scenes = register_demo_scenes(engine, args.gaussians)
+    print("warmup + calibration (compiles every replay executable) ...",
+          flush=True)
+    walls = warm_and_calibrate(engine, scenes)
+    full_wall = walls[(scenes[0], *FULL_RES)]
+    print(f"batch-{MAX_BATCH} wall {full_wall * 1e3:.1f} ms -> capacity "
+          f"{MAX_BATCH / full_wall:.1f} rps", flush=True)
+
+    # Deadlines are phase-specific on purpose: the sustained gate is about
+    # the *absence* of misses under headroom, so its deadline is generous
+    # (any miss there is a scheduler bug, not load); the overload gate is
+    # about the shedding machinery engaging, so its deadline is tight
+    # enough that the queue predictably outgrows it mid-trace.
+    phases = [
+        dict(mode="sustained", load=0.4,
+             n_requests=120 if args.smoke else 320,
+             deadline_s=25 * full_wall + 0.25),
+        dict(mode="overload", load=4.0,
+             n_requests=320 if args.smoke else 800,
+             deadline_s=10 * full_wall),
+    ]
+    points = [run_phase(engine, scenes, walls, **ph) for ph in phases]
+
+    artifact = dict(
+        config=dict(gaussians=args.gaussians, max_batch=MAX_BATCH,
+                    res=list(FULL_RES), fallback_res=list(FB_RES),
+                    seed=SEED, smoke=bool(args.smoke)),
+        points=points,
+    )
+    with open(args.out, "w") as f:
+        json.dump(artifact, f, indent=1)
+        f.write("\n")
+
+    failures = []
+    for p in points:
+        print(f"\n{p['mode']}: load {p['load']}x, offered "
+              f"{p['offered_rps']} rps, attained {p['attained_rps']} rps, "
+              f"deadline {p['deadline_ms']:.0f} ms")
+        for name, t in p["tiers"].items():
+            print(f"  {name:>12s}: n={t['count']:<4d} p50 {t['p50_ms']:.1f} "
+                  f"p95 {t['p95_ms']:.1f} p99 {t['p99_ms']:.1f} ms, "
+                  f"{t['misses']} missed")
+        print(f"  shed: {p['degraded']} degraded, {p['rejected']} rejected "
+              f"({100 * p['shed_frac']:.1f}%)")
+        for inv in ("zero_interactive_misses", "no_shedding",
+                    "sheds_under_overload",
+                    "admitted_interactive_p99_within_slo"):
+            if inv in p:
+                print(f"  {inv}: {p[inv]}")
+                if not p[inv]:
+                    failures.append(f"{p['mode']}/{inv}")
+    print(f"\nwrote {args.out}")
+    if failures:
+        print(f"INVARIANT FAILURES: {', '.join(failures)}")
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -2,7 +2,7 @@
 from repro.core.gaussians import (GaussianScene, Projected, project,
                                   random_scene, pad_scene)
 from repro.core.camera import (Camera, default_camera, orbit_camera,
-                               stack_cameras)
+                               resize_camera, stack_cameras)
 from repro.core.culling import TileGrid, aabb_mask, obb_mask
 from repro.core.cat import (SamplingMode, minitile_cat_mask, entry_cat_mask,
                             pr_gaussian_weight)
@@ -30,7 +30,8 @@ from repro.core.precision import (PrecisionScheme, FULL_FP32, FULL_FP16,
 
 __all__ = [
     "GaussianScene", "Projected", "project", "random_scene", "pad_scene",
-    "Camera", "default_camera", "orbit_camera", "stack_cameras",
+    "Camera", "default_camera", "orbit_camera", "resize_camera",
+    "stack_cameras",
     "TileGrid", "aabb_mask", "obb_mask",
     "SamplingMode", "minitile_cat_mask", "entry_cat_mask",
     "pr_gaussian_weight",

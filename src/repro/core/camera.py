@@ -61,6 +61,25 @@ def stack_cameras(cameras) -> Camera:
     return jax.tree.map(lambda *xs: jnp.stack(xs), *cameras)
 
 
+def resize_camera(camera: Camera, width: int, height: int) -> Camera:
+    """The same pose and field of view at a different pixel resolution.
+
+    Intrinsics scale with the pixel grid (fx/cx by width ratio, fy/cy by
+    height ratio), so the frustum — and therefore the visible Gaussian set —
+    is unchanged; only the sampling density drops. This is what the serving
+    scheduler's degrade-to-fallback path renders under overload: the same
+    view, cheaper."""
+    if (width, height) == (camera.width, camera.height):
+        return camera
+    sx = width / camera.width
+    sy = height / camera.height
+    return dataclasses.replace(
+        camera,
+        fx=camera.fx * sx, cx=camera.cx * sx,
+        fy=camera.fy * sy, cy=camera.cy * sy,
+        width=width, height=height)
+
+
 def orbit_camera(theta: float, width: int = 128, height: int = 128,
                  radius: float = 4.0, center=(0.0, 0.0, 4.0),
                  fov_deg: float = 60.0) -> Camera:

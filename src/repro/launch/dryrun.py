@@ -34,7 +34,9 @@ from repro.launch import roofline as RL
 def run_cell(cfg: ModelConfig, shape: ShapeConfig, mesh, *,
              verbose: bool = True) -> dict:
     model = Model(cfg)
-    t0 = time.time()
+    # perf_counter, not time.time(): wall clock can step under NTP, and
+    # every other timing site in the repo is monotonic already.
+    t0 = time.perf_counter()
     if shape.kind == "train":
         opt_cfg = adamw.AdamWConfig(
             moment_dtype=(jax.numpy.bfloat16
@@ -58,7 +60,7 @@ def run_cell(cfg: ModelConfig, shape: ShapeConfig, mesh, *,
     out = dict(
         arch=cfg.name, shape=shape.name, mesh=str(dict(mesh.shape)),
         devices=n_dev,
-        compile_s=round(time.time() - t0, 1),
+        compile_s=round(time.perf_counter() - t0, 1),
         flops=cost.get("flops", 0.0),
         bytes_accessed=cost.get("bytes accessed", 0.0),
         mem=dict(

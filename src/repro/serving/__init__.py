@@ -3,31 +3,41 @@
     engine     — RenderEngine: scene registry (probe-driven k_max) +
                  RenderPlan-keyed jit cache + vmapped batch rendering +
                  per-batch OverflowPolicy enforcement
-    batching   — request queue / micro-batcher with per-request futures
+    scheduler  — deadline-aware continuous batching: priority tiers +
+                 EDF dispatch, EWMA wall prediction, admission control
+                 with resolution-fallback degrade / reject
+    batching   — MicroBatcher compat shim over the scheduler
     sharding   — frame-axis device sharding glue over launch.mesh
     telemetry  — rolling latency percentiles, throughput, overflow/spill
-                 accounting, and modeled accelerator FPS from FLICKER
-                 counters
-    workloads  — shared demo scenes + the Full-HD (1920×1088 / 512k) SPILL
-                 workload and its frame-size-aware batching policy
+                 accounting, per-tier SLO counters, and modeled
+                 accelerator FPS from FLICKER counters
+    workloads  — shared demo scenes, the Full-HD (1920×1088 / 512k) SPILL
+                 workload and its frame-size-aware batching policy, and
+                 the replayable open-loop traffic generator
 """
 from repro.serving.engine import (RenderEngine, RenderRequest, FrameResult,
                                   batch_bucket, scene_bucket)
-from repro.serving.batching import MicroBatcher, RequestResult
+from repro.serving.scheduler import (Scheduler, Tier, AdmissionRejected,
+                                     RequestResult)
+from repro.serving.batching import MicroBatcher
 from repro.serving.telemetry import Telemetry
 from repro.serving.workloads import (register_demo_scenes, max_batch_for,
                                      hd1080_cameras, hd1080_engine,
-                                     register_hd1080_scene)
+                                     register_hd1080_scene,
+                                     Arrival, open_loop_trace,
+                                     trace_fingerprint, replay_open_loop)
 from repro.core.renderer import (OverflowPolicy, StreamOverflowWarning,
                                  StreamOverflowError, measure_k_max)
 
 __all__ = [
     "RenderEngine", "RenderRequest", "FrameResult",
     "batch_bucket", "scene_bucket",
+    "Scheduler", "Tier", "AdmissionRejected",
     "MicroBatcher", "RequestResult",
     "Telemetry",
     "register_demo_scenes", "max_batch_for", "hd1080_cameras",
     "hd1080_engine", "register_hd1080_scene",
+    "Arrival", "open_loop_trace", "trace_fingerprint", "replay_open_loop",
     "OverflowPolicy", "StreamOverflowWarning", "StreamOverflowError",
     "measure_k_max",
 ]

@@ -1,66 +1,50 @@
-"""Micro-batching for mixed render traffic.
+"""Micro-batching for mixed render traffic — compat shim.
 
-Requests against different scenes/resolutions arrive interleaved; the
-`MicroBatcher` queues them, groups pending requests by (scene, resolution)
-— the two keys that determine a compiled executable — chunks each group to
-`max_batch`, and drives `RenderEngine.render_batch`. Callers get a
-`concurrent.futures.Future` per request, resolved with a `RequestResult`
-carrying the frame and its queue/render latency split.
-
-The batcher is synchronous and single-threaded by design: `flush()` drains
-the queue on the caller's thread (a serving loop calls it once per tick),
-which keeps the JAX dispatch single-threaded and the tests deterministic.
+`MicroBatcher` predates the deadline-aware continuous-batching scheduler
+(`serving.scheduler.Scheduler`) and is now a thin facade over it: every
+submission is a deadline-free `Tier.BATCH` request, which reduces the
+scheduler's EDF-within-tier dispatch order to the batcher's historical
+FIFO-within-(scene, resolution) grouping, never trips admission control,
+and keeps the chunk size at exactly `max_batch` (the scheduler's
+pixel-budget bound is disabled). `flush()` drains the pending set on the
+caller's thread — bit-compatible with the old drain-everything loop, as
+`tests/test_scheduler.py` asserts — so existing callers and benchmarks
+keep working unchanged. New code that cares about deadlines, priorities,
+or overload shedding should use `Scheduler` directly.
 """
 from __future__ import annotations
 
-import dataclasses
-import time
 from concurrent.futures import Future
 from typing import Optional
 
-import numpy as np
-
 from repro.core import Camera
-from repro.serving.engine import RenderEngine, RenderRequest, FrameResult
+from repro.serving.engine import RenderEngine
+from repro.serving.scheduler import RequestResult, Scheduler, Tier
 
-
-@dataclasses.dataclass(frozen=True)
-class RequestResult:
-    """What a request's future resolves to."""
-    frame: FrameResult
-    queue_s: float            # submit -> batch dispatch
-    render_s: float           # batch wall-clock (shared across the batch)
-    total_s: float            # submit -> result ready
-
-    @property
-    def image(self):
-        return self.frame.image
-
-    @property
-    def counters(self):
-        return self.frame.counters
-
-
-@dataclasses.dataclass
-class _Pending:
-    request: RenderRequest
-    future: Future
-    t_submit: float
+__all__ = ["MicroBatcher", "RequestResult"]
 
 
 class MicroBatcher:
-    """Queue + grouper in front of a `RenderEngine`."""
+    """Queue + grouper in front of a `RenderEngine` (scheduler facade)."""
 
     def __init__(self, engine: RenderEngine,
                  max_batch: Optional[int] = None):
-        self.engine = engine
-        self.max_batch = max_batch if max_batch is not None \
-            else engine.max_batch
-        if self.max_batch > engine.max_batch:
-            raise ValueError(f"max_batch {self.max_batch} exceeds the "
-                             f"engine's {engine.max_batch}")
-        self._queue: list[_Pending] = []
-        self._next_id = 0
+        self._sched = Scheduler(engine, max_batch=max_batch,
+                                pixel_budget=None,
+                                default_tier=Tier.BATCH)
+
+    @property
+    def engine(self) -> RenderEngine:
+        return self._sched.engine
+
+    @property
+    def max_batch(self) -> int:
+        return self._sched.max_batch
+
+    @property
+    def scheduler(self) -> Scheduler:
+        """The underlying continuous-batching scheduler."""
+        return self._sched
 
     def submit(self, scene: str, camera: Camera,
                session: Optional[str] = None) -> Future:
@@ -70,60 +54,14 @@ class MicroBatcher:
         incremental mode (`RenderEngine(incremental=True)`). Sessioned and
         sessionless requests group into the same (scene, resolution) batch
         window; the engine splits them at render time."""
-        req = RenderRequest(scene=scene, camera=camera,
-                            request_id=self._next_id, session=session)
-        self._next_id += 1
-        fut: Future = Future()
-        self._queue.append(_Pending(req, fut, time.perf_counter()))
-        return fut
+        return self._sched.submit(scene, camera, session=session,
+                                  tier=Tier.BATCH, deadline_s=None)
 
     @property
     def pending(self) -> int:
-        return len(self._queue)
+        return self._sched.pending
 
     def flush(self) -> int:
         """Drain the queue: group by (scene, resolution), render each chunk,
         resolve futures. Returns the number of requests served."""
-        work, self._queue = self._queue, []
-        groups: dict[tuple, list[_Pending]] = {}
-        for p in work:                      # FIFO order within each group
-            key = (p.request.scene,
-                   p.request.camera.height, p.request.camera.width)
-            groups.setdefault(key, []).append(p)
-
-        served = 0
-        for key in groups:
-            chunkable = groups[key]
-            for i in range(0, len(chunkable), self.max_batch):
-                chunk = chunkable[i:i + self.max_batch]
-                t_dispatch = time.perf_counter()
-                try:
-                    frames = self.engine.render_batch(
-                        [p.request for p in chunk])
-                except Exception as exc:    # fail the whole chunk's futures
-                    for p in chunk:
-                        p.future.set_exception(exc)
-                    continue
-                t_done = time.perf_counter()
-                for p, frame in zip(chunk, frames):
-                    p.future.set_result(RequestResult(
-                        frame=frame,
-                        queue_s=t_dispatch - p.t_submit,
-                        render_s=frame.render_s,
-                        total_s=t_done - p.t_submit,
-                    ))
-                served += len(chunk)
-                self._publish_batch(chunk, t_dispatch, frames[0].render_s)
-        return served
-
-    def _publish_batch(self, chunk, t_dispatch: float, render_s: float):
-        """Per-batch queue-wait vs render split into the metrics registry —
-        the knob that says whether latency is paid waiting for a flush tick
-        or inside the compiled render (see docs/observability.md)."""
-        reg = self.engine.telemetry.registry
-        queue_s = float(np.mean([t_dispatch - p.t_submit for p in chunk]))
-        reg.histogram("serve_queue_wait_seconds",
-                      "Mean submit->dispatch wait per batch"
-                      ).observe(queue_s)
-        reg.histogram("serve_render_seconds",
-                      "Render wall per dispatched batch").observe(render_s)
+        return self._sched.flush()

@@ -169,6 +169,13 @@ class RenderEngine:
     max_scenes: LRU capacity of the scene registry (None = unbounded).
         Least-recently-served scenes are evicted past the bound and must be
         re-registered; `engine_scene_evictions_total` counts evictions.
+    max_sessions: LRU capacity of the incremental mode's per-session frame
+        caches. Each cache holds full survivor-stream arrays, so unbounded
+        session traffic is a memory leak: the least-recently-served
+        session past the bound is evicted (its next frame pays one full
+        recompaction, exactly like a cold cache), and caches whose scene
+        is evicted from the registry are dropped with it —
+        `engine_session_evictions_total` counts both.
     """
 
     def __init__(self,
@@ -182,7 +189,8 @@ class RenderEngine:
                  coherence=None,
                  shard_tiles: int = 1,
                  jit_cache_size: int = 64,
-                 max_scenes: Optional[int] = None):
+                 max_scenes: Optional[int] = None,
+                 max_sessions: int = 64):
         plan = RenderPlan() if base is None else as_plan(base)
         if fused is not None:
             plan = dataclasses.replace(
@@ -214,8 +222,12 @@ class RenderEngine:
                              f"got {jit_cache_size}")
         if max_scenes is not None and max_scenes < 1:
             raise ValueError(f"max_scenes must be >= 1, got {max_scenes}")
+        if max_sessions < 1:
+            raise ValueError(f"max_sessions must be >= 1, "
+                             f"got {max_sessions}")
         self.jit_cache_size = jit_cache_size
         self.max_scenes = max_scenes
+        self.max_sessions = max_sessions
         self._scenes: OrderedDict[str, _SceneEntry] = OrderedDict()
         self._cache: OrderedDict[tuple, Callable] = OrderedDict()
         self.compile_count = 0
@@ -230,8 +242,14 @@ class RenderEngine:
         self.coherence = coherence
         # Sticky per-session frame caches of the incremental mode (see
         # core.coherence.FrameCache); scene swaps / plan changes invalidate
-        # them by value inside render_incremental, not here.
-        self._frame_caches: dict[str, object] = {}
+        # them by value inside render_incremental, not here. LRU-bounded by
+        # max_sessions — each cache pins full survivor-stream arrays —
+        # with `_session_scene` tracking which registered scene each
+        # session last rendered, so registry eviction can drop the caches
+        # that would otherwise linger holding the evicted scene's streams.
+        self._frame_caches: OrderedDict[str, object] = OrderedDict()
+        self._session_scene: dict[str, str] = {}
+        self.session_evictions = 0
 
     @property
     def base_config(self) -> RenderConfig:
@@ -323,12 +341,29 @@ class RenderEngine:
                     "engine_scene_evictions_total",
                     "Scenes evicted from the registry (LRU past max_scenes)"
                 ).inc()
+                # Frame caches for the evicted scene hold its full
+                # survivor-stream arrays — drop them with the scene
+                # instead of letting them linger until session LRU.
+                for sid in [s for s, sc in self._session_scene.items()
+                            if sc == old]:
+                    self._evict_session(sid)
         reg.gauge("engine_scene_k_max", "Per-scene Stage-1 list capacity "
                   "(probe-measured or given; scene bucket when defaulted)",
                   ("scene",)).set(entry.k_max, scene=name)
         reg.gauge("engine_scene_gaussians", "Registered (real) Gaussian "
                   "count per scene", ("scene",)).set(entry.n_real, scene=name)
         return entry
+
+    def _evict_session(self, session: str):
+        """Drop one session's frame cache (LRU bound or scene eviction)."""
+        self._frame_caches.pop(session, None)
+        self._session_scene.pop(session, None)
+        self.session_evictions += 1
+        self.telemetry.registry.counter(
+            "engine_session_evictions_total",
+            "Incremental-session frame caches evicted (LRU past "
+            "max_sessions, or their scene left the registry); the "
+            "session's next frame pays one full recompaction").inc()
 
     def scene(self, name: str) -> GaussianScene:
         return self._scenes[name].scene
@@ -668,6 +703,10 @@ class RenderEngine:
                         plan, entry.scene, request.camera, cache,
                         self.coherence, enforce=False)
                 self._frame_caches[request.session] = cache
+                self._frame_caches.move_to_end(request.session)
+                self._session_scene[request.session] = name
+                while len(self._frame_caches) > self.max_sessions:
+                    self._evict_session(next(iter(self._frame_caches)))
                 overflow = bool(out.overflow)
                 spill = plan.stream.overflow is OverflowPolicy.SPILL
                 capacity = plan.stream.k_max * plan.stream.max_spill_passes

@@ -59,6 +59,14 @@ class Telemetry:
         self.total_tiles_reused = 0
         self.total_tiles_recompacted = 0
         self.total_full_recompactions = 0
+        # Request-level accounting (scheduler traffic): lifetime totals and
+        # a rolling per-tier latency window for snapshot percentiles.
+        self.total_requests = 0
+        self.total_deadline_misses = 0
+        self.total_degraded = 0
+        self.total_rejected = 0
+        self._tier_window = window
+        self._tier_lat: dict[str, collections.deque] = {}
 
     def record_batch(self, *, batch_size: int, bucket_size: int,
                      latency_s: float, counters: dict,
@@ -96,18 +104,77 @@ class Telemetry:
         self.total_batches += 1
         self.total_overflow_frames += overflow_frames
         self.total_spill_retries += spill_retries
-        # Counter means × batch_size = the batch's total (coherence frames
-        # arrive as batches of 1, so this is exact, not an estimate).
-        self.total_tiles_reused += \
-            int(round(rec.counters.get("tiles_reused", 0.0) * batch_size))
-        self.total_tiles_recompacted += int(round(
-            rec.counters.get("tiles_recompacted", 0.0) * batch_size))
-        self.total_full_recompactions += int(round(
-            rec.counters.get("full_recompactions", 0.0) * batch_size))
-        self._publish(rec, height, width)
+        # Coherence counters sum exactly over the batch's real frames; the
+        # SAME integers feed the lifetime attributes and the registry
+        # counters below, so the two views cannot drift (the registry used
+        # to be incremented by the float mean x batch_size, which rounds
+        # differently — see tests/test_serving.py).
+        coherence_exact = {
+            k: int(round(float(c[k].sum())))
+            for k in ("tiles_reused", "tiles_recompacted",
+                      "full_recompactions") if k in c
+        }
+        self.total_tiles_reused += coherence_exact.get("tiles_reused", 0)
+        self.total_tiles_recompacted += \
+            coherence_exact.get("tiles_recompacted", 0)
+        self.total_full_recompactions += \
+            coherence_exact.get("full_recompactions", 0)
+        self._publish(rec, height, width, coherence_exact)
         return rec
 
-    def _publish(self, rec: BatchRecord, height: int, width: int):
+    def record_request(self, *, tier: str, queue_s: float, total_s: float,
+                       deadline_missed: bool = False,
+                       degraded: bool = False):
+        """Record one completed request from the scheduler: per-tier
+        latency (rolling window for snapshot percentiles + registry
+        histogram) and the deadline/degrade accounting. Rejected requests
+        never complete — they go through `record_rejection` instead."""
+        self.total_requests += 1
+        lat = self._tier_lat.setdefault(
+            tier, collections.deque(maxlen=self._tier_window))
+        lat.append(total_s)
+        reg = self.registry
+        reg.counter("serve_requests_total",
+                    "Requests completed, by priority tier",
+                    ("tier",)).inc(tier=tier)
+        reg.histogram("serve_request_latency_seconds",
+                      "Submit->result latency per completed request",
+                      ("tier",)).observe(total_s, tier=tier)
+        if deadline_missed:
+            self.total_deadline_misses += 1
+            reg.counter("serve_deadline_misses_total",
+                        "Requests completed after their deadline",
+                        ("tier",)).inc(tier=tier)
+        if degraded:
+            self.total_degraded += 1
+            reg.counter("serve_degraded_total",
+                        "Requests degraded to a fallback resolution by "
+                        "admission control (shed, not dropped)").inc()
+
+    def record_rejection(self, tier: str):
+        """Record one admission rejection (predicted deadline miss, no
+        viable fallback): the request never rendered."""
+        self.total_rejected += 1
+        self.registry.counter(
+            "serve_rejected_total",
+            "Requests rejected at admission (predicted deadline miss "
+            "with no viable fallback plan)").inc()
+
+    def tier_snapshot(self) -> dict:
+        """Per-tier latency percentiles over the rolling request window."""
+        out = {}
+        for tier, lat in sorted(self._tier_lat.items()):
+            ms = np.array(lat) * 1e3
+            out[tier] = dict(
+                count=len(ms),
+                p50_ms=float(np.percentile(ms, 50)),
+                p95_ms=float(np.percentile(ms, 95)),
+                p99_ms=float(np.percentile(ms, 99)),
+            )
+        return out
+
+    def _publish(self, rec: BatchRecord, height: int, width: int,
+                 coherence_exact: Optional[dict] = None):
         """Mirror the batch into the metrics registry (lifetime view)."""
         reg, res = self.registry, f"{width}x{height}"
         reg.counter("render_batches_total", "Batches rendered",
@@ -166,9 +233,11 @@ class Telemetry:
                 ("full_recompactions", "render_full_recompactions_total",
                  "Incremental frames that fell back to a full recompaction "
                  "(cold cache, camera jump, or changed-tile fraction)")):
-            if key in rec.counters:
-                reg.counter(mname, help_).inc(
-                    rec.counters[key] * rec.batch_size)
+            if coherence_exact is not None and key in coherence_exact:
+                # Exact per-batch integer sums — the same values the
+                # lifetime total_* attributes accumulate, so the registry
+                # and snapshot views stay equal under any batch-size mix.
+                reg.counter(mname, help_).inc(coherence_exact[key])
 
     def snapshot(self) -> dict:
         """Fold the window into a stats dict (all python scalars)."""
@@ -184,6 +253,11 @@ class Telemetry:
                         total_tiles_recompacted=self.total_tiles_recompacted,
                         total_full_recompactions=(
                             self.total_full_recompactions),
+                        tiers=self.tier_snapshot(),
+                        total_requests=self.total_requests,
+                        total_deadline_misses=self.total_deadline_misses,
+                        total_degraded=self.total_degraded,
+                        total_rejected=self.total_rejected,
                         counters={})
         lat_ms = np.array([r.latency_s for r in recs]) * 1e3
         frames = sum(r.batch_size for r in recs)
@@ -218,6 +292,11 @@ class Telemetry:
             total_tiles_reused=self.total_tiles_reused,
             total_tiles_recompacted=self.total_tiles_recompacted,
             total_full_recompactions=self.total_full_recompactions,
+            tiers=self.tier_snapshot(),
+            total_requests=self.total_requests,
+            total_deadline_misses=self.total_deadline_misses,
+            total_degraded=self.total_degraded,
+            total_rejected=self.total_rejected,
             counters=agg,
         )
 
@@ -234,4 +313,9 @@ class Telemetry:
                         if s["spill_retries"] else ""))
         if s["overflow_frames"]:
             line += f" | OVERFLOW {s['overflow_frames']} frames in window"
+        if s["total_degraded"] or s["total_rejected"] \
+                or s["total_deadline_misses"]:
+            line += (f" | shed {s['total_degraded']} degraded / "
+                     f"{s['total_rejected']} rejected / "
+                     f"{s['total_deadline_misses']} deadline misses")
         return line

@@ -7,10 +7,14 @@ synthetic stand-ins for the paper's captures (screen-space sigma ~2-3 px,
 `benchmarks/scaling.py` (many small Gaussians — the production shape)."""
 from __future__ import annotations
 
+import dataclasses
+import hashlib
 import math
-from typing import Optional
+import time
+from typing import Optional, Sequence
 
 import jax
+import numpy as np
 
 from repro.core import OverflowPolicy, RenderPlan, StreamConfig, \
     orbit_camera, random_scene
@@ -89,6 +93,129 @@ def trajectory_cameras(n_frames: int, *, width: int = 128, height: int = 128,
                                  center=center, fov_deg=fov_deg))
         theta += step
     return cams
+
+
+# ---------------------------------------------------------------------------
+# Open-loop traffic for the deadline scheduler (benchmarks/serve_slo.py)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class Arrival:
+    """One request of an open-loop trace.
+
+    `t` is the arrival time at **unit rate** (mean inter-arrival 1.0);
+    `replay_open_loop` divides by the offered rate, so one trace replays
+    at any load without changing its request sequence."""
+    t: float
+    scene: str
+    width: int
+    height: int
+    tier: str                      # "interactive" | "batch"
+    deadline_s: Optional[float]    # latency budget (None = no deadline)
+    session: Optional[str]
+
+
+def open_loop_trace(n_requests: int, *, seed: int = 0,
+                    scenes: Sequence[str] = ("train", "truck"),
+                    resolutions: Sequence[tuple[int, int]] = ((32, 32),),
+                    interactive_frac: float = 0.75,
+                    interactive_deadline_s: Optional[float] = None,
+                    batch_deadline_s: Optional[float] = None,
+                    n_sessions: int = 0,
+                    theta_step: float = 2 * math.pi / 64) -> list[Arrival]:
+    """A deterministic seeded open-loop arrival process: Poisson arrivals
+    (exponential inter-arrival times at unit rate) over a mixed
+    scene x resolution x tier x session request population.
+
+    Same seed -> byte-identical trace (`np.random.default_rng` streams are
+    versioned and the requirements pin numpy), which is what lets
+    `BENCH_slo.json` commit the trace fingerprint and diff it exactly.
+    Sessioned requests (when `n_sessions` > 0) walk a smooth per-session
+    orbit so an incremental engine sees coherent streams; sessionless ones
+    get an independent random pose each.
+    """
+    rng = np.random.default_rng(seed)
+    gaps = rng.exponential(1.0, size=n_requests)
+    t = np.cumsum(gaps) - gaps[0]          # first arrival at t=0
+    session_theta = {f"s{i}": 0.0 for i in range(n_sessions)}
+    trace = []
+    for i in range(n_requests):
+        scene = scenes[int(rng.integers(len(scenes)))]
+        height, width = resolutions[int(rng.integers(len(resolutions)))]
+        interactive = bool(rng.random() < interactive_frac)
+        session = None
+        if n_sessions and interactive and rng.random() < 0.5:
+            session = f"s{int(rng.integers(n_sessions))}"
+            theta = session_theta[session]
+            session_theta[session] = theta + theta_step
+        else:
+            theta = float(rng.uniform(0.0, 2 * math.pi))
+        trace.append(Arrival(
+            t=float(t[i]), scene=scene, width=width, height=height,
+            tier="interactive" if interactive else "batch",
+            deadline_s=(interactive_deadline_s if interactive
+                        else batch_deadline_s),
+            session=session))
+    return trace
+
+
+def trace_fingerprint(trace: Sequence[Arrival]) -> str:
+    """Hex digest of the trace's categorical sequence (scene, resolution,
+    tier, session per arrival) — rate- and deadline-independent, so the
+    committed artifact can gate trace determinism exactly while latency
+    knobs stay machine-calibrated."""
+    h = hashlib.sha256()
+    for a in trace:
+        h.update(f"{a.scene}|{a.width}x{a.height}|{a.tier}|"
+                 f"{a.session}\n".encode())
+    return h.hexdigest()[:16]
+
+
+def replay_open_loop(scheduler, trace: Sequence[Arrival], *,
+                     rate_rps: float) -> list[tuple[Arrival, object]]:
+    """Replay a trace open-loop at `rate_rps` requests/sec: arrivals are
+    submitted at their scheduled wall-clock times **regardless of
+    completions** (the definition of open loop — a slow server builds a
+    queue instead of slowing the clients), with `scheduler.step()`
+    dispatching continuously between arrivals, then the pending set is
+    drained. Returns [(arrival, future)] in arrival order; rejected
+    arrivals carry a future whose exception is `AdmissionRejected`.
+
+    Cameras are constructed for the whole trace *before* the clock
+    starts: building a Camera touches jax (milliseconds per pose), and
+    doing it inline would stall dispatch for hundreds of ms during
+    arrival bursts — client-side work billed to the server's latency."""
+    from repro.serving.scheduler import Tier
+    tiers = {"interactive": Tier.INTERACTIVE, "batch": Tier.BATCH}
+    cameras = [orbit_camera(_arrival_theta(a), a.width, a.height)
+               for a in trace]
+    out = []
+    t0 = time.perf_counter()
+    for a, camera in zip(trace, cameras):
+        due = t0 + a.t / rate_rps
+        while True:
+            now = time.perf_counter()
+            if now >= due:
+                break
+            if scheduler.pending:
+                scheduler.step()       # dispatch while the clock runs
+            else:
+                time.sleep(min(due - now, 5e-4))
+        out.append((a, scheduler.submit(
+            a.scene, camera,
+            deadline_s=a.deadline_s, tier=tiers[a.tier],
+            session=a.session)))
+    scheduler.flush()
+    return out
+
+
+def _arrival_theta(a: Arrival) -> float:
+    """Deterministic pose angle for an arrival (hash of its identity) —
+    keeps replay free of hidden RNG state so two replays of one trace
+    submit identical cameras."""
+    h = hashlib.sha256(
+        f"{a.t}|{a.scene}|{a.session}".encode()).digest()
+    return int.from_bytes(h[:4], "big") / 2**32 * 2 * math.pi
 
 
 def hd1080_cameras(n: int, *, width: int = HD1080_WIDTH,

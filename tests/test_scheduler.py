@@ -1,0 +1,440 @@
+"""Deadline-aware scheduler: EDF-within-tier dispatch order, executable-key
+grouping, deadline-miss accounting, admission control (degrade parity +
+rejection), open-loop trace determinism, MicroBatcher shim compatibility —
+plus the serving-layer regression gates that rode the same PR: the
+incremental session-cache LRU bound and the telemetry coherence-counter
+exactness fix."""
+import numpy as np
+import pytest
+
+import jax
+
+from repro.core import (RenderConfig, orbit_camera, random_scene,
+                        resize_camera)
+from repro.obs.metrics import MetricsRegistry
+from repro.serving import (AdmissionRejected, MicroBatcher, RenderEngine,
+                           RenderRequest, Scheduler, Tier, open_loop_trace,
+                           register_demo_scenes, replay_open_loop,
+                           trace_fingerprint)
+from repro.serving.telemetry import Telemetry
+
+CFG = RenderConfig(height=32, width=32)
+
+
+def fresh_engine(**kw):
+    # Private telemetry/registry per engine: the counter assertions below
+    # read lifetime values, which the process-default registry would
+    # accumulate across tests.
+    kw.setdefault("telemetry", Telemetry(registry=MetricsRegistry()))
+    eng = RenderEngine(CFG, max_batch=8, **kw)
+    register_demo_scenes(eng, 0, sizes={"train": 300, "truck": 200})
+    return eng
+
+
+def orbit(i, res=32, n=8):
+    return orbit_camera(2 * np.pi * i / n, res, res)
+
+
+# ---------------------------------------------------------------------------
+# dispatch order
+# ---------------------------------------------------------------------------
+
+def test_edf_order_within_tier():
+    """Within one tier, dispatch follows the earliest absolute deadline,
+    not submission order (max_batch=1 so every dispatch is observable)."""
+    sched = Scheduler(fresh_engine(), max_batch=1)
+    fa = sched.submit("train", orbit(0), deadline_s=50.0,
+                      tier=Tier.INTERACTIVE)
+    fb = sched.submit("train", orbit(1), deadline_s=10.0,
+                      tier=Tier.INTERACTIVE)
+    fc = sched.submit("train", orbit(2), deadline_s=30.0,
+                      tier=Tier.INTERACTIVE)
+    order = []
+    for _ in range(3):
+        sched.step()
+        for name, fut in (("a", fa), ("b", fb), ("c", fc)):
+            if fut.done() and name not in order:
+                order.append(name)
+    assert order == ["b", "c", "a"]
+    assert all(not f.result().deadline_missed for f in (fa, fb, fc))
+
+
+def test_interactive_preempts_batch():
+    """A later-submitted INTERACTIVE request dispatches before an earlier
+    BATCH request — and a deadline-free submission is never `missed`."""
+    sched = Scheduler(fresh_engine(), max_batch=1)
+    fb = sched.submit("train", orbit(0))                  # BATCH default
+    fi = sched.submit("train", orbit(1), deadline_s=60.0,
+                      tier=Tier.INTERACTIVE)
+    sched.step()
+    assert fi.done() and not fb.done()
+    sched.step()
+    assert fb.done()
+    assert fi.result().tier is Tier.INTERACTIVE
+    assert fb.result().tier is Tier.BATCH
+    assert not fb.result().deadline_missed
+
+
+def test_dispatch_groups_by_executable_key():
+    """One dispatch stays homogeneous in (scene, resolution): same-key
+    pending jobs ride the urgent head's batch, other keys wait."""
+    sched = Scheduler(fresh_engine())
+    fi = sched.submit("train", orbit(0), deadline_s=60.0,
+                      tier=Tier.INTERACTIVE)
+    fb1 = sched.submit("train", orbit(1))
+    fb2 = sched.submit("train", orbit(2))
+    other = sched.submit("truck", orbit(3))
+    served = sched.step()
+    assert served == 3
+    assert fi.done() and fb1.done() and fb2.done() and not other.done()
+    assert fi.result().frame.batch_size == 3
+    sched.step()
+    assert other.done() and other.result().frame.batch_size == 1
+
+
+def test_flush_reduces_to_fifo_for_deadline_free_traffic():
+    """Deadline-free BATCH traffic drains in submission order grouped by
+    key — the MicroBatcher contract, via the scheduler."""
+    sched = Scheduler(fresh_engine())
+    futs = [sched.submit("train", orbit(0)), sched.submit("truck", orbit(1)),
+            sched.submit("train", orbit(2))]
+    assert sched.pending == 3
+    assert sched.flush() == 3
+    assert sched.pending == 0
+    sizes = [f.result().frame.batch_size for f in futs]
+    assert sizes == [2, 1, 2]        # trains grouped, truck alone
+
+
+# ---------------------------------------------------------------------------
+# deadlines and admission control
+# ---------------------------------------------------------------------------
+
+def test_deadline_miss_accounting():
+    """An admitted request that completes after its deadline is flagged and
+    counted — per-tier — in the telemetry totals and the registry."""
+    eng = fresh_engine()
+    sched = Scheduler(eng, max_batch=1)
+    # deadline 0: the admission predictor knows nothing (cold key) so the
+    # request is admitted, and any nonzero render wall misses it.
+    fut = sched.submit("train", orbit(0), deadline_s=0.0,
+                       tier=Tier.INTERACTIVE)
+    sched.flush()
+    r = fut.result()
+    assert r.deadline_missed and not r.degraded
+    t = eng.telemetry
+    assert t.total_requests == 1 and t.total_deadline_misses == 1
+    assert t.registry.get("serve_deadline_misses_total").value(
+        tier="interactive") == 1
+    assert t.registry.get("serve_requests_total").value(
+        tier="interactive") == 1
+
+
+def test_degrade_parity_with_direct_lowres_render():
+    """A degraded request is served bit-identically to submitting the
+    resized camera directly: same pose and FOV through `resize_camera`,
+    same executable path — degrade changes resolution, nothing else."""
+    eng = fresh_engine()
+    sched = Scheduler(eng)
+    sched.register_fallback(32, 32, 16, 16)
+    # inject overload: the full-res key predicts far past any deadline,
+    # the fallback key predicts instant.
+    sched.predictor.seed(("train", 32, 32), 100.0)
+    sched.predictor.seed(("train", 16, 16), 0.0)
+    cam = orbit(3)
+    fut = sched.submit("train", cam, deadline_s=5.0, tier=Tier.INTERACTIVE)
+    assert sched.degraded == 1
+    sched.flush()
+    r = fut.result()
+    assert r.degraded and not r.deadline_missed
+    assert np.asarray(r.image).shape == (16, 16, 3)
+    ref, = eng.render_batch(
+        [RenderRequest("train", resize_camera(cam, width=16, height=16))])
+    np.testing.assert_array_equal(np.asarray(r.image),
+                                  np.asarray(ref.image))
+    assert eng.telemetry.total_degraded == 1
+    assert eng.telemetry.registry.get("serve_degraded_total").value() == 1
+
+
+def test_admission_rejection_under_injected_overload():
+    """When no (transitive) fallback is predicted to meet the deadline the
+    future fails with AdmissionRejected at submit time — nothing queues,
+    and the rejection is counted."""
+    eng = fresh_engine()
+    sched = Scheduler(eng)
+    sched.register_fallback(32, 32, 16, 16)
+    sched.predictor.seed(("train", 32, 32), 100.0)
+    sched.predictor.seed(("train", 16, 16), 100.0)
+    fut = sched.submit("train", orbit(0), deadline_s=1.0,
+                       tier=Tier.INTERACTIVE)
+    assert fut.done() and sched.pending == 0
+    with pytest.raises(AdmissionRejected):
+        fut.result()
+    assert sched.rejected == 1 and sched.degraded == 0
+    assert eng.telemetry.total_rejected == 1
+    assert eng.telemetry.registry.get("serve_rejected_total").value() == 1
+    # deadline-free traffic is never rejected, whatever the predictor says
+    ok = sched.submit("train", orbit(1))
+    sched.flush()
+    assert not ok.result().degraded
+
+
+def test_predicted_wait_counts_outranking_batches():
+    """The admission predictor sums the EWMA-costed batches that would
+    dispatch ahead of the request, chunked per key — and unknown keys
+    predict zero (admit and learn)."""
+    sched = Scheduler(fresh_engine(), max_batch=2)
+    assert sched.predicted_wait_s(("train", 32, 32)) == 0.0
+    sched.predictor.seed(("train", 32, 32), 1.0)
+    for i in range(3):
+        sched.submit("train", orbit(i), deadline_s=50.0,
+                     tier=Tier.INTERACTIVE)
+    # 3 queued -> 2 chunks of <=2 ahead, plus the request's own batch
+    wait = sched.predicted_wait_s(("train", 32, 32), Tier.INTERACTIVE,
+                                  float("inf"))
+    assert wait == pytest.approx(3.0)
+    # a BATCH-tier probe is outranked by nothing it outranks... but the
+    # queued INTERACTIVE jobs still dispatch first, so they count for it
+    assert sched.predicted_wait_s(("train", 32, 32), Tier.BATCH,
+                                  float("inf")) == pytest.approx(3.0)
+
+
+def test_fallback_registration_validation():
+    sched = Scheduler(fresh_engine())
+    with pytest.raises(ValueError):
+        sched.register_fallback(32, 32, 32, 32)      # no-op edge
+    sched.register_fallback(32, 32, 16, 16)
+    sched.register_fallback(16, 16, 8, 8)            # chains are fine
+    with pytest.raises(ValueError):
+        sched.register_fallback(8, 8, 32, 32)        # would cycle
+    assert (8, 8) not in sched._fallbacks            # rolled back
+
+
+# ---------------------------------------------------------------------------
+# open-loop traffic generator
+# ---------------------------------------------------------------------------
+
+def test_open_loop_trace_deterministic():
+    kw = dict(seed=3, scenes=("train", "truck"), n_sessions=2,
+              interactive_deadline_s=1.0)
+    a = open_loop_trace(50, **kw)
+    b = open_loop_trace(50, **kw)
+    assert a == b                                    # byte-identical trace
+    assert trace_fingerprint(a) == trace_fingerprint(b)
+    assert trace_fingerprint(a) != trace_fingerprint(
+        open_loop_trace(50, **{**kw, "seed": 4}))
+    # arrivals start at 0 and are strictly increasing (unit rate)
+    ts = [ev.t for ev in a]
+    assert ts[0] == 0.0 and all(x < y for x, y in zip(ts, ts[1:]))
+    # the fingerprint is rate- and deadline-independent: only categorical
+    # fields feed it, so one committed trace gates any replay rate
+    c = open_loop_trace(50, **{**kw, "interactive_deadline_s": 99.0})
+    assert trace_fingerprint(a) == trace_fingerprint(c)
+    assert {ev.tier for ev in a} == {"interactive", "batch"}
+
+
+def test_replay_open_loop_serves_every_arrival():
+    """A fast replay resolves every future in arrival order; deadline-free
+    batch arrivals never miss."""
+    eng = fresh_engine()
+    sched = Scheduler(eng)
+    trace = open_loop_trace(12, seed=1, scenes=("train",),
+                            interactive_deadline_s=60.0, n_sessions=0)
+    out = replay_open_loop(sched, trace, rate_rps=500.0)
+    assert [a for a, _ in out] == trace
+    results = [f.result() for _, f in out]
+    assert len(results) == 12 and sched.pending == 0
+    assert not any(r.deadline_missed for r in results)
+    assert eng.telemetry.total_requests == 12
+
+
+# ---------------------------------------------------------------------------
+# MicroBatcher compat shim
+# ---------------------------------------------------------------------------
+
+def test_microbatcher_is_bit_compatible_with_direct_batches():
+    """The shim's flush produces the same grouping and bit-identical
+    frames as rendering the per-scene groups directly."""
+    eng = fresh_engine()
+    mb = MicroBatcher(eng, max_batch=8)
+    cams = [orbit(i) for i in range(5)]
+    futs = [mb.submit("train", cams[0]), mb.submit("truck", cams[1]),
+            mb.submit("train", cams[2]), mb.submit("truck", cams[3]),
+            mb.submit("train", cams[4])]
+    assert mb.pending == 5
+    assert mb.flush() == 5
+
+    direct = fresh_engine()
+    train_ref = direct.render_batch(
+        [RenderRequest("train", cams[i]) for i in (0, 2, 4)])
+    truck_ref = direct.render_batch(
+        [RenderRequest("truck", cams[i]) for i in (1, 3)])
+    refs = [train_ref[0], truck_ref[0], train_ref[1], truck_ref[1],
+            train_ref[2]]
+    for fut, ref in zip(futs, refs):
+        r = fut.result()
+        assert r.frame.batch_size == ref.batch_size
+        np.testing.assert_array_equal(np.asarray(r.image),
+                                      np.asarray(ref.image))
+        assert r.tier is Tier.BATCH
+        assert not r.degraded and not r.deadline_missed
+
+
+def test_microbatcher_max_batch_chunking_unchanged():
+    """The shim disables the pixel-budget bound: chunk == max_batch
+    exactly, as before the scheduler existed."""
+    mb = MicroBatcher(fresh_engine(), max_batch=2)
+    futs = [mb.submit("train", orbit(i)) for i in range(5)]
+    mb.flush()
+    assert [f.result().frame.batch_size for f in futs] == [2, 2, 2, 2, 1]
+    assert mb.scheduler.chunk_for(1088, 1920) == 2   # no pixel budget
+
+
+def test_scheduler_pixel_budget_caps_chunk():
+    sched = Scheduler(fresh_engine(), pixel_budget=32 * 32 * 4)
+    assert sched.chunk_for(32, 32) == 4
+    assert sched.chunk_for(16, 16) == 8              # engine max_batch cap
+    assert sched.chunk_for(1088, 1920) == 1          # over budget: 1 frame
+
+
+# ---------------------------------------------------------------------------
+# engine session-cache LRU (the serving-layer leak fix)
+# ---------------------------------------------------------------------------
+
+COHERENT_KW = dict(scale_range=(-3.3, -2.7), stretch=3.0,
+                   opacity_range=(-1.0, 3.0))
+
+
+def incremental_engine(**kw):
+    kw.setdefault("telemetry", Telemetry(registry=MetricsRegistry()))
+    eng = RenderEngine(CFG, max_batch=8, incremental=True, **kw)
+    eng.register_scene(
+        "s", random_scene(jax.random.PRNGKey(11), 300, **COHERENT_KW),
+        k_max=512)
+    return eng
+
+
+def smooth(i, res=32):
+    return orbit_camera(i * 0.001, res, res)
+
+
+def test_session_caches_bounded_by_max_sessions():
+    """A many-session trajectory can no longer grow `_frame_caches`
+    without bound: the LRU cap holds at every step and evictions are
+    mirrored to the registry counter."""
+    eng = incremental_engine(max_sessions=2)
+    for i in range(6):
+        eng.render_batch(
+            [RenderRequest("s", smooth(i), session=f"s{i}")])
+        assert len(eng._frame_caches) <= 2
+    assert set(eng._frame_caches) == {"s4", "s5"}     # LRU survivors
+    assert eng.session_evictions == 4
+    assert eng.telemetry.registry.get(
+        "engine_session_evictions_total").value() == 4
+
+
+def test_session_lru_refreshes_on_use():
+    """Serving a session again moves it to the MRU end — eviction hits the
+    *least recently served* session, not insertion order."""
+    eng = incremental_engine(max_sessions=2)
+    eng.render_batch([RenderRequest("s", smooth(0), session="a")])
+    eng.render_batch([RenderRequest("s", smooth(0), session="b")])
+    eng.render_batch([RenderRequest("s", smooth(1), session="a")])  # touch a
+    eng.render_batch([RenderRequest("s", smooth(0), session="c")])
+    assert set(eng._frame_caches) == {"a", "c"}       # b was LRU
+    assert eng.session_evictions == 1
+
+
+def test_evicted_session_pays_one_full_recompaction():
+    """An evicted session's next frame behaves exactly like a cold cache:
+    one full recompaction, then it is coherent again."""
+    eng = incremental_engine(max_sessions=1)
+    r0, = eng.render_batch([RenderRequest("s", smooth(0), session="a")])
+    assert int(r0.counters["full_recompactions"]) == 1
+    eng.render_batch([RenderRequest("s", smooth(0), session="b")])  # evicts a
+    r2, = eng.render_batch([RenderRequest("s", smooth(1), session="a")])
+    assert int(r2.counters["full_recompactions"]) == 1
+    r3, = eng.render_batch([RenderRequest("s", smooth(2), session="a")])
+    assert int(r3.counters["full_recompactions"]) == 0
+    assert int(r3.counters["tiles_reused"]) > 0
+
+
+def test_scene_eviction_drops_its_sessions():
+    """When the scene registry LRU evicts a scene, the frame caches of its
+    sessions go with it (they pin the scene's survivor-stream arrays)."""
+    eng = incremental_engine(max_scenes=2, max_sessions=8)
+    eng.register_scene(
+        "s2", random_scene(jax.random.PRNGKey(12), 200, **COHERENT_KW),
+        k_max=512)
+    eng.render_batch([RenderRequest("s", smooth(0), session="a")])
+    eng.render_batch([RenderRequest("s2", smooth(0), session="b")])
+    assert set(eng._frame_caches) == {"a", "b"}
+    # registering a third scene evicts the LRU scene ("s") and session "a"
+    eng.register_scene(
+        "s3", random_scene(jax.random.PRNGKey(13), 200, **COHERENT_KW),
+        k_max=512)
+    assert set(eng._frame_caches) == {"b"}
+    assert eng.session_evictions == 1
+    assert eng._session_scene == {"b": "s2"}
+
+
+# ---------------------------------------------------------------------------
+# telemetry coherence counters: exact integers (the drift fix)
+# ---------------------------------------------------------------------------
+
+def test_registry_coherence_counters_match_exact_totals():
+    """Across mixed batch sizes the registry counters equal the exact
+    lifetime totals equal the sum of per-frame integer counters — the old
+    float(mean) x batch_size folding drifted whenever a batch mixed cold
+    and warm sessions (fractional mean times integer batch size)."""
+    eng = incremental_engine(max_sessions=8)
+    sums = dict(tiles_reused=0, tiles_recompacted=0, full_recompactions=0)
+    # mixed batches: singletons, then a cold+warm pair (fractional means),
+    # then a warm trio
+    batches = [
+        [RenderRequest("s", smooth(0), session="a")],
+        [RenderRequest("s", smooth(0), session="b"),
+         RenderRequest("s", smooth(1), session="a")],
+        [RenderRequest("s", smooth(1), session="b"),
+         RenderRequest("s", smooth(2), session="a"),
+         RenderRequest("s", smooth(0), session="c")],
+    ]
+    for reqs in batches:
+        for r in eng.render_batch(reqs):
+            for k in sums:
+                sums[k] += int(r.counters[k])
+    # the mix really exercises the drift case: at least one batch had a
+    # fractional mean (cold full recompaction next to warm reuse)
+    assert sums["full_recompactions"] == 3 and sums["tiles_reused"] > 0
+    t = eng.telemetry
+    assert t.total_tiles_reused == sums["tiles_reused"]
+    assert t.total_tiles_recompacted == sums["tiles_recompacted"]
+    assert t.total_full_recompactions == sums["full_recompactions"]
+    reg = t.registry
+    assert reg.get("render_tiles_reused_total").value() \
+        == sums["tiles_reused"]
+    assert reg.get("render_tiles_recompacted_total").value() \
+        == sums["tiles_recompacted"]
+    assert reg.get("render_full_recompactions_total").value() \
+        == sums["full_recompactions"]
+
+
+def test_tier_snapshot_percentiles():
+    """record_request feeds per-tier rolling percentiles; rejections are
+    counted but contribute no latency sample."""
+    t = Telemetry(registry=MetricsRegistry())
+    for ms in (10, 20, 30, 40):
+        t.record_request(tier="interactive", queue_s=0.001,
+                         total_s=ms / 1e3)
+    t.record_request(tier="batch", queue_s=0.0, total_s=0.5,
+                     deadline_missed=True)
+    t.record_rejection("interactive")
+    snap = t.tier_snapshot()
+    assert snap["interactive"]["count"] == 4
+    assert snap["interactive"]["p50_ms"] == pytest.approx(25.0, abs=5.0)
+    assert snap["batch"]["count"] == 1
+    assert t.total_requests == 5
+    assert t.total_deadline_misses == 1
+    assert t.total_rejected == 1
+    full = t.snapshot()
+    assert full["total_rejected"] == 1
+    assert full["tiers"]["interactive"]["count"] == 4

@@ -70,6 +70,8 @@ class Diff:
         tol = self.counter_tol if tol is None else tol
         if isinstance(base, bool) or isinstance(cand, bool):
             ok = bool(base) == bool(cand)
+        elif isinstance(base, str) or isinstance(cand, str):
+            ok = base == cand           # fingerprints, mode labels
         else:
             ok = abs(float(cand) - float(base)) <= \
                 tol * max(abs(float(base)), 1.0)
@@ -95,7 +97,10 @@ class Diff:
 
 
 def index_points(artifact: dict) -> dict[tuple, dict]:
-    return {(p["n"], p["res"]): p for p in artifact.get("points", [])}
+    # BENCH_slo.json's points share the top-level key but are keyed by
+    # mode (handled by the slo section), not (n, res) — skip them here.
+    return {(p["n"], p["res"]): p for p in artifact.get("points", [])
+            if "n" in p and "res" in p}
 
 
 def diff_point(d: Diff, where: str, base: dict, cand: dict):
@@ -246,6 +251,55 @@ def diff_artifacts(base: dict, cand: dict, *, wall_tol: float,
     for key in sorted(set(cld) - set(bld)):
         d.note(f"lod/n={key[0]}/res={key[1]}: only in candidate "
                "(new point)")
+
+    # SLO points (BENCH_slo.json) are matched on mode. The trace is a
+    # deterministic function of (seed, n_requests), so its structure —
+    # request counts per tier, fingerprint — and the SLO invariant
+    # booleans (zero sustained misses, sheds under overload, admitted-p99
+    # within deadline) are exact; everything clocked (percentiles,
+    # deadline, rps) is calibrated to the runner and rides the wall gate,
+    # and the shed split (degrade vs reject) is timing-dependent, so only
+    # its boolean is gated. When the two artifacts replayed different
+    # trace lengths (smoke vs full profile), only the invariants compare.
+    bslo = {p["mode"]: p for p in base.get("slo", {}).get("points", [])} \
+        if "slo" in base else {p["mode"]: p for p in base.get("points", [])
+                               if "trace_fingerprint" in p}
+    cslo = {p["mode"]: p for p in cand.get("slo", {}).get("points", [])} \
+        if "slo" in cand else {p["mode"]: p for p in cand.get("points", [])
+                               if "trace_fingerprint" in p}
+    for mode in sorted(bslo):
+        where = f"slo/{mode}"
+        if mode not in cslo:
+            if require_all:
+                d.counter(where, "present", True, False, tol=0.0)
+            else:
+                d.note(f"{where}: not in candidate (skipped)")
+            continue
+        b, c = bslo[mode], cslo[mode]
+        d.counter(where, "seed", b.get("seed"), c.get("seed"), tol=0.0)
+        d.counter(where, "load", b.get("load"), c.get("load"), tol=0.0)
+        for inv in ("zero_interactive_misses", "no_shedding",
+                    "sheds_under_overload",
+                    "admitted_interactive_p99_within_slo"):
+            if inv in b and inv in c:
+                d.counter(where, inv, b[inv], c[inv], tol=0.0)
+        if b.get("n_requests") != c.get("n_requests"):
+            d.note(f"{where}: different trace lengths "
+                   f"({b.get('n_requests')} vs {c.get('n_requests')}) — "
+                   "structure and latency comparisons skipped")
+            continue
+        for metric in ("n_requests", "n_interactive", "n_batch",
+                       "trace_fingerprint"):
+            if metric in b and metric in c:
+                d.counter(where, metric, b[metric], c[metric], tol=0.0)
+        for tier in sorted(set(b.get("tiers", {})) & set(c.get("tiers", {}))):
+            bt, ct = b["tiers"][tier], c["tiers"][tier]
+            for metric in ("p50_ms", "p95_ms", "p99_ms"):
+                if metric in bt and metric in ct:
+                    d.wall(f"{where}/{tier}/{metric}",
+                           bt[metric] / 1e3, ct[metric] / 1e3)
+    for mode in sorted(set(cslo) - set(bslo)):
+        d.note(f"slo/{mode}: only in candidate (new point)")
 
     bs, cs = base.get("spill_smoke"), cand.get("spill_smoke")
     if bs and cs:
